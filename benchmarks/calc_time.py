@@ -1,0 +1,74 @@
+"""Paper Fig. 5: distribution-stage calculation time vs node count.
+
+ASURA O(1), Consistent Hashing O(log NV) (VN in {1, 100, 10000}), Straw
+Buckets O(N).  The paper times 1e6 scalar calls on a Core2Quad; we report
+both the scalar per-call latency (paper-comparable) and the vectorized
+per-id throughput (the TPU-relevant metric), at reduced loop counts sized
+for this container.  Also reproduces the huge-N scalability check
+(section IV.B: "0.73 us at 1e8 nodes" -- we run 1e6 nodes and show the time
+is flat in N).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ConsistentHashRing, StrawBucket, make_uniform_cluster
+from repro.core.asura import place_batch, place_scalar
+
+NODE_COUNTS = (1, 10, 100, 400, 800, 1200)
+BATCH = 200_000
+SCALAR_CALLS = 2_000
+
+
+def _time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def bench_asura(n_nodes: int, batch: int = BATCH):
+    cluster = make_uniform_cluster(n_nodes)
+    lengths = cluster.seg_lengths()
+    ids = np.arange(batch, dtype=np.uint32)
+    place_batch(ids[:1000], lengths)  # warm
+    dt = _time(place_batch, ids, lengths)
+    t0 = time.perf_counter()
+    for i in range(SCALAR_CALLS):
+        place_scalar(i, lengths)
+    scalar_us = (time.perf_counter() - t0) / SCALAR_CALLS * 1e6
+    return dt / batch * 1e6, scalar_us
+
+
+def bench_ch(n_nodes: int, virtual_nodes: int, batch: int = BATCH):
+    ring = ConsistentHashRing(range(n_nodes), virtual_nodes=virtual_nodes)
+    ids = np.arange(batch, dtype=np.uint32)
+    ring.place(ids[:1000])
+    dt = _time(ring.place, ids)
+    return dt / batch * 1e6
+
+
+def bench_straw(n_nodes: int, batch: int = 20_000):
+    straw = StrawBucket(range(n_nodes))
+    ids = np.arange(batch, dtype=np.uint32)
+    straw.place(ids[:100])
+    dt = _time(straw.place, ids)
+    return dt / batch * 1e6
+
+
+def run(csv_print) -> None:
+    for n in NODE_COUNTS:
+        vec_us, scalar_us = bench_asura(n)
+        csv_print(f"fig5_asura_vec_n{n}", vec_us, "us_per_id")
+        csv_print(f"fig5_asura_scalar_n{n}", scalar_us, "us_per_call")
+        for vn in (1, 100, 10_000):
+            if n * vn > 20_000_000:
+                continue
+            csv_print(f"fig5_ch_vn{vn}_n{n}", bench_ch(n, vn), "us_per_id")
+        csv_print(f"fig5_straw_n{n}", bench_straw(n), "us_per_id")
+    # huge-N scalability (paper section IV.B)
+    for n in (10_000, 1_000_000):
+        vec_us, _ = bench_asura(n, batch=50_000)
+        csv_print(f"fig5_asura_huge_n{n}", vec_us, "us_per_id")

@@ -1,0 +1,49 @@
+"""Paper section 2.A: optimal data movement on node addition/removal.
+
+Measures the moved fraction for ASURA / CH / Straw against the theoretical
+optimum (cap_new / cap_total on addition; cap_victim / cap_total on
+removal), and verifies the direction constraint (moves only to the new node
+/ only off the removed node)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ConsistentHashRing, StrawBucket, make_uniform_cluster
+
+N_NODES = 50
+N_DATA = 200_000
+
+
+def run(csv_print) -> None:
+    ids = np.arange(N_DATA, dtype=np.uint32)
+    # ASURA
+    cluster = make_uniform_cluster(N_NODES)
+    before = cluster.place_nodes(ids)
+    cluster.add_node(N_NODES, 1.0)
+    after = cluster.place_nodes(ids)
+    moved = before != after
+    csv_print("move_add_asura_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
+    csv_print("move_add_asura_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")
+    before = after
+    cluster.remove_node(7)
+    after = cluster.place_nodes(ids)
+    moved = before != after
+    csv_print("move_rm_asura_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
+    csv_print("move_rm_asura_wrong_src", int((before[moved] != 7).sum()), "must_be_0")
+    # Consistent Hashing
+    ring = ConsistentHashRing(range(N_NODES), virtual_nodes=100)
+    before = ring.place(ids)
+    ring2 = ConsistentHashRing(range(N_NODES + 1), virtual_nodes=100)
+    after = ring2.place(ids)
+    moved = before != after
+    csv_print("move_add_ch_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
+    csv_print("move_add_ch_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")
+    # Straw
+    straw = StrawBucket(range(N_NODES))
+    before = straw.place(ids)
+    straw2 = StrawBucket(range(N_NODES + 1))
+    after = straw2.place(ids)
+    moved = before != after
+    csv_print("move_add_straw_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
+    csv_print("move_add_straw_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")

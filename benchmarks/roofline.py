@@ -1,0 +1,110 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md section Roofline).
+
+Reads the JSON emitted by ``repro.launch.dryrun --all --out`` and derives,
+per (arch x shape) cell on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs.  Hardware constants: TPU v5e -- 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (per the assignment).
+
+NOTE cost_analysis() on the CPU backend reports the per-program totals for
+the SPMD-expanded module; we normalize to per-chip by dividing by n_devices
+when the dry-run indicates program-level totals (flag ``per_program``).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def roofline_row(cell: dict[str, Any]) -> dict[str, Any]:
+    n_dev = cell["n_devices"]
+    # hlo_cost.py figures are per-device (the SPMD module is one device's
+    # program); collective bytes likewise per device
+    flops_per_chip = cell["flops"]
+    bytes_per_chip = cell["hlo_bytes"]
+    coll_per_chip = cell.get(
+        "collective_bytes_per_device", cell["collectives"]["total_bytes"] / n_dev
+    )
+    t_compute = flops_per_chip / PEAK_FLOPS
+    t_memory = bytes_per_chip / HBM_BW
+    t_coll = coll_per_chip / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    tokens = TOKENS.get(cell["shape"], 1)
+    n_active = cell.get("active_param_count", cell["param_count"])
+    mult = 6 if cell["shape"] == "train_4k" else 2
+    model_flops = mult * n_active * tokens  # global
+    ratio = model_flops / max(cell["flops"] * n_dev, 1.0)
+    bound = max(t_compute, t_memory, t_coll)
+    ideal = model_flops / (n_dev * PEAK_FLOPS)
+    return {
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": cell["flops"],
+        "useful_ratio": ratio,
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+        "peak_gb_per_dev": cell["peak_bytes_per_device"] / n_dev / 2**30,
+        "hbm_ok": cell["peak_bytes_per_device"] / n_dev <= 16 * 2**30,
+    }
+
+
+def load_table(path: str) -> list[dict[str, Any]]:
+    with open(path) as f:
+        cells = json.load(f)
+    return [roofline_row(c) for c in cells if c.get("status") == "ok"]
+
+
+def format_table(rows: list[dict[str, Any]]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute_s':>11s} {'memory_s':>11s} "
+        f"{'collect_s':>11s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s} {'GB/dev':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:11.3e} "
+            f"{r['t_memory_s']:11.3e} {r['t_collective_s']:11.3e} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:7.2f} {r['peak_gb_per_dev']:7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def run(csv_print, path: str = "dryrun_single_pod.json") -> None:
+    import os
+
+    if not os.path.exists(path):
+        csv_print("roofline_skipped", 0, f"no {path}; run dryrun --all --out first")
+        return
+    rows = load_table(path)
+    for r in rows:
+        csv_print(
+            f"roofline_{r['arch']}_{r['shape']}_{r['dominant']}",
+            r["roofline_fraction"],
+            f"useful={r['useful_ratio']:.3f}",
+        )
+    print(format_table(rows))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,table2,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import actual_usage, calc_time, capacity, memory, movement, roofline, uniformity
+
+SUITES = {
+    "fig5_calc_time": calc_time,
+    "table2_memory": memory,
+    "fig67_uniformity": uniformity,
+    "movement": movement,
+    "table3_actual_usage": actual_usage,
+    "capacity": capacity,
+    "roofline": roofline,
+}
+
+
+def csv_print(name: str, value, derived="") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite substrings")
+    args = ap.parse_args(argv)
+    picks = args.only.split(",") if args.only else None
+    for name, mod in SUITES.items():
+        if picks and not any(p in name for p in picks):
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.run(csv_print)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},ERROR,{e}", file=sys.stderr)
+            return 1
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

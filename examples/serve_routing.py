@@ -1,0 +1,49 @@
+"""Serving scenario: ASURA request routing across elastic replicas.
+
+Routes a stream of session ids to serving replicas with ASURA; kills a
+replica and shows that only its sessions re-route (sticky sessions keep
+their KV caches everywhere else); then runs real batched decode for this
+replica's share via repro.launch.serve.
+
+Run:  PYTHONPATH=src python examples/serve_routing.py
+"""
+
+import numpy as np
+
+from repro.core import make_uniform_cluster
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    routing = make_uniform_cluster(6)
+    sessions = np.arange(10_000, dtype=np.uint32)
+    before = routing.place_nodes(sessions)
+    print("sessions per replica:", np.bincount(before, minlength=6))
+
+    routing.remove_node(3)  # replica 3 dies
+    after = routing.place_nodes(sessions)
+    moved = before != after
+    print(
+        f"replica 3 died: {moved.sum()} sessions re-routed "
+        f"({(before == 3).sum()} lived there; equal: {moved.sum() == (before==3).sum()})"
+    )
+    assert (before[moved] == 3).all()
+
+    routing.add_node(6, 1.0)  # warm standby joins
+    after2 = routing.place_nodes(sessions)
+    moved2 = after != after2
+    print(f"standby joined: {moved2.sum()} sessions moved, all to the standby:"
+          f" {bool((after2[moved2] == 6).all())}")
+
+    print("\n-- decoding this replica's share with the real model --")
+    serve_main(
+        [
+            "--arch", "smollm-135m", "--reduced",
+            "--replicas", "6", "--replica-id", "0",
+            "--requests", "32", "--batch", "8", "--decode-len", "4",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end driver: train a reduced smollm-135m for a few hundred steps.
+
+Uses the real launcher (repro.launch.train): ASURA-placed data shards,
+AdamW, async ASURA-replicated checkpoints.  On CPU this runs a ~1M-param
+reduction; on a TPU fleet drop --reduced for the full config.
+
+Run:  PYTHONPATH=src python examples/train_smollm.py [--steps 200]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.exit(
+        train_main(
+            [
+                "--arch", "smollm-135m",
+                "--reduced",
+                "--steps", str(args.steps),
+                "--batch", "8",
+                "--seq", "128",
+                "--ckpt-every", "50",
+            ]
+        )
+    )

@@ -1,0 +1,3 @@
+from .sharded import AsuraCheckpointStore, CheckpointManager
+
+__all__ = ["AsuraCheckpointStore", "CheckpointManager"]

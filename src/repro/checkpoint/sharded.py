@@ -1,0 +1,240 @@
+"""ASURA-placed, replicated, async checkpointing.
+
+Checkpoint model: the train state is flattened to leaves; each leaf is split
+into fixed-size chunks; each chunk gets a stable datum id
+hash(step, leaf_index, chunk_index).  ASURA places every chunk on R distinct
+storage nodes (paper section 5.A replication) -- so
+
+  * there is NO manifest mapping chunks to nodes: any reader recomputes the
+    placement from the O(N) segment table (algorithm management),
+  * the system tolerates up to R-1 storage-node losses for every chunk,
+  * when a storage node dies, exactly the chunks it held are re-replicated
+    (optimal data movement, paper section 2.A), chosen via REMOVE NUMBERS
+    without recomputing every chunk's placement (section 2.D),
+  * adding storage capacity rebalances minimally (ADDITION NUMBER path).
+
+``StorageNode`` is an in-memory stand-in for a storage daemon; the I/O layer
+is deliberately pluggable (the placement logic is the paper's contribution).
+Async saves run on a thread and are awaited by ``wait()`` -- checkpoint
+writes overlap the next training step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import Cluster
+from repro.core.asura import remove_numbers
+from repro.core.rng import fmix32_scalar
+
+CHUNK_BYTES = 1 << 20  # 1 MiB chunks, the paper's example datum unit
+
+
+def chunk_id(step: int, leaf_idx: int, chunk_idx: int) -> int:
+    return fmix32_scalar(
+        fmix32_scalar(step * 0x9E3779B9 + leaf_idx) ^ (chunk_idx * 0x85EBCA77)
+    )
+
+
+@dataclasses.dataclass
+class StorageNode:
+    node_id: int
+    capacity: float
+    blobs: dict[int, bytes] = dataclasses.field(default_factory=dict)
+    alive: bool = True
+
+    def put(self, key: int, blob: bytes) -> None:
+        if not self.alive:
+            raise IOError(f"node {self.node_id} is down")
+        self.blobs[key] = blob
+
+    def get(self, key: int) -> bytes:
+        if not self.alive:
+            raise IOError(f"node {self.node_id} is down")
+        return self.blobs[key]
+
+    def used_bytes(self) -> int:
+        return sum(len(b) for b in self.blobs.values())
+
+
+class AsuraCheckpointStore:
+    """A cluster of storage nodes addressed purely by the ASURA table."""
+
+    def __init__(self, capacities: dict[int, float], n_replicas: int = 3):
+        self.cluster = Cluster()
+        self.nodes: dict[int, StorageNode] = {}
+        for nid, cap in capacities.items():
+            self.cluster.add_node(nid, cap)
+            self.nodes[nid] = StorageNode(nid, cap)
+        self.n_replicas = n_replicas
+
+    # -- placement ---------------------------------------------------------
+
+    def replicas_for(self, keys: np.ndarray) -> np.ndarray:
+        return self.cluster.place_replicas(
+            np.asarray(keys, dtype=np.uint32), self.n_replicas
+        )
+
+    # -- chunk I/O ----------------------------------------------------------
+
+    def put_chunks(self, keys: np.ndarray, blobs: list[bytes]) -> None:
+        placements = self.replicas_for(keys)
+        for key, blob, nodes in zip(keys, blobs, placements):
+            for nid in nodes:
+                self.nodes[int(nid)].put(int(key), blob)
+
+    def get_chunk(self, key: int) -> bytes:
+        nodes = self.replicas_for(np.array([key], dtype=np.uint32))[0]
+        errors = []
+        for nid in nodes:  # primary first, replicas on failure
+            node = self.nodes[int(nid)]
+            if not node.alive:
+                errors.append(f"node {nid} down")
+                continue
+            try:
+                return node.get(int(key))
+            except KeyError:
+                errors.append(f"node {nid} missing chunk")
+        raise IOError(f"chunk {key} unreadable: {errors}")
+
+    # -- elasticity / failure ----------------------------------------------
+
+    def fail_node(self, node_id: int) -> None:
+        self.nodes[node_id].alive = False
+
+    def remove_node_and_repair(self, node_id: int) -> int:
+        """Remove a node; re-replicate exactly the chunks it held.
+
+        Uses REMOVE NUMBERS (paper section 2.D): a chunk needs repair iff one
+        of its remove numbers is a segment of the removed node.  Returns the
+        number of chunk copies moved (provably minimal)."""
+        victim_segments = set(self.cluster.nodes[node_id].segments)
+        lengths = self.cluster.seg_lengths()
+        node_of = self.cluster.seg_to_node()
+        # collect every stored key (any surviving replica knows its blobs)
+        all_keys: dict[int, bytes] = {}
+        for node in self.nodes.values():
+            if node.node_id != node_id and node.alive:
+                all_keys.update(node.blobs)
+        affected = [
+            key
+            for key in all_keys
+            if victim_segments
+            & set(remove_numbers(key, lengths, node_of, self.n_replicas))
+        ]
+        self.cluster.remove_node(node_id)
+        dead = self.nodes.pop(node_id)
+        dead.alive = False
+        moved = 0
+        for key in affected:
+            placements = self.replicas_for(np.array([key], dtype=np.uint32))[0]
+            blob = all_keys[key]
+            for nid in placements:
+                node = self.nodes[int(nid)]
+                # other down-but-not-yet-removed nodes get their copies when
+                # their own removal/repair runs
+                if node.alive and int(key) not in node.blobs:
+                    node.put(int(key), blob)
+                    moved += 1
+        return moved
+
+    def add_node(self, node_id: int, capacity: float) -> int:
+        """Add storage; migrate exactly the chunks the new node wins."""
+        all_keys: dict[int, bytes] = {}
+        for node in self.nodes.values():
+            all_keys.update(node.blobs)
+        keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
+        before = self.replicas_for(keys) if keys.size else np.empty((0, self.n_replicas))
+        self.cluster.add_node(node_id, capacity)
+        self.nodes[node_id] = StorageNode(node_id, capacity)
+        moved = 0
+        if keys.size:
+            after = self.replicas_for(keys)
+            changed = ~(before == after).all(axis=1)
+            for key, b_row, a_row in zip(keys, before, after):
+                if set(b_row.tolist()) == set(a_row.tolist()):
+                    continue
+                blob = all_keys[int(key)]
+                a_set = set(int(x) for x in a_row)
+                for nid in a_set:
+                    node = self.nodes[nid]
+                    if node.alive and int(key) not in node.blobs:
+                        node.put(int(key), blob)
+                        moved += 1
+                # GC copies superseded by the new placement (reclaim capacity)
+                for nid in set(int(x) for x in b_row) - a_set:
+                    self.nodes[nid].blobs.pop(int(key), None)
+        return moved
+
+
+class CheckpointManager:
+    """Save/restore jax pytrees against an AsuraCheckpointStore."""
+
+    def __init__(self, store: AsuraCheckpointStore):
+        self.store = store
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: list[int] = []
+
+    # -- save ----------------------------------------------------------------
+
+    def _chunks_of(self, step: int, tree: Any):
+        leaves = jax.tree.leaves(tree)
+        for li, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()
+            n = max(1, -(-len(raw) // CHUNK_BYTES))
+            for ci in range(n):
+                blob = raw[ci * CHUNK_BYTES : (ci + 1) * CHUNK_BYTES]
+                yield chunk_id(step, li, ci), blob
+
+    def save(self, step: int, tree: Any) -> None:
+        keys, blobs = [], []
+        for key, blob in self._chunks_of(step, tree):
+            keys.append(key)
+            blobs.append(blob)
+        self.store.put_chunks(np.asarray(keys, dtype=np.uint32), blobs)
+        self.saved_steps.append(step)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot to host, then write on a thread (overlaps training)."""
+        self.wait()
+        snapshot = jax.tree.map(np.asarray, tree)
+
+        def work():
+            try:
+                self.save(step, snapshot)
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore --------------------------------------------------------------
+
+    def restore(self, step: int, like: Any) -> Any:
+        """Rebuild a pytree shaped like ``like`` from the store."""
+        leaves, treedef = jax.tree.flatten(like)
+        out = []
+        for li, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()
+            n = max(1, -(-len(raw) // CHUNK_BYTES))
+            parts = [self.store.get_chunk(chunk_id(step, li, ci)) for ci in range(n)]
+            buf = b"".join(parts)
+            out.append(np.frombuffer(buf, dtype=arr.dtype).reshape(arr.shape))
+        return treedef.unflatten(out)

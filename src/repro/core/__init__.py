@@ -1,0 +1,38 @@
+"""Core ASURA algorithm (the paper's contribution) and comparison baselines."""
+
+from .asura import (
+    DEFAULT_PARAMS,
+    AsuraParams,
+    addition_number,
+    place_batch,
+    place_nodes_batch,
+    place_replicas_batch,
+    place_replicas_scalar,
+    place_scalar,
+    placement_trace,
+    remove_numbers,
+)
+from .cluster import Cluster, NodeInfo, make_cluster, make_uniform_cluster
+from .hierarchy import HierarchicalCluster
+from .consistent_hashing import ConsistentHashRing
+from .straw import StrawBucket
+
+__all__ = [
+    "AsuraParams",
+    "DEFAULT_PARAMS",
+    "Cluster",
+    "NodeInfo",
+    "ConsistentHashRing",
+    "HierarchicalCluster",
+    "StrawBucket",
+    "addition_number",
+    "make_cluster",
+    "make_uniform_cluster",
+    "place_batch",
+    "place_nodes_batch",
+    "place_replicas_batch",
+    "place_replicas_scalar",
+    "place_scalar",
+    "placement_trace",
+    "remove_numbers",
+]

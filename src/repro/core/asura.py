@@ -1,0 +1,411 @@
+"""ASURA placement algorithm (Ishikawa 2013), faithful reproduction.
+
+Implements the paper's STEP 2 (data-storing node determination) on top of a
+segment table built by STEP 1 (``cluster.py``):
+
+  * ``AsuraParams``        -- the doubling generator-family ladder of
+                              section 2.C (alpha = 2, S = 2**s_log2).
+  * ``place_scalar``       -- exact per-datum oracle with true per-level draw
+                              counters and an unbounded retry loop (the
+                              paper's while(1)).
+  * ``place_batch``        -- vectorized NumPy placement for benchmark-scale
+                              id batches (bounded masked loop; bit-identical
+                              to the oracle; tested lane-by-lane).
+  * ``place_replicas_*``   -- replication: first R draws hitting *distinct
+                              nodes* (section 5.A).
+  * ``addition_number``,
+    ``remove_numbers``     -- the section 2.D metadata accelerating node
+                              addition / removal change detection.
+
+Exact integer formulation (the TPU adaptation, DESIGN.md section 3):
+restricting to the paper's own evaluation choice alpha = 2 with S a power of
+two makes every test a pure uint32 operation on the raw draw ``h``:
+
+    value   = h * 2**(s+l-32)            on [0, 2**(s+l))
+    descend = value < 2**(s+l-1)    <=>  h < 2**31         (MSB clear)
+    k       = floor(value)           =   h >> (32 - s - l)
+    frac32  = (value - k) * 2**32    =   (h << (s + l)) mod 2**32
+    hit     = frac32 < len32[k]          (len32 = round(length * 2**32))
+
+No float round-off can reorder a boundary, so the scalar oracle, the NumPy
+batch path, the jnp reference and the Pallas kernel agree bit-for-bit.
+
+The ASURA random number sequence (section 2.C): generators at level l emit
+uniform values on [0, S * 2**l).  ``next`` starts at the narrowest level L
+covering all segments and descends while the value falls inside the
+next-narrower range, consuming one counter tick per consulted level.  The
+subsequence of emitted values below S * 2**l is, by construction, exactly
+the sequence the level-l configuration would emit -- the range-extension
+invariance the paper proves in section 2.B (property-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .rng import draw_u32_np, draw_u32_scalar
+
+U32 = np.uint32
+_2_32 = 2.0**32
+
+
+def lengths_to_u32(seg_lengths: Sequence[float]) -> np.ndarray:
+    """Canonical integer segment lengths: round(length * 2**32), < 2**32."""
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    if np.any(lengths < 0) or np.any(lengths >= 1.0):
+        raise ValueError("segment lengths must lie in [0, 1)")
+    return np.minimum(np.round(lengths * _2_32), _2_32 - 1).astype(np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsuraParams:
+    """Generator-family parameters (paper section 2.C / Appendix B).
+
+    s_log2: log2 of the DEFAULT_MAXIMUM_RANDOM_NUMBER in the Appendix-A
+        pseudocode (the level-0 range).  The paper's evaluation used 16
+        (s_log2=4); we default to 2**1 = 2 so the raw-draw hit rate stays
+        >= ~1/4 even for a single half-full node (Appendix B's expectation
+        depends only on h/n once n >> S).
+    max_draws: trip count of the bounded batched loop.  Appendix B bounds
+        expected draws per placement by (S*a**x/(n-h)) * a/(a-1) <= 4 for
+        hole fraction <= 1/2, so 128 draws miss with p < 2**-53 per lane.
+    """
+
+    s_log2: int = 1
+    max_draws: int = 128
+
+    def __post_init__(self):
+        if not (1 <= self.s_log2 <= 16):
+            raise ValueError("s_log2 must be in [1, 16]")
+
+    @property
+    def s_initial(self) -> float:
+        return float(2**self.s_log2)
+
+    def level_for(self, upper: float) -> int:
+        """Smallest level L with 2**(s+L) >= upper (Appendix B eq. (1))."""
+        level = max(0, int(math.ceil(math.log2(max(upper, 1.0)))) - self.s_log2)
+        if self.s_log2 + level > 31:
+            raise ValueError("segment space exceeds 2**31; unsupported")
+        return level
+
+    def range_at(self, level: int) -> float:
+        return float(2 ** (self.s_log2 + level))
+
+
+DEFAULT_PARAMS = AsuraParams()
+
+
+def _upper_bound(seg_lengths: np.ndarray) -> float:
+    """n of Appendix B: max occupied segment number + its length."""
+    occupied = np.nonzero(seg_lengths > 0)[0]
+    if occupied.size == 0:
+        raise ValueError("segment table has no occupied segments")
+    last = int(occupied[-1])
+    return last + float(seg_lengths[last])
+
+
+# ---------------------------------------------------------------------------
+# Scalar oracle
+# ---------------------------------------------------------------------------
+
+
+class _AsuraStream:
+    """Per-datum ASURA random number stream with true per-level counters."""
+
+    def __init__(self, datum_id: int, top_level: int, params: AsuraParams):
+        self.datum_id = int(datum_id) & 0xFFFFFFFF
+        self.top_level = top_level
+        self.params = params
+        self.counters = [0] * (top_level + 1)
+
+    def next(self) -> tuple[int, int]:
+        """One ASURA random number as (k, frac32); value = k + frac32/2**32."""
+        level = self.top_level
+        s = self.params.s_log2
+        while True:
+            h = draw_u32_scalar(self.datum_id, level, self.counters[level])
+            self.counters[level] += 1
+            if level > 0 and h < 2**31:
+                level -= 1  # value in next-narrower range: consult it instead
+                continue
+            k = h >> (32 - s - level)
+            frac32 = (h << (s + level)) & 0xFFFFFFFF
+            return k, frac32
+
+    def next_value(self) -> float:
+        k, frac32 = self.next()
+        return k + frac32 / _2_32
+
+
+def place_scalar(
+    datum_id: int,
+    seg_lengths: Sequence[float],
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> int:
+    """Paper STEP 2: the segment number storing ``datum_id``.
+
+    seg_lengths[k] is the length (0 <= len < 1) of segment k, 0.0 for holes.
+    Deterministic in ``datum_id``.
+    """
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    n_segs = len(len32)
+    stream = _AsuraStream(datum_id, params.level_for(_upper_bound(lengths)), params)
+    while True:
+        k, frac32 = stream.next()
+        if k < n_segs and frac32 < int(len32[k]):
+            return k
+
+
+def place_replicas_scalar(
+    datum_id: int,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> list[int]:
+    """First ``n_replicas`` hits on distinct *nodes* (section 5.A).
+
+    Returns the list of segment numbers, primary first.
+    """
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    node_of = np.asarray(seg_to_node)
+    n_segs = len(len32)
+    stream = _AsuraStream(datum_id, params.level_for(_upper_bound(lengths)), params)
+    segs: list[int] = []
+    nodes_seen: set[int] = set()
+    guard = 0
+    while len(segs) < n_replicas:
+        guard += 1
+        if guard > 1_000_000:
+            raise RuntimeError("replication needs more distinct nodes than exist")
+        k, frac32 = stream.next()
+        if k >= n_segs or frac32 >= int(len32[k]):
+            continue
+        node = int(node_of[k])
+        if node in nodes_seen:
+            continue
+        nodes_seen.add(node)
+        segs.append(k)
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Section 2.D metadata: ADDITION NUMBER and REMOVE NUMBERS
+# ---------------------------------------------------------------------------
+
+
+def placement_trace(
+    datum_id: int,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int = 1,
+    params: AsuraParams = DEFAULT_PARAMS,
+    extra_levels: int = 0,
+) -> tuple[list[int], list[float], list[bool]]:
+    """Replica segments plus the full anterior ASURA-number trace.
+
+    Returns (replica_segments, numbers, used) where ``numbers`` is every
+    ASURA random number generated up to and including the finally selected
+    one (at top level = level_for(n) + extra_levels, i.e. optionally with the
+    range extended for the ADDITION-NUMBER search) and ``used[i]`` marks the
+    numbers that selected a replica.
+    """
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    node_of = np.asarray(seg_to_node)
+    n_segs = len(len32)
+    top = params.level_for(_upper_bound(lengths)) + extra_levels
+    stream = _AsuraStream(datum_id, top, params)
+    numbers: list[float] = []
+    used: list[bool] = []
+    segs: list[int] = []
+    nodes_seen: set[int] = set()
+    guard = 0
+    while len(segs) < n_replicas:
+        guard += 1
+        if guard > 1_000_000:
+            raise RuntimeError("trace did not converge")
+        k, frac32 = stream.next()
+        numbers.append(k + frac32 / _2_32)
+        hit = k < n_segs and frac32 < int(len32[k]) and int(node_of[k]) not in nodes_seen
+        used.append(bool(hit))
+        if hit:
+            nodes_seen.add(int(node_of[k]))
+            segs.append(k)
+    return segs, numbers, used
+
+
+def addition_number(
+    datum_id: int,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int = 1,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> int:
+    """Section 2.D ADDITION NUMBER.
+
+    floor of the smallest ASURA number anterior to the finally selected one
+    that did not select a replica.  If every anterior number was used, the
+    range is extended (extra levels) until an unused anterior number exists;
+    extension only inserts numbers, never reorders existing ones, so the
+    trace stays consistent (section 2.B).
+    """
+    extra = 0
+    while True:
+        _, numbers, used = placement_trace(
+            datum_id, seg_lengths, seg_to_node, n_replicas, params, extra_levels=extra
+        )
+        unused = [v for v, u in zip(numbers[:-1], used[:-1]) if not u]
+        if unused:
+            return int(min(unused))
+        extra += 1
+        if extra > 32:
+            raise RuntimeError("could not find an unused anterior number")
+
+
+def remove_numbers(
+    datum_id: int,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int = 1,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> list[int]:
+    """Section 2.D REMOVE NUMBERS: floors of the replica-selecting numbers."""
+    _, numbers, used = placement_trace(
+        datum_id, seg_lengths, seg_to_node, n_replicas, params
+    )
+    return sorted(int(v) for v, u in zip(numbers, used) if u)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized NumPy batch placement
+# ---------------------------------------------------------------------------
+
+
+def _next_asura_batch(
+    ids: np.ndarray,
+    counters: np.ndarray,
+    top_level: int,
+    params: AsuraParams,
+) -> tuple[np.ndarray, np.ndarray]:
+    """One ASURA number per lane as (k, frac32); advances per-level counters.
+
+    counters: (batch, top_level + 1) uint32, mutated in place.
+    """
+    batch = ids.shape[0]
+    s = params.s_log2
+    consult = np.ones(batch, dtype=bool)
+    out_k = np.zeros(batch, dtype=np.int64)
+    out_frac = np.zeros(batch, dtype=np.uint32)
+    for level in range(top_level, -1, -1):
+        h = draw_u32_np(ids, level, counters[:, level])
+        counters[:, level] += consult.astype(np.uint32)
+        descend = consult & (level > 0) & (h < np.uint32(2**31))
+        emit = consult & ~descend
+        k = (h >> np.uint32(32 - s - level)).astype(np.int64)
+        frac = (h << np.uint32(s + level)).astype(np.uint32)
+        out_k = np.where(emit, k, out_k)
+        out_frac = np.where(emit, frac, out_frac)
+        consult = descend
+    return out_k, out_frac
+
+
+def place_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """Vectorized STEP 2 for a batch of datum ids -> segment numbers.
+
+    Bit-identical to ``place_scalar`` lane-by-lane (tested).  Lanes that fail
+    to hit within ``params.max_draws`` draws (probability < 2**-53 per lane
+    for hole fractions <= 1/2) fall back to a uniform draw over the occupied
+    mass -- total and uniform but outside the movement-optimality guarantee;
+    see DESIGN.md section 3.2.
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    n_segs = len(len32)
+    top = params.level_for(_upper_bound(lengths))
+    batch = ids.shape[0]
+    counters = np.zeros((batch, top + 1), dtype=np.uint32)
+    result = np.full(batch, -1, dtype=np.int64)
+    done = np.zeros(batch, dtype=bool)
+    for _ in range(params.max_draws):
+        k, frac = _next_asura_batch(ids, counters, top, params)
+        k_safe = np.minimum(k, n_segs - 1)
+        hit = (~done) & (k < n_segs) & (frac < len32[k_safe])
+        result = np.where(hit, k, result)
+        done |= hit
+        if done.all():
+            break
+    if not done.all():  # pragma: no cover - p < 2**-53 per lane
+        cdf = np.cumsum(lengths)
+        miss = ~done
+        u = (
+            draw_u32_np(ids[miss], top + 1, np.zeros(int(miss.sum()))).astype(np.float64)
+            * 2.0**-32
+            * cdf[-1]
+        )
+        result[miss] = np.searchsorted(cdf, u, side="right")
+    return result
+
+
+def place_nodes_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """Batch placement straight to node ids."""
+    segs = place_batch(datum_ids, seg_lengths, params)
+    return np.asarray(seg_to_node)[segs]
+
+
+def place_replicas_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """(batch, n_replicas) segment numbers; first column is the primary.
+
+    Vectorized analogue of ``place_replicas_scalar`` (bit-identical; tested).
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    node_of = np.asarray(seg_to_node)
+    n_segs = len(len32)
+    top = params.level_for(_upper_bound(lengths))
+    batch = ids.shape[0]
+    counters = np.zeros((batch, top + 1), dtype=np.uint32)
+    result = np.full((batch, n_replicas), -1, dtype=np.int64)
+    found = np.zeros(batch, dtype=np.int64)
+    for _ in range(params.max_draws * max(1, n_replicas)):
+        k, frac = _next_asura_batch(ids, counters, top, params)
+        k_safe = np.minimum(k, n_segs - 1)
+        hit = (k < n_segs) & (frac < len32[k_safe]) & (found < n_replicas)
+        node_k = node_of[k_safe]
+        dup = np.zeros(batch, dtype=bool)
+        for r in range(n_replicas):
+            prev = result[:, r]
+            dup |= (prev >= 0) & (node_of[np.maximum(prev, 0)] == node_k)
+        hit &= ~dup
+        rows = np.nonzero(hit)[0]
+        result[rows, found[rows]] = k[rows]
+        found[rows] += 1
+        if (found >= n_replicas).all():
+            break
+    if not (found >= n_replicas).all():
+        raise RuntimeError("replication did not converge; too few distinct nodes?")
+    return result

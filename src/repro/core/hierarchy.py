@@ -1,0 +1,116 @@
+"""Hierarchical ASURA: failure-domain-aware placement (beyond the paper).
+
+The paper notes ASURA "can be applied to general one-dimensional lines or
+even multidimensional space" but leaves it out of scope.  Production storage
+needs replica separation across failure domains (racks / pods / zones) --
+the feature CRUSH's hierarchy provides.  We compose ASURA with itself:
+
+  level 1: a cluster of DOMAINS, each domain's capacity = sum of its nodes'
+           capacities -> the first R distinct-domain hits pick the replica
+           domains (paper section 5.A semantics, applied to domains),
+  level 2: within each chosen domain, an independent ASURA cluster over its
+           nodes places the datum (the datum id is salted with the domain id
+           so placements are independent across domains).
+
+Inherited properties (tested in tests/test_hierarchy.py):
+  * replicas land on R distinct domains -- a whole-domain failure loses at
+    most one replica of any datum;
+  * load is proportional to domain capacity, and to node capacity within a
+    domain;
+  * movement optimality composes: adding/removing a NODE moves only data
+    within its domain (level-2 theorem); adding/removing a DOMAIN moves
+    only the data it wins/held (level-1 theorem).  Cross-domain placements
+    elsewhere never change.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .asura import DEFAULT_PARAMS, AsuraParams
+from .cluster import Cluster
+from .rng import fmix32_np
+
+
+class HierarchicalCluster:
+    """Two-level ASURA: domains (racks/pods) -> nodes."""
+
+    def __init__(self, params: AsuraParams = DEFAULT_PARAMS):
+        self.params = params
+        self.domains: dict[int, Cluster] = {}
+        self._top = Cluster(params=params)
+
+    # -- membership ----------------------------------------------------------
+
+    def add_domain(self, domain_id: int) -> None:
+        if domain_id in self.domains:
+            raise ValueError(f"domain {domain_id} exists")
+        self.domains[domain_id] = Cluster(params=self.params)
+
+    def add_node(self, domain_id: int, node_id: int, capacity: float) -> None:
+        if domain_id not in self.domains:
+            self.add_domain(domain_id)
+        dom = self.domains[domain_id]
+        had = dom.total_capacity()
+        dom.add_node(node_id, capacity)
+        self._sync_domain(domain_id, had)
+
+    def remove_node(self, domain_id: int, node_id: int) -> None:
+        dom = self.domains[domain_id]
+        had = dom.total_capacity()
+        dom.remove_node(node_id)
+        self._sync_domain(domain_id, had)
+
+    def remove_domain(self, domain_id: int) -> None:
+        del self.domains[domain_id]
+        self._top.remove_node(domain_id)
+
+    def _sync_domain(self, domain_id: int, had: float) -> None:
+        """Keep the top-level capacity equal to the domain's node sum."""
+        now = self.domains[domain_id].total_capacity()
+        if had == 0 and now > 0:
+            self._top.add_node(domain_id, now)
+        elif now == 0:
+            self._top.remove_node(domain_id)
+        elif abs(now - had) > 1e-12:
+            self._top.resize_node(domain_id, now)
+
+    # -- placement -----------------------------------------------------------
+
+    def _salt(self, ids: np.ndarray, domain_id: int) -> np.ndarray:
+        with np.errstate(over="ignore"):
+            return fmix32_np(
+                ids.astype(np.uint32) ^ np.uint32((domain_id * 0x9E3779B9) & 0xFFFFFFFF)
+            )
+
+    def place(self, datum_ids) -> np.ndarray:
+        """(batch,) -> (domain_id, node_id) pairs, shape (batch, 2)."""
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        dom_of = self._top.place_nodes(ids)
+        out = np.empty((ids.size, 2), dtype=np.int64)
+        out[:, 0] = dom_of
+        for d in np.unique(dom_of):
+            rows = dom_of == d
+            salted = self._salt(ids[rows], int(d))
+            out[rows, 1] = self.domains[int(d)].place_nodes(salted)
+        return out
+
+    def place_replicas(self, datum_ids, n_replicas: int) -> np.ndarray:
+        """(batch, R, 2): R replicas on R DISTINCT domains, primary first."""
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        dom_reps = self._top.place_replicas(ids, n_replicas)  # (batch, R)
+        out = np.empty((ids.size, n_replicas, 2), dtype=np.int64)
+        out[:, :, 0] = dom_reps
+        for d in np.unique(dom_reps):
+            dom = self.domains[int(d)]
+            mask = dom_reps == d  # (batch, R) positions using this domain
+            rows = np.nonzero(mask.any(axis=1))[0]
+            salted = self._salt(ids[rows], int(d))
+            nodes = dom.place_nodes(salted)
+            for r in range(n_replicas):
+                sel = mask[rows, r]
+                out[rows[sel], r, 1] = nodes[sel]
+        return out
+
+    def total_capacity(self) -> float:
+        return self._top.total_capacity()

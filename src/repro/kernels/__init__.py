@@ -1,0 +1,6 @@
+"""Pallas TPU kernels: batched ASURA placement (asura_place) with jit
+wrapper (ops) and pure-jnp oracle (ref)."""
+
+from .ops import asura_place, asura_place_nodes, table_prep
+
+__all__ = ["asura_place", "asura_place_nodes", "table_prep"]

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: batched ASURA placement (the paper's hot spot).
+
+The paper optimizes per-datum placement latency on a CPU (0.6 us/call); the
+TPU-native re-think (DESIGN.md section 3) is *throughput*: place a whole
+vector of datum ids per call for data-pipeline sharding, checkpoint-shard
+routing and request routing.  The kernel is pure uint32 VPU work:
+
+  * the id vector is tiled into (ROWS, 128) VMEM blocks (lane-aligned),
+  * the O(N) segment table (ASURA's memory advantage over Consistent
+    Hashing's O(NV) ring, paper Table II) is broadcast whole into VMEM --
+    40 KB for 10k segments, far under the ~16 MB VMEM budget,
+  * each grid step runs the bounded masked draw loop entirely on-chip:
+    counter-based hashing (no PRNG state), MSB descend test, shift-based
+    floor/fraction, one dynamic VMEM gather per draw for the hit test.
+
+Trip count: Appendix B bounds expected draws by ~4 (hole fraction <= 1/2),
+and the while_loop exits as soon as every lane has placed, so the typical
+block does 4-6 iterations; max_draws caps the tail at p < 2**-53 per lane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import draw_u32
+
+LANE = 128
+DEFAULT_ROWS = 16  # (16, 128) = 2048 ids per grid step
+
+
+def _place_kernel(
+    ids_ref,
+    table_ref,
+    out_ref,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs: int,
+):
+    ids = ids_ref[...]  # (rows, LANE) uint32
+    table = table_ref[...]  # (n_pad,) uint32
+    shape = ids.shape
+
+    def next_asura(counters):
+        consult = jnp.ones(shape, dtype=bool)
+        out_k = jnp.zeros(shape, dtype=jnp.int32)
+        out_f = jnp.zeros(shape, dtype=jnp.uint32)
+        rows = []
+        for level in range(top_level, -1, -1):
+            h = draw_u32(ids, level, counters[top_level - level])
+            rows.append(counters[top_level - level] + consult.astype(jnp.uint32))
+            descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
+            emit = consult & ~descend
+            k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
+            f = h << jnp.uint32(s_log2 + level)
+            out_k = jnp.where(emit, k, out_k)
+            out_f = jnp.where(emit, f, out_f)
+            consult = descend
+        return out_k, out_f, jnp.stack(rows)
+
+    def cond(state):
+        i, _, _, done = state
+        return (i < max_draws) & ~jnp.all(done)
+
+    def body(state):
+        i, counters, result, done = state
+        k, f, counters = next_asura(counters)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        lens = jnp.take(table, k_safe.reshape(-1), axis=0).reshape(shape)
+        hit = (~done) & (k < n_segs) & (f < lens)
+        result = jnp.where(hit, k, result)
+        return i + 1, counters, result, done | hit
+
+    counters0 = jnp.zeros((top_level + 1,) + shape, dtype=jnp.uint32)
+    result0 = jnp.full(shape, -1, dtype=jnp.int32)
+    done0 = jnp.zeros(shape, dtype=bool)
+    _, _, result, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), counters0, result0, done0)
+    )
+    out_ref[...] = result
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("top_level", "s_log2", "max_draws", "rows_per_block", "interpret"),
+)
+def place_pallas(
+    ids: jax.Array,
+    len32: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched placement via pl.pallas_call.
+
+    ids must be (m * rows_per_block * 128,) uint32 (pre-padded by ops.py);
+    len32 must be 128-padded.  Returns int32 segment numbers (-1 for the
+    p < 2**-53 non-converged tail; ops.py resolves those).
+    """
+    n_segs = int(len32.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "ops.py must pad ids to a block multiple"
+    assert n_segs % LANE == 0, "ops.py must pad the table to a lane multiple"
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _place_kernel,
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_segs,), lambda i: (0,)),  # whole table per block
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ids2.shape, jnp.int32),
+        interpret=interpret,
+    )(ids2, len32)
+    return out.reshape(total)

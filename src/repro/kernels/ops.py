@@ -1,0 +1,103 @@
+"""Jitted public wrapper for batched ASURA placement.
+
+``asura_place`` pads the id vector / segment table, dispatches to the Pallas
+kernel (interpret mode on CPU, compiled on TPU), resolves the p < 2**-53
+non-converged tail with a uniform draw over occupied mass (totality without
+sacrificing uniformity), and unpads.  ``asura_place_nodes`` additionally maps
+segments -> node ids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.asura import DEFAULT_PARAMS, AsuraParams, _upper_bound
+
+from .asura_place import DEFAULT_ROWS, LANE, place_pallas
+from .ref import draw_u32, place_ref
+
+
+def _pad_to(x: jax.Array, multiple: int, fill) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+
+
+def _resolve_tail(ids, result, len32):
+    """Uniform-over-occupied-mass fallback for non-converged lanes."""
+    mass = jnp.cumsum(len32.astype(jnp.float32) * jnp.float32(2.0**-32))
+    u = (
+        draw_u32(ids, 40, jnp.zeros_like(ids)).astype(jnp.float32)
+        * jnp.float32(2.0**-32)
+        * mass[-1]
+    )
+    fallback = jnp.searchsorted(mass, u, side="right").astype(jnp.int32)
+    return jnp.where(result < 0, fallback, result)
+
+
+def table_prep(seg_lengths, params: AsuraParams = DEFAULT_PARAMS):
+    """Host-side: canonical u32 table (lane-padded) + static top level."""
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    top_level = params.level_for(_upper_bound(lengths))
+    len32 = np.minimum(np.round(lengths * 2.0**32), 2.0**32 - 1).astype(np.uint32)
+    pad = (-len32.shape[0]) % LANE
+    if pad:
+        len32 = np.concatenate([len32, np.zeros(pad, dtype=np.uint32)])
+    return jnp.asarray(len32), top_level
+
+
+def asura_place(
+    datum_ids,
+    seg_lengths,
+    params: AsuraParams = DEFAULT_PARAMS,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Place a batch of datum ids -> int32 segment numbers.
+
+    use_pallas=False routes through the pure-jnp reference (place_ref) --
+    the path the distributed pipeline uses on CPU hosts; the Pallas path is
+    the TPU fast path (validated bit-identical in tests/test_kernels.py).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    len32, top_level = table_prep(seg_lengths, params)
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_to(ids, block, 0)
+        result = place_pallas(
+            padded,
+            len32,
+            top_level=top_level,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            rows_per_block=rows_per_block,
+            interpret=interpret,
+        )[:n]
+    else:
+        result = place_ref(
+            ids,
+            len32,
+            top_level=top_level,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+        )
+    return _resolve_tail(ids, result, len32)
+
+
+def asura_place_nodes(
+    datum_ids,
+    seg_lengths,
+    seg_to_node,
+    params: AsuraParams = DEFAULT_PARAMS,
+    **kwargs,
+) -> jax.Array:
+    segs = asura_place(datum_ids, seg_lengths, params, **kwargs)
+    return jnp.asarray(np.asarray(seg_to_node, dtype=np.int32))[segs]

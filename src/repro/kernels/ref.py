@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the batched ASURA placement kernel.
+
+Bit-identical to ``repro.core.asura.place_batch`` (NumPy) and to the Pallas
+kernel in ``asura_place.py`` -- all three use the exact integer formulation
+(uint32 draws, MSB descend test, shift-based floor/fraction).  Tested against
+both in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN = 0x9E3779B9
+KMULT = 0x85EBCA77
+MSB = jnp.uint32(0x80000000)
+
+
+def fmix32(h: jax.Array) -> jax.Array:
+    """MurmurHash3 finalizer on uint32 lanes."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def draw_u32(ids: jax.Array, level: int, counters: jax.Array) -> jax.Array:
+    """k-th raw draw of the level-``level`` generator (counter-based)."""
+    lvl_term = jnp.uint32((GOLDEN * (level + 1)) & 0xFFFFFFFF)
+    seed = fmix32(ids.astype(jnp.uint32) + lvl_term)
+    return fmix32(seed ^ (counters.astype(jnp.uint32) * jnp.uint32(KMULT)))
+
+
+def next_asura(ids, counters, top_level: int, s_log2: int):
+    """One ASURA number per lane as (k:int32, frac32:uint32, new_counters).
+
+    counters: (top_level + 1, batch) uint32; row r is the counter of level
+    ``top_level - r`` (row 0 = top).
+    """
+    batch = ids.shape[0]
+    consult = jnp.ones((batch,), dtype=bool)
+    out_k = jnp.zeros((batch,), dtype=jnp.int32)
+    out_f = jnp.zeros((batch,), dtype=jnp.uint32)
+    rows = []
+    for level in range(top_level, -1, -1):
+        row = top_level - level
+        h = draw_u32(ids, level, counters[row])
+        rows.append(counters[row] + consult.astype(jnp.uint32))
+        descend = consult & (level > 0) & ((h & MSB) == 0)
+        emit = consult & ~descend
+        k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
+        f = h << jnp.uint32(s_log2 + level)
+        out_k = jnp.where(emit, k, out_k)
+        out_f = jnp.where(emit, f, out_f)
+        consult = descend
+    return out_k, out_f, jnp.stack(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("top_level", "s_log2", "max_draws"))
+def place_ref(
+    ids: jax.Array,
+    len32: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+) -> jax.Array:
+    """Batched STEP 2 -> int32 segment numbers (-1 if not converged).
+
+    ids: (batch,) uint32 datum ids.
+    len32: (n_segs,) uint32 canonical segment lengths (round(len * 2**32)).
+    """
+    ids = ids.astype(jnp.uint32)
+    n_segs = len32.shape[0]
+    batch = ids.shape[0]
+
+    def cond(state):
+        i, _, _, done = state
+        return (i < max_draws) & ~jnp.all(done)
+
+    def body(state):
+        i, counters, result, done = state
+        k, f, counters = next_asura(ids, counters, top_level, s_log2)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        hit = (~done) & (k < n_segs) & (f < len32[k_safe])
+        result = jnp.where(hit, k, result)
+        return i + 1, counters, result, done | hit
+
+    counters0 = jnp.zeros((top_level + 1, batch), dtype=jnp.uint32)
+    result0 = jnp.full((batch,), -1, dtype=jnp.int32)
+    done0 = jnp.zeros((batch,), dtype=bool)
+    _, _, result, _ = jax.lax.while_loop(cond, body, (0, counters0, result0, done0))
+    return result

@@ -1,0 +1,286 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device count
+at first init).  For each cell we
+
+  1. build abstract inputs (ShapeDtypeStruct only -- no allocation),
+  2. jax.jit the train/prefill/serve step with explicit in/out shardings,
+  3. .lower().compile() on the production mesh,
+  4. record memory_analysis() (bytes/device -- proves it fits) and
+     cost_analysis() (FLOPs / bytes for the roofline), and the collective
+     bytes parsed from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.shardings import (
+    activation_constraint_fn,
+    batch_shardings,
+    cache_shardings,
+    logits_sharding,
+    param_shardings,
+    replicated,
+    serve_param_shardings,
+)
+from repro.models import cache_specs, input_specs, param_specs
+from repro.models.hooks import activation_sharding
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.layers import COMPUTE_DTYPE
+from repro.train import AdamWConfig, make_prefill_step, make_serve_step, make_train_step
+
+# microbatch counts tuned so the activation peak fits HBM (section Perf)
+MICROBATCHES: dict[tuple[str, str], int] = {}
+
+
+def _opt_specs(params_abs):
+    return {
+        "m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs),
+        "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _bf16_params(params_abs):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, COMPUTE_DTYPE), params_abs
+    )
+
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "u1": 1, "s1": 1, "s4": 1, "u4": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the HLO.
+
+    Loop bodies appear once in the text but execute per scan iteration;
+    we multiply collectives inside while-loop computations by the trip
+    count when it is recoverable from the loop bound (conservative: if not
+    recoverable, count once)."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        sm = SHAPE_RE.match(line)
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        totals[kind] = totals.get(kind, 0.0) + n * DTYPE_BYTES[dt]
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": totals, "counts": counts, "total_bytes": sum(totals.values())}
+
+
+def build_cell(cfg: ModelConfig, spec: ShapeSpec, mesh, *, n_microbatches=1,
+               serve_tp_only=False):
+    """Returns (fn, in_specs, in_shardings) for one cell."""
+    params_abs = param_specs(cfg)
+    serve_sh = serve_param_shardings if serve_tp_only else param_shardings
+    if spec.kind == "train":
+        fn = make_train_step(cfg, AdamWConfig(), n_microbatches=n_microbatches)
+        batch = input_specs(cfg, spec)["batch"]
+        opt = _opt_specs(params_abs)
+        in_specs = (params_abs, opt, batch)
+        in_sh = (
+            param_shardings(mesh, params_abs),
+            {
+                "m": param_shardings(mesh, params_abs),
+                "v": param_shardings(mesh, params_abs),
+                "count": NamedSharding(mesh, P()),
+            },
+            batch_shardings(mesh, batch),
+        )
+        out_sh = (in_sh[0], in_sh[1], replicated(mesh, {"loss": 0, "grad_norm": 0, "lr": 0}))
+        return fn, in_specs, in_sh, out_sh
+    if spec.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch = input_specs(cfg, spec)["batch"]
+        pa = _bf16_params(params_abs)
+        in_specs = (pa, batch)
+        in_sh = (serve_sh(mesh, pa), batch_shardings(mesh, batch))
+        out_sh = logits_sharding(mesh, spec.global_batch, cfg.vocab)
+        return fn, in_specs, in_sh, out_sh
+    # decode
+    fn = make_serve_step(cfg)
+    ins = input_specs(cfg, spec)
+    pa = _bf16_params(params_abs)
+    in_specs = (pa, ins["cache"], ins["batch"])
+    cache_sh = cache_shardings(mesh, cfg, ins["cache"])
+    in_sh = (
+        serve_sh(mesh, pa),
+        cache_sh,
+        batch_shardings(mesh, ins["batch"]),
+    )
+    out_sh = (logits_sharding(mesh, spec.global_batch, cfg.vocab), cache_sh)
+    return fn, in_specs, in_sh, out_sh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False, verbose: bool = True,
+             hlo_dir: str | None = None, serve_tp_only: bool = False,
+             remat: str | None = None):
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    ok, reason = shape_applicable(cfg, spec)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if remat:
+        from repro.models import lm as _lm
+
+        _lm.set_remat_policy(remat)
+    n_micro = MICROBATCHES.get((arch, shape), 1)
+    fn, in_specs, in_sh, out_sh = build_cell(
+        cfg, spec, mesh, n_microbatches=n_micro, serve_tp_only=serve_tp_only
+    )
+    t0 = time.time()
+    with mesh, activation_sharding(activation_constraint_fn(mesh)):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*in_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if hlo_dir:
+        import gzip, os as _os
+
+        _os.makedirs(hlo_dir, exist_ok=True)
+        tag = "mp" if multi_pod else "sp"
+        with gzip.open(f"{hlo_dir}/{arch}_{shape}_{tag}.hlo.gz", "wt") as f:
+            f.write(hlo_text)
+    mc = hlo_analyze(hlo_text)  # loop-aware, per-device (SPMD module)
+    coll = collective_bytes(hlo_text)
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # loop-aware per-device analysis (hlo_cost.py); xla_* are XLA's own
+        # cost_analysis, which counts while bodies once (see EXPERIMENTS.md)
+        "flops": mc.flops,
+        "hlo_bytes": mc.bytes,
+        "collective_bytes_per_device": mc.collective_bytes,
+        "collective_by_kind": dict(mc.collective_by_kind),
+        "trip_unknown": mc.trip_unknown,
+        "xla_flops": cost.get("flops", 0.0),
+        "xla_bytes": cost.get("bytes accessed", 0.0),
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_device": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        "collectives": coll,
+        "n_devices": n_dev,
+        "n_microbatches": n_micro,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if verbose:
+        print(json.dumps(result, indent=2, default=float))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-dir", default=None, help="dump compiled HLO text (gz)")
+    ap.add_argument("--serve-tp-only", dest="serve_tp_only", action="store_true",
+                    default=True,
+                    help="serve weights TP-only (no per-token FSDP all-gather); "
+                    "confirmed win, default on (EXPERIMENTS.md Perf iteration 5)")
+    ap.add_argument("--serve-fsdp", dest="serve_tp_only", action="store_false")
+    ap.add_argument("--remat", default=None, choices=["nothing", "dots", "everything"])
+    ap.add_argument("--blockwise-threshold", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args(argv)
+    results = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                print(f"=== {arch} x {shape} (multi_pod={args.multi_pod}) ===", flush=True)
+                try:
+                    results.append(
+                        run_cell(
+                            arch, shape, multi_pod=args.multi_pod, hlo_dir=args.hlo_dir,
+                            serve_tp_only=args.serve_tp_only, remat=args.remat,
+                        )
+                    )
+                except Exception as e:  # a failure here is a bug in the system
+                    results.append(
+                        {"arch": arch, "shape": shape, "status": "FAILED", "error": str(e)[:500]}
+                    )
+                    print(f"FAILED: {e}", file=sys.stderr)
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        if args.microbatches:
+            MICROBATCHES[(args.arch, args.shape)] = args.microbatches
+        if args.blockwise_threshold:
+            from repro.models import layers as _layers
+
+            _layers.set_blockwise_threshold(args.blockwise_threshold)
+        results.append(
+            run_cell(
+                args.arch, args.shape, multi_pod=args.multi_pod, hlo_dir=args.hlo_dir,
+                serve_tp_only=args.serve_tp_only, remat=args.remat,
+            )
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+    n_fail = sum(1 for r in results if r["status"] == "FAILED")
+    print(f"\n{len(results)} cells: {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

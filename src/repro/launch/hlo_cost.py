@@ -1,0 +1,320 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so a
+40-layer ``lax.scan`` under-reports FLOPs/bytes by ~40x (verified in
+EXPERIMENTS.md section Dry-run).  This module re-derives the three roofline
+inputs directly from the optimized (scheduled) HLO text, expanding the
+computation graph:
+
+  * per-computation costs: dot FLOPs (2 * prod(output) * contraction, with
+    operand shapes resolved through a per-computation symbol table since
+    scheduled HLO drops inline operand types), bytes touched (output +
+    operand sizes, skipping pure-plumbing ops), and collective bytes,
+  * call sites: fusion/call/conditional/reduce add the callee once; while
+    adds (cond + body) x trip count, the trip count recovered from the
+    canonical jax loop condition ``compare(iv, constant(N)), direction=LT``
+    (falls back to 1 and sets ``trip_unknown``),
+  * entry cost = fully expanded cost of the ENTRY computation.
+
+Static analysis of the SPMD module: totals are whole-program; divide by
+device count for per-chip roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_DEF = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z]\d*[a-z0-9]*)\[([\d,]*)\][^=]*?\s([a-z][a-z0-9\-]*)\("
+)
+_DEF_TUPLE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_REF = re.compile(r"%([\w.\-]+)")
+_CONST = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_COLLECTIVE = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_PLUMBING = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "copy", "after-all", "partition-id", "replica-id"}
+
+# Ops that materialize HBM traffic on TPU.  Elementwise chains (add, mul,
+# tanh, convert, select, broadcast, ...) are fused into their producers by
+# the TPU compiler, so counting their operand/output bytes would model the
+# CPU backend's (unfused) lowering rather than the target hardware; we count
+# bytes only at materialization boundaries.  Fusion call-sites count their
+# own operands/outputs (the boundary), their callees count FLOPs only.
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "sort", "transpose", "select-and-scatter", "custom-call", "rng",
+    "rng-bit-generator", "cholesky", "triangular-solve", "fft",
+} | set(_COLLECTIVE)
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    calls: list = dataclasses.field(default_factory=list)  # (kind, names, extra_bytes)
+    max_const: int = 1
+    # per-parameter HBM charge when this computation is a fusion callee:
+    # a param only read through (dynamic-)slice ops is charged the slice
+    # output bytes, not the full operand (stacked layer weights!)
+    param_full: dict = dataclasses.field(default_factory=dict)   # idx -> bytes
+    param_slice: dict = dataclasses.field(default_factory=dict)  # idx -> sliced bytes
+    param_direct: set = dataclasses.field(default_factory=set)   # idx used directly
+    param_alias: set = dataclasses.field(default_factory=set)    # idx aliased (DUS buffer)
+    root_dus_update: float | None = None  # ROOT dynamic-update-slice: update bytes
+
+
+def _parse(hlo: str) -> tuple[dict[str, CompCost], str]:
+    comps: dict[str, CompCost] = {}
+    entry = ""
+    cur: CompCost | None = None
+    symbols: dict[str, tuple[str, int]] = {}
+    param_names: dict[str, int] = {}
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = comps.setdefault(m.group(1), CompCost())
+                symbols = {}
+                param_names = {}
+                if stripped.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        for c in _CONST.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+        d = _DEF.match(line)
+        if d:
+            name, dt, dims, opcode = d.groups()
+            out_n = _elems(dims)
+            out_bytes = out_n * DTYPE_BYTES.get(dt, 4)
+            symbols[name] = (dt, out_n)
+            opm = _OPERANDS.search(line[line.index(opcode + "(") :])
+            operands = _REF.findall(opm.group(1)) if opm else []
+            if opcode == "parameter":
+                pidx = _PARAM_IDX.search(line)
+                if pidx:
+                    idx = int(pidx.group(1))
+                    cur.param_full[idx] = out_bytes
+                    param_names[name] = idx
+            # param usage classification (slice-only / aliased / direct)
+            for oi, o in enumerate(operands):
+                if o in param_names:
+                    idx = param_names[o]
+                    if opcode in ("dynamic-slice", "slice"):
+                        cur.param_slice[idx] = max(
+                            cur.param_slice.get(idx, 0), out_bytes
+                        )
+                    elif opcode == "dynamic-update-slice" and oi == 0:
+                        cur.param_alias.add(idx)  # in-place buffer operand
+                    elif opcode not in ("get-tuple-element", "bitcast", "copy"):
+                        cur.param_direct.add(idx)
+            count_bytes = opcode in _BYTES_OPS and opcode != "fusion"
+            if opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice: charge output both ways (read+write)
+                cur.bytes += 2.0 * out_bytes
+                count_bytes = False
+            elif opcode == "dynamic-update-slice":
+                upd = symbols.get(operands[1]) if len(operands) > 1 else None
+                upd_bytes = (
+                    upd[1] * DTYPE_BYTES.get(upd[0], 4) if upd else out_bytes
+                )
+                cur.bytes += 2.0 * upd_bytes
+                count_bytes = False
+                if line.lstrip().startswith("ROOT"):
+                    cur.root_dus_update = upd_bytes
+            elif opcode in ("scatter",):
+                # in-place update: traffic ~ 2x the update operand, NOT the
+                # full buffer (scan output stacking would otherwise charge
+                # the whole stacked array per iteration)
+                upd = symbols.get(operands[1]) if len(operands) > 1 else None
+                upd_bytes = (
+                    upd[1] * DTYPE_BYTES.get(upd[0], 4) if upd else out_bytes
+                )
+                cur.bytes += 2.0 * upd_bytes
+                count_bytes = False
+            if count_bytes:
+                op_bytes = sum(
+                    symbols.get(o, ("f32", 0))[1]
+                    * DTYPE_BYTES.get(symbols.get(o, ("f32", 0))[0], 4)
+                    for o in operands
+                )
+                cur.bytes += out_bytes + op_bytes
+            if opcode == "dot":
+                cm = _DOT_CDIMS.search(line)
+                lhs = symbols.get(operands[0]) if operands else None
+                if cm is not None and lhs is not None:
+                    contract = _contract_size(line, operands[0], symbols, hlo_dims.get(operands[0]))
+                    cur.flops += 2.0 * out_n * contract
+            elif opcode in _COLLECTIVE:
+                cur.coll_bytes += out_bytes
+                cur.coll_by_kind[opcode] += out_bytes
+            _record_calls(cur, line, opcode, out_bytes)
+            continue
+        t = _DEF_TUPLE.match(line)
+        if t:
+            # tuple-typed result (e.g. while); record calls, no flops
+            opcode = _opcode_of(line)
+            _record_calls(cur, line, opcode, 0.0)
+    return comps, entry
+
+
+# per-module map: op name -> dims tuple (filled in analyze's pre-pass)
+hlo_dims: dict[str, tuple[int, ...]] = {}
+
+_DIMS_DEF = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*[a-z]\d*[a-z0-9]*\[([\d,]*)\]", re.MULTILINE
+)
+
+
+def _contract_size(line, lhs_name, symbols, lhs_dims):
+    cm = _DOT_CDIMS.search(line)
+    if cm is None:
+        return 0
+    if lhs_dims is None:
+        return 0
+    contract = 1
+    for di in cm.group(1).split(","):
+        if di.strip().isdigit():
+            i = int(di)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return contract
+
+
+def _opcode_of(line: str) -> str:
+    m = re.search(r"\s([a-z][a-z0-9\-]*)\(", line)
+    return m.group(1) if m else ""
+
+
+# opcodes whose callee runs register/VMEM-resident inside the op: the callee
+# contributes FLOPs/collectives, but its internal values never touch HBM, so
+# bytes count only at the call-site boundary (the op's own operands/output).
+_FUSED_CALLERS = {"fusion", "reduce", "reduce-window", "scatter", "sort", "map",
+                  "select-and-scatter", "all-reduce", "reduce-scatter"}
+
+
+def _record_calls(cur: CompCost, line: str, opcode: str, out_bytes: float) -> None:
+    if opcode == "while":
+        body = _BODY.search(line)
+        cond = _COND.search(line)
+        names = [m.group(1) for m in (cond, body) if m]
+        if names:
+            cur.calls.append(("while", names, 0.0))
+        return
+    kind = "fused" if opcode in _FUSED_CALLERS else "call"
+    cm = _CALLS.search(line)
+    if cm:
+        cur.calls.append((kind, [cm.group(1)], out_bytes))
+    bm = _BRANCHES.search(line)
+    if bm:
+        cur.calls.append(
+            ("call", [n.strip().lstrip("%") for n in bm.group(1).split(",")], 0.0)
+        )
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_by_kind: dict
+    trip_unknown: bool
+
+
+def analyze(hlo: str) -> ModuleCost:
+    # pre-pass: global name -> dims (names are unique enough per module; dots
+    # reference operands defined in the same computation)
+    hlo_dims.clear()
+    for m in _DIMS_DEF.finditer(hlo):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        hlo_dims[m.group(1)] = dims
+    comps, entry = _parse(hlo)
+    if not comps:
+        return ModuleCost(0.0, 0.0, 0.0, {}, False)
+    if not entry:
+        entry = next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def cost_of(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {}, False)
+        c = comps[name]
+        fl, by, co = c.flops, c.bytes, c.coll_bytes
+        kinds = defaultdict(float, c.coll_by_kind)
+        unknown = False
+        for kind, names, extra in c.calls:
+            trips = 1
+            if kind == "while":
+                cond_name = names[0] if len(names) > 1 else None
+                trips = comps[cond_name].max_const if cond_name in comps else 1
+                if trips <= 1:
+                    trips = 1
+                    unknown = True
+            for sub in names:
+                sf, sb, sc, sk, su = cost_of(sub, stack + (name,))
+                fl += trips * sf
+                if kind == "fused":
+                    # fused callee is register/VMEM resident; HBM traffic =
+                    # call-site output + per-param charges (full bytes for
+                    # directly-read params, slice bytes for sliced params,
+                    # zero for in-place-aliased DUS buffers)
+                    charge = extra
+                    callee = comps.get(sub)
+                    if callee is not None:
+                        if callee.root_dus_update is not None:
+                            # output aliases the buffer: traffic ~ the update
+                            charge = 2.0 * callee.root_dus_update
+                        for idx, full in callee.param_full.items():
+                            if idx in callee.param_alias:
+                                continue
+                            if idx in callee.param_direct:
+                                charge += full
+                            elif idx in callee.param_slice:
+                                charge += callee.param_slice[idx]
+                    by += trips * charge
+                else:
+                    by += trips * sb
+                co += trips * sc
+                for k, v in sk.items():
+                    kinds[k] += trips * v
+                unknown |= su
+        memo[name] = (fl, by, co, dict(kinds), unknown)
+        return memo[name]
+
+    fl, by, co, kinds, unknown = cost_of(entry)
+    return ModuleCost(fl, by, co, kinds, unknown)

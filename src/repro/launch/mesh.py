@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state -- the dry-run sets
+XLA_FLAGS for 512 host devices before any jax import; smoke tests and
+benchmarks see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e), 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests on CPU)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch: ('pod', 'data') multi-pod, else ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_pspec(mesh) -> P:
+    return P(data_axes(mesh))

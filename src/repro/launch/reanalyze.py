@@ -1,0 +1,45 @@
+"""Offline re-analysis: update dry-run JSON cost fields from dumped HLO.
+
+The dry-run saves compiled HLO under --hlo-dir; this tool re-runs
+launch/hlo_cost.analyze on the dumps so analyzer refinements do not require
+recompiling 40 cells.
+
+Usage: PYTHONPATH=src python -m repro.launch.reanalyze dryrun_single_pod.json hlo sp
+"""
+
+import gzip
+import json
+import sys
+
+from repro.launch.hlo_cost import analyze
+
+
+def main(json_path: str, hlo_dir: str, tag: str) -> int:
+    with open(json_path) as f:
+        cells = json.load(f)
+    n = 0
+    for cell in cells:
+        if cell.get("status") != "ok":
+            continue
+        path = f"{hlo_dir}/{cell['arch']}_{cell['shape']}_{tag}.hlo.gz"
+        try:
+            with gzip.open(path, "rt") as f:
+                text = f.read()
+        except OSError:
+            print(f"missing {path}", file=sys.stderr)
+            continue
+        mc = analyze(text)
+        cell["flops"] = mc.flops
+        cell["hlo_bytes"] = mc.bytes
+        cell["collective_bytes_per_device"] = mc.collective_bytes
+        cell["collective_by_kind"] = dict(mc.collective_by_kind)
+        cell["trip_unknown"] = mc.trip_unknown
+        n += 1
+    with open(json_path, "w") as f:
+        json.dump(cells, f, indent=2, default=float)
+    print(f"reanalyzed {n} cells -> {json_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(*sys.argv[1:4]))

@@ -1,0 +1,304 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Baseline scheme (measured and iterated in EXPERIMENTS.md section Perf):
+
+  * weights:  FSDP over the ``data`` axis x tensor-parallel over ``model``.
+    "in" projections (d -> wide) put d on data and the wide dim on model;
+    "out" projections (wide -> d) the reverse, so TP matmuls chain without
+    resharding (Megatron pairing).
+  * embeddings: vocab on model (TP logits + chunked CE), d_model on data.
+  * MoE experts: expert axis on model (EP); within-expert dims follow FSDP.
+  * batch: sharded over ('pod', 'data').
+  * decode caches: batch over dp axes; kv-heads / state width on model when
+    divisible, else replicated (MQA kv=1, RWKV H=40 stay unsharded).
+
+Grads inherit param specs; AdamW moments inherit param specs (ZeRO-1: the
+optimizer state is already fully sharded because params are FSDP'd).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+from .mesh import data_axes
+
+DATA = "data"
+MODEL = "model"
+
+
+def _spec(ndim: int, *trailing) -> P:
+    """PartitionSpec for the trailing dims, None-padded for stacked layers."""
+    pad = ndim - len(trailing)
+    return P(*([None] * pad + list(trailing)))
+
+
+_IN = (DATA, MODEL)  # (d_model, wide)
+_OUT = (MODEL, DATA)  # (wide, d_model)
+
+# name -> trailing-dims spec, optionally keyed by parent
+_RULES: dict[str, Any] = {
+    "embed": ("exact", P(MODEL, DATA)),
+    "lm_head": ("exact", P(DATA, MODEL)),
+    # attention (parent 'attn'/'cross') and rwkv time-mix share names; the
+    # parent disambiguates below.
+    "w_q": ("trail", _IN),
+    "w_qkv": ("trail", _IN),
+    "w_o": ("trail", _OUT),
+    "w_gate": ("trail", _IN),
+    "w_up": ("trail", _IN),
+    "w_down": ("trail", _OUT),
+    "router": ("trail", (DATA, None)),
+    # MLA
+    "w_dq": ("trail", (DATA, None)),
+    "w_uq": ("trail", (None, MODEL)),
+    "w_dkv": ("trail", (DATA, None)),
+    "w_kr": ("trail", (DATA, None)),
+    "w_uk": ("trail", (None, MODEL)),
+    "w_uv": ("trail", (None, MODEL)),
+    # RG-LRU
+    "w_x": ("trail", _IN),
+    "conv_w": ("trail", (None, MODEL)),
+    "conv_b": ("trail", (MODEL,)),
+    "a_param": ("trail", (MODEL,)),
+    "w_rg": ("trail", (MODEL, None)),
+    "w_ig": ("trail", (MODEL, None)),
+    "w_out": ("trail", _OUT),
+    # RWKV6 loras / small tensors -> replicated (handled by default)
+    "mix_lora_a": ("trail", (DATA, None)),
+    "decay_lora_a": ("trail", (DATA, None)),
+}
+
+_PARENT_RULES: dict[tuple[str, str], tuple] = {
+    # MoE expert-parallel weights: (E, D, F) / (E, F, D)
+    ("moe", "w_gate"): ("trail", (MODEL, DATA, None)),
+    ("moe", "w_up"): ("trail", (MODEL, DATA, None)),
+    ("moe", "w_down"): ("trail", (MODEL, None, DATA)),
+    # attention K/V projections (d, kv*hd): wide dim on model
+    ("attn", "w_k"): ("trail", _IN),
+    ("attn", "w_v"): ("trail", _IN),
+    ("cross", "w_k"): ("trail", _IN),
+    ("cross", "w_v"): ("trail", _IN),
+    # rwkv time-mix square projections: Megatron pairing.  NOTE (Perf
+    # iteration 3, REFUTED): switching these to FSDP-only halves collective
+    # bytes (the 40-head reshape can't keep model sharding, forcing fp32
+    # activation all-gathers) but the full-width per-device matmuls raise
+    # the dominant memory term 2.2x -- net loss; kept as TP.
+    ("time", "w_r"): ("trail", _IN),
+    ("time", "w_k"): ("trail", _IN),
+    ("time", "w_v"): ("trail", _IN),
+    ("time", "w_g"): ("trail", _IN),
+    ("time", "w_o"): ("trail", _OUT),
+    # rwkv channel-mix
+    ("channel", "w_k"): ("trail", _IN),
+    ("channel", "w_v"): ("trail", _OUT),
+    ("channel", "w_r"): ("trail", _IN),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return names
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def _fit(mesh, spec: P, shape) -> P:
+    """Drop mesh axes from dims they do not divide (MQA kv=1, 8-expert MoE,
+    batch=1 decode cells, ...)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for extent, axis in zip(shape, dims):
+        if axis is None:
+            out.append(None)
+        elif extent % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspec(path, leaf, mesh=None) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    shape = tuple(getattr(leaf, "shape", ()))
+    nd = len(shape)
+    rule = _PARENT_RULES.get((parent, name)) or _RULES.get(name)
+    if rule is None:
+        return P()  # norms, biases, gates: replicated
+    kind, spec = rule
+    spec = spec if kind == "exact" else _spec(nd, *spec)
+    if mesh is None:
+        return spec
+    if parent == "moe" and name in ("w_gate", "w_up", "w_down"):
+        # EP wants the expert axis on 'model'; with fewer experts than the
+        # model axis (mixtral: 8 < 16) fall back to TP over d_ff instead.
+        e_dim = nd - 3  # stacked layer dims precede (E, ., .)
+        if shape[e_dim] % mesh.shape[MODEL] != 0:
+            alt = (None, DATA, MODEL) if name in ("w_gate", "w_up") else (None, MODEL, DATA)
+            spec = _spec(nd, *alt)
+    return _fit(mesh, spec, shape)
+
+
+def param_shardings(mesh, params_tree):
+    """NamedSharding tree matching a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        params_tree,
+    )
+
+
+def batch_shardings(mesh, batch_tree):
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        nd = len(shape)
+        spec = _spec(nd, *([dp] + [None] * (nd - 1))) if nd else P()
+        return NamedSharding(mesh, _fit(mesh, spec, shape))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_pspec(path, leaf, mesh, cfg: ModelConfig) -> P:
+    """Decode-cache specs: batch over dp; head/width dims on model.
+
+    When the batch dim cannot take the dp axes (long_500k has batch=1), the
+    sequence dim of KV-style caches takes them instead, so the 500k-context
+    cache and its attention shard across the pod (sequence parallelism).
+    Non-dividing extents are dropped by _fit (MQA kv=1, RWKV H=40)."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = tuple(getattr(leaf, "shape", ()))
+    nd = len(shape)
+    dp = data_axes(mesh)
+    if name == "index" or nd == 0:
+        return P()
+    batch_ok = nd >= 2 and shape[-_trailing_rank(name)] % _axis_size(mesh, dp) == 0
+
+    def bdim(seq_sharded_ok: bool):
+        """(batch_axis, seq_axis): move dp to seq when batch can't shard."""
+        if batch_ok:
+            return dp, None
+        return None, (dp if seq_sharded_ok else None)
+
+    if name in ("k", "v"):  # (L, B, S, kv_heads, hd)
+        b_ax, s_ax = bdim(True)
+        kv_ok = shape[-2] % mesh.shape[MODEL] == 0
+        if not kv_ok:
+            # kv heads cannot take the model axis (GQA kv < model size):
+            # shard the cache SEQUENCE over model instead -- flash-decode
+            # style sequence parallelism; scores psum over model.  Without
+            # this the head-sharded new k/v force an fp32 all-gather of the
+            # WHOLE cache every step (EXPERIMENTS.md Perf iteration 5).
+            s_ax = _join_axes(s_ax, MODEL)
+        return _fit(mesh, _spec(nd, b_ax, s_ax, MODEL if kv_ok else None, None), shape)
+    if name == "pos":  # (L, B, S) -- must match the k/v seq sharding
+        b_ax, s_ax = bdim(True)
+        kv_shape = None
+        s_ax = _join_axes(s_ax, MODEL) if cfg.n_kv_heads % mesh.shape[MODEL] else s_ax
+        return _fit(mesh, _spec(nd, b_ax, s_ax), shape)
+    if name == "ckv":  # (L, B, S, kv_lora)
+        b_ax, s_ax = bdim(True)
+        return _fit(mesh, _spec(nd, b_ax, s_ax, MODEL), shape)
+    if name == "krope":  # (L, B, S, rope_dim)
+        b_ax, s_ax = bdim(True)
+        return _fit(mesh, _spec(nd, b_ax, s_ax, None), shape)
+    if name == "h":  # (L, B, W)
+        return _fit(mesh, _spec(nd, dp, MODEL), shape)
+    if name == "conv":  # (L, B, 3, W)
+        return _fit(mesh, _spec(nd, dp, None, MODEL), shape)
+    if name == "S":  # (L, B, H, dk, dv)
+        return _fit(mesh, _spec(nd, dp, MODEL, None, None), shape)
+    if name == "prev":  # (L, B, 1, D)
+        return _fit(mesh, _spec(nd, dp, None, None), shape)
+    if name == "enc_out":  # (B, S_enc, D)
+        return _fit(mesh, _spec(nd, dp, None, None), shape)
+    return _fit(mesh, _spec(nd, dp), shape)
+
+
+_TRAILING = {"k": 4, "v": 4, "pos": 2, "ckv": 3, "krope": 3, "h": 2, "conv": 3,
+             "S": 4, "prev": 3, "enc_out": 3}
+
+
+def _trailing_rank(name: str) -> int:
+    """dims after (and including) batch for each cache leaf kind."""
+    return _TRAILING.get(name, 1)
+
+
+def _join_axes(ax, extra):
+    """Combine mesh axes on one dim: None+m -> m; ('data',)+m -> ('data', m)."""
+    if ax is None:
+        return extra
+    if isinstance(ax, (tuple, list)):
+        return tuple(ax) + (extra,)
+    return (ax, extra)
+
+
+def cache_shardings(mesh, cfg: ModelConfig, cache_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_pspec(path, leaf, mesh, cfg)),
+        cache_tree,
+    )
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def logits_sharding(mesh, batch: int, vocab: int) -> NamedSharding:
+    """(B, V) logits: batch over dp if divisible, vocab over model."""
+    dp = data_axes(mesh)
+    return NamedSharding(mesh, _fit(mesh, P(dp, MODEL), (batch, vocab)))
+
+
+def activation_constraint_fn(mesh):
+    """Constraint hook for repro.models.hooks: shard dim0 (batch) over the
+    data axes when divisible; leave other dims to propagation."""
+    import jax as _jax
+
+    dp = data_axes(mesh)
+
+    def constrain(x):
+        nd = getattr(x, "ndim", 0)
+        if nd < 2:
+            return x
+        spec = _fit(mesh, _spec(nd, *([dp] + [None] * (nd - 1))), x.shape)
+        return _jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def serve_param_shardings(mesh, params_tree):
+    """Inference-time weights: TP over 'model' only, NO FSDP.
+
+    FSDP'd weights must be all-gathered on every decode step (the dominant
+    decode collective -- EXPERIMENTS.md section Perf iteration on
+    recurrentgemma decode); replicating the data-axis dimension trades
+    HBM (bf16 weights / model-axis shards fit every assigned arch) for the
+    per-token all-gather."""
+
+    def one(path, leaf):
+        spec = param_pspec(path, leaf, mesh)
+        no_fsdp = P(*[None if ax == DATA else ax for ax in spec])
+        return NamedSharding(mesh, _fit(mesh, no_fsdp, tuple(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)

@@ -1,0 +1,36 @@
+"""Model zoo: configs, layers, and the functional model API."""
+
+from .api import (
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    make_inputs,
+    param_specs,
+    prefill,
+    reduced_config,
+)
+from .config import SHAPES, MLAConfig, ModelConfig, MoEConfig, ShapeSpec, shape_applicable
+
+__all__ = [
+    "SHAPES",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeSpec",
+    "cache_specs",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "input_specs",
+    "loss_fn",
+    "make_inputs",
+    "param_specs",
+    "prefill",
+    "reduced_config",
+    "shape_applicable",
+]

@@ -1,0 +1,113 @@
+"""Public model API: input specs, reduced (smoke) configs, spec helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MLAConfig, MoEConfig, ShapeSpec
+from .layers import COMPUTE_DTYPE
+from . import lm
+
+init_params = lm.init_params
+param_specs = lm.param_specs
+loss_fn = lm.loss_fn
+prefill = lm.prefill
+decode_step = lm.decode_step
+init_cache = lm.init_cache
+forward = lm.forward
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    # batch/max_len must stay static (cache sizes are shape parameters)
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    No device allocation -- exactly what ``.lower()`` needs.  decode cells
+    include the KV/state cache at the cell's seq_len (windowed archs clamp
+    the cache to the window internally)."""
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    if spec.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE
+            )
+        if cfg.vision_prefix:
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix, cfg.d_model), COMPUTE_DTYPE
+            )
+        return {"batch": batch}
+    # decode: one new token against a cache of size seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "positions": jax.ShapeDtypeStruct((b, 1), i32),
+    }
+    return {"batch": batch, "cache": cache_specs(cfg, b, s)}
+
+
+def make_inputs(cfg: ModelConfig, spec: ShapeSpec, rng) -> dict:
+    """Concrete (small-scale) inputs matching input_specs -- smoke tests."""
+    specs = input_specs(cfg, spec)
+
+    def materialize(sd: jax.ShapeDtypeStruct):
+        if jnp.issubdtype(sd.dtype, jnp.integer):
+            return jax.random.randint(rng, sd.shape, 0, max(cfg.vocab - 1, 2)).astype(sd.dtype)
+        return jnp.zeros(sd.shape, sd.dtype)
+
+    out = jax.tree.map(materialize, specs)
+    if spec.kind == "decode":
+        out["cache"] = lm.init_cache(cfg, spec.global_batch, spec.seq_len)
+        out["batch"]["positions"] = jnp.full(
+            (spec.global_batch, 1), spec.seq_len - 1, jnp.int32
+        )
+    return out
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Same family/feature set, tiny dims -- one CPU forward/train step."""
+    changes: dict = dict(
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        rwkv_head_dim=32,
+    )
+    if cfg.family == "rglru":
+        changes["n_layers"] = len(cfg.block_pattern) + 1  # pattern + tail
+        changes["lru_width"] = 128
+        changes["window"] = 16
+    elif cfg.family == "encdec":
+        changes["n_layers"] = 2
+        changes["n_enc_layers"] = 2
+        changes["enc_seq"] = 16
+    else:
+        changes["n_layers"] = 2
+    if cfg.moe is not None:
+        changes["moe"] = MoEConfig(
+            n_experts=8,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=128,
+            n_shared=min(cfg.moe.n_shared, 1),
+            d_ff_shared=128,
+        )
+        changes["n_dense_layers"] = min(cfg.n_dense_layers, 1)
+    if cfg.mla is not None:
+        changes["mla"] = MLAConfig(
+            q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16,
+            v_head_dim=32,
+        )
+    if cfg.attn_kind == "swa":
+        changes["window"] = 16
+    if cfg.vision_prefix:
+        changes["vision_prefix"] = 8
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **changes)

@@ -1,0 +1,46 @@
+"""Activation-sharding hook.
+
+Models call ``constrain(x)`` on the residual stream (after embedding, after
+every block, on decode steps).  By default it is the identity; the launcher
+registers a ``with_sharding_constraint`` under its mesh so GSPMD keeps the
+batch dim of loop carries sharded over the data axes instead of replicating
+them inside ``lax.scan`` bodies (observed: without the constraint the SPMD
+partitioner replicates the (B, S, D) carry and every attention tensor in the
+layer loop -- EXPERIMENTS.md section Perf, iteration 1).
+
+The hook keeps ``repro.models`` free of any dependency on mesh/layout code.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_CONSTRAIN: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def set_constraint(fn: Optional[Callable[[jax.Array], jax.Array]]) -> None:
+    global _CONSTRAIN
+    _CONSTRAIN = fn
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    if _CONSTRAIN is None:
+        return x
+    return _CONSTRAIN(x)
+
+
+class activation_sharding:
+    """Context manager: register a constraint function."""
+
+    def __init__(self, fn: Callable[[jax.Array], jax.Array]):
+        self.fn = fn
+
+    def __enter__(self):
+        set_constraint(self.fn)
+        return self
+
+    def __exit__(self, *exc):
+        set_constraint(None)
+        return False

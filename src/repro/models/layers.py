@@ -1,0 +1,427 @@
+"""Shared neural building blocks (pure-JAX, no flax).
+
+Conventions:
+  * params are pytrees of fp32 arrays (master copy); ``apply`` functions cast
+    to the compute dtype (bf16 by default) at the edges and keep
+    norms/softmax in fp32,
+  * all sequence mixers support three modes: train/prefill over a full
+    sequence (optionally blockwise for long context) and single-token decode
+    against a cache,
+  * weights are stored (d_in, d_out) so the TP sharding rules in
+    launch/shardings.py can pattern-match on path names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, ModelConfig, MoEConfig
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init(rng, shape, scale=0.02):
+    return scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)  # (dim/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S,1,dim/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ModelConfig, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": _init(k1, (d_model, d_ff)),
+            "w_up": _init(k2, (d_model, d_ff)),
+            "w_down": _init(k3, (d_ff, d_model)),
+        }
+    return {"w_up": _init(k1, (d_model, d_ff)), "w_down": _init(k2, (d_ff, d_model))}
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense attention (GQA; full / sliding-window / local), train + decode
+# ---------------------------------------------------------------------------
+
+BLOCKWISE_THRESHOLD = 8_192  # above this, use the kv-chunked online-softmax path
+KV_CHUNK = 1_024
+
+
+def set_blockwise_threshold(n: int) -> None:
+    "Perf knob: sequence length above which attention goes kv-chunked."
+    global BLOCKWISE_THRESHOLD
+    BLOCKWISE_THRESHOLD = n
+
+
+def attention_init(rng, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "w_q": _init(k1, (d, cfg.n_heads * hd)),
+        "w_k": _init(k2, (d, cfg.n_kv_heads * hd)),
+        "w_v": _init(k3, (d, cfg.n_kv_heads * hd)),
+        "w_o": _init(k4, (cfg.n_heads * hd, d)),
+    }
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """(..., Sq, Sk) additive mask in fp32."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window > 0:
+        ok &= q_pos[..., :, None] - k_pos[..., None, :] < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """q:(B,Sq,H,D) k,v:(B,Sk,Hkv,D) bias:(B,Sq,Sk) -> (B,Sq,H,D)."""
+    h, hkv = q.shape[2], k.shape[2]
+    group = h // hkv
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    qg = q.reshape(q.shape[0], q.shape[1], hkv, group, q.shape[3])
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    scores = scores + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(q.shape)
+
+
+def _sdpa_blockwise(q, k, v, q_pos, k_pos, *, causal: bool, window: int):
+    """kv-chunked online-softmax attention: O(Sq * chunk) live memory.
+
+    Scans kv chunks, maintaining (m, l, acc) running max / normalizer /
+    weighted accumulator per query -- the flash-attention recurrence in pure
+    jnp (a Pallas kernel would fuse this on real TPUs; the lowered scan keeps
+    peak activation memory bounded for the 32k/500k shape cells).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    sk = k.shape[1]
+    n_chunks = -(-sk // KV_CHUNK)
+    pad = n_chunks * KV_CHUNK - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, KV_CHUNK, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, KV_CHUNK, hkv, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, n_chunks, KV_CHUNK).transpose(1, 0, 2)
+    qg = q.reshape(b, sq, hkv, group, d)
+    scale = 1.0 / np.sqrt(d)
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kb, vb, pb = chunk
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32) * scale
+        bias = _mask_bias(q_pos, pb, causal=causal, window=window)
+        scores = scores + bias[:, None, None]
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    positions,
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[dict] = None,
+    kv_override: Optional[tuple] = None,
+    n_kv_heads: Optional[int] = None,
+):
+    """GQA attention.  cache (decode): {"k","v","pos","index"} ring/linear
+    buffer updated functionally.  kv_override: (k, v, k_pos) for
+    cross-attention (encoder outputs).  Returns (out, new_cache)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    n_kv = n_kv_heads if n_kv_heads is not None else cfg.n_kv_heads
+    q = (x @ p["w_q"].astype(dt)).reshape(b, s, -1, hd)
+    if kv_override is None:
+        k = (x @ p["w_k"].astype(dt)).reshape(b, s, n_kv, hd)
+        v = (x @ p["w_v"].astype(dt)).reshape(b, s, n_kv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v, k_positions = kv_override
+    new_cache = None
+    if cache is not None and kv_override is None:
+        # single-token (or short) decode append into a ring buffer
+        idx = cache["index"]
+        size = cache["k"].shape[1]
+        slot = jax.lax.rem(idx + jnp.arange(s), size)
+        ck = cache["k"].at[:, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slot].set(v.astype(cache["v"].dtype))
+        cpos = cache["pos"].at[:, slot].set(positions.astype(cache["pos"].dtype))
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "index": idx + s}
+        k, v, k_positions = ck.astype(dt), cv.astype(dt), cpos
+        bias = _mask_bias(positions, k_positions, causal=True, window=window)
+        out = _sdpa(q, k, v, bias)
+    elif kv_override is not None:
+        bias = _mask_bias(positions, k_positions, causal=False, window=0)
+        out = _sdpa(q, k, v, bias)
+    else:
+        if s > BLOCKWISE_THRESHOLD:
+            out = _sdpa_blockwise(
+                q, k, v, positions, positions, causal=causal, window=window
+            )
+        else:
+            bias = _mask_bias(positions, positions, causal=causal, window=window)
+            out = _sdpa(q, k, v, bias)
+    return out.reshape(b, s, -1) @ p["w_o"].astype(dt), new_cache
+
+
+def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    """Ring-buffer cache; windowed attention only keeps ``window`` slots."""
+    size = min(max_len, window) if window > 0 else max_len
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+        # empty slots sit in the "future" so the causal mask excludes them
+        "pos": jnp.full((batch, size), 2**30, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE (grouped dense dispatch, Mesh-TF style; EP-shardable einsums)
+# ---------------------------------------------------------------------------
+
+MOE_GROUP = 256  # tokens per dispatch group
+
+
+def moe_init(rng, cfg: ModelConfig, moe: MoEConfig):
+    d = cfg.d_model
+    keys = jax.random.split(rng, 5)
+    mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+    p = {
+        "router": _init(keys[0], (d, moe.n_experts), scale=0.01),
+        "w_gate": _init(keys[1], (moe.n_experts, d, moe.d_ff_expert)),
+        "w_up": _init(keys[2], (moe.n_experts, d, moe.d_ff_expert)),
+        "w_down": _init(keys[3], (moe.n_experts, moe.d_ff_expert, d)),
+    }
+    if mult == 2:
+        del p["w_up"]
+    if moe.n_shared:
+        p["shared"] = mlp_init(keys[4], cfg, d, moe.d_ff_shared * moe.n_shared)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x, moe: MoEConfig):
+    """Grouped dense dispatch: tokens -> (expert, capacity) slots via one-hot
+    einsums (collective-clean under GSPMD; the expert axis shards over the
+    mesh 'model' axis for EP).  Returns (y, aux_loss)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    n_tok = b * s
+    g = max(n_tok // MOE_GROUP, 1)
+    xt = x.reshape(g, -1, d)  # (G, Sg, D)
+    sg = xt.shape[1]
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)  # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, moe.top_k)  # (G,Sg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )  # renormalize
+    cap = int(max(sg * moe.top_k / moe.n_experts * moe.capacity_factor, 4))
+    onehot = jax.nn.one_hot(idx, moe.n_experts, dtype=jnp.float32)  # (G,Sg,K,E)
+    pos = (jnp.cumsum(onehot.reshape(g, sg * moe.top_k, moe.n_experts), axis=1) - 1.0)
+    pos = pos.reshape(g, sg, moe.top_k, moe.n_experts) * onehot
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) * keep[
+        ..., None
+    ]
+    # dispatch: (G,Sg,K,E,C) x (G,Sg,D) -> (G,E,C,D)
+    dispatch = pos_oh  # (G,Sg,K,E,C)
+    xe = jnp.einsum("gskec,gsd->gecd", dispatch.astype(dt), xt)
+    act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+    if "w_up" in p:
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    combine = (dispatch * gate_vals[..., None, None]).astype(dt)  # (G,Sg,K,E,C)
+    y = jnp.einsum("gskec,gecd->gsd", combine, ye)
+    # Switch-style load-balancing auxiliary loss
+    density = onehot.mean(axis=(1, 2))  # (G,E) fraction routed
+    density_probs = probs.mean(axis=1)  # (G,E)
+    aux = (density * density_probs).sum(-1).mean() * (moe.n_experts**2 / moe.top_k)
+    if moe.n_shared:
+        y = y + mlp_apply(cfg, p["shared"], xt)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention) with compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig, mla: MLAConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(rng, 8)
+    qk = mla.qk_nope_dim + mla.qk_rope_dim
+    return {
+        "w_dq": _init(keys[0], (d, mla.q_lora_rank)),
+        "q_norm": jnp.ones((mla.q_lora_rank,), jnp.float32),
+        "w_uq": _init(keys[1], (mla.q_lora_rank, h * qk)),
+        "w_dkv": _init(keys[2], (d, mla.kv_lora_rank)),
+        "kv_norm": jnp.ones((mla.kv_lora_rank,), jnp.float32),
+        "w_kr": _init(keys[3], (d, mla.qk_rope_dim)),
+        "w_uk": _init(keys[4], (mla.kv_lora_rank, h * mla.qk_nope_dim)),
+        "w_uv": _init(keys[5], (mla.kv_lora_rank, h * mla.v_head_dim)),
+        "w_o": _init(keys[6], (h * mla.v_head_dim, d)),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, *, positions, cache=None):
+    """Returns (out, new_cache); cache = compressed (c_kv, k_rope) -- the
+    paper-faithful memory win (kv_lora + rope dims per token, not 2*H*hd)."""
+    mla = cfg.mla
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(x @ p["w_dq"].astype(dt), p["q_norm"])
+    q = (cq @ p["w_uq"].astype(dt)).reshape(b, s, h, -1)
+    q_nope, q_rope = jnp.split(q, [mla.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rmsnorm(x @ p["w_dkv"].astype(dt), p["kv_norm"])  # (b,s,kv_lora)
+    krope = apply_rope(
+        (x @ p["w_kr"].astype(dt)).reshape(b, s, 1, mla.qk_rope_dim),
+        positions,
+        cfg.rope_theta,
+    )
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        size = cache["ckv"].shape[1]
+        slot = jax.lax.rem(idx + jnp.arange(s), size)
+        cckv = cache["ckv"].at[:, slot].set(ckv.astype(cache["ckv"].dtype))
+        ckr = cache["krope"].at[:, slot].set(krope[:, :, 0].astype(cache["krope"].dtype))
+        cpos = cache["pos"].at[:, slot].set(positions.astype(jnp.int32))
+        new_cache = {"ckv": cckv, "krope": ckr, "pos": cpos, "index": idx + s}
+        ckv_all, krope_all, k_pos = cckv.astype(dt), ckr.astype(dt), cpos
+    else:
+        ckv_all, krope_all, k_pos = ckv, krope[:, :, 0], positions
+    k_nope = (ckv_all @ p["w_uk"].astype(dt)).reshape(b, -1, h, mla.qk_nope_dim)
+    v = (ckv_all @ p["w_uv"].astype(dt)).reshape(b, -1, h, mla.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_all[:, :, None], k_nope.shape[:3] + (mla.qk_rope_dim,))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    bias = _mask_bias(positions, k_pos, causal=True, window=0)
+    if s > BLOCKWISE_THRESHOLD and cache is None:
+        out = _sdpa_blockwise(q_full, k, v_pad(v, k), positions, k_pos, causal=True, window=0)
+        out = out[..., : mla.v_head_dim]
+    else:
+        out = _sdpa_mixed(q_full, k, v, bias)
+    return out.reshape(b, s, -1) @ p["w_o"].astype(dt), new_cache
+
+
+def v_pad(v, k):
+    """Pad v head_dim up to k's head_dim so the blockwise kernel (which
+    assumes equal q/k/v dims) can be reused; caller slices back."""
+    pad = k.shape[-1] - v.shape[-1]
+    if pad <= 0:
+        return v
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+def _sdpa_mixed(q, k, v, bias):
+    """MHA attention where v head dim differs from qk head dim."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = scores + bias[:, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    mla = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, mla.kv_lora_rank), COMPUTE_DTYPE),
+        "krope": jnp.zeros((batch, max_len, mla.qk_rope_dim), COMPUTE_DTYPE),
+        # empty slots sit in the "future" so the causal mask excludes them
+        "pos": jnp.full((batch, max_len), 2**30, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }

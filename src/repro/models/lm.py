@@ -1,0 +1,576 @@
+"""Model assembly: init / train forward / decode for every assigned family.
+
+Uniform functional API (used by train/serve steps, the dry-run and tests):
+
+    params     = init_params(cfg, rng)
+    loss, aux  = loss_fn(cfg, params, batch)            # train_4k
+    logits     = prefill(cfg, params, batch)            # prefill_32k
+    cache      = init_cache(cfg, batch, max_len)
+    logits, c  = decode_step(cfg, params, cache, batch) # decode_32k/long_500k
+
+Layers are stacked (leading layer axis) and driven by jax.lax.scan with
+per-layer remat -- HLO size and compile memory stay bounded for 40-60-layer
+models, and the dry-run's 512-device lowering stays fast.  Cross-entropy is
+computed in sequence chunks so the (B, S, V) logits tensor is never
+materialized (V up to 256k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .hooks import constrain
+from .layers import (
+    COMPUTE_DTYPE,
+    _init,
+    attention_apply,
+    attention_cache_init,
+    attention_init,
+    mla_apply,
+    mla_cache_init,
+    mla_init,
+    mlp_apply,
+    mlp_init,
+    moe_apply,
+    moe_init,
+    norm_apply,
+    norm_init,
+)
+from .recurrent import (
+    rglru_apply,
+    rglru_init,
+    rglru_state_init,
+    rwkv6_channelmix_apply,
+    rwkv6_channelmix_init,
+    rwkv6_state_init,
+    rwkv6_timemix_apply,
+    rwkv6_timemix_init,
+)
+
+CE_CHUNK = 256
+
+_REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+_remat_policy_name = "nothing"
+
+
+def set_remat_policy(name: str) -> None:
+    "Perf knob (EXPERIMENTS.md section Perf): which residuals remat saves."
+    assert name in _REMAT_POLICIES, name
+    global _remat_policy_name
+    _remat_policy_name = name
+
+
+def _remat_policy():
+    return _REMAT_POLICIES[_remat_policy_name]
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply per family
+# ---------------------------------------------------------------------------
+
+
+def _lm_block_init(rng, cfg: ModelConfig, *, use_moe: bool):
+    keys = jax.random.split(rng, 4)
+    p = {"norm1": norm_init(cfg, cfg.d_model), "norm2": norm_init(cfg, cfg.d_model)}
+    if cfg.mla is not None:
+        p["mla"] = mla_init(keys[0], cfg, cfg.mla)
+    else:
+        p["attn"] = attention_init(keys[0], cfg)
+    if use_moe:
+        p["moe"] = moe_init(keys[1], cfg, cfg.moe)
+    else:
+        p["mlp"] = mlp_init(keys[1], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _lm_block_apply(cfg: ModelConfig, p, x, positions, cache=None):
+    window = cfg.window if cfg.attn_kind == "swa" else 0
+    h = norm_apply(cfg, p["norm1"], x)
+    if cfg.mla is not None:
+        attn_out, new_cache = mla_apply(cfg, p["mla"], h, positions=positions, cache=cache)
+    else:
+        attn_out, new_cache = attention_apply(
+            cfg, p["attn"], h, positions=positions, causal=True, window=window, cache=cache
+        )
+    x = x + attn_out
+    h = norm_apply(cfg, p["norm2"], x)
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        mlp_out, aux = moe_apply(cfg, p["moe"], h, cfg.moe)
+    else:
+        mlp_out = mlp_apply(cfg, p["mlp"], h)
+    return x + mlp_out, aux, new_cache
+
+
+def _rglru_block_init(rng, cfg: ModelConfig, kind: str):
+    keys = jax.random.split(rng, 3)
+    p = {"norm1": norm_init(cfg, cfg.d_model), "norm2": norm_init(cfg, cfg.d_model)}
+    if kind == "rec":
+        p["rec"] = rglru_init(keys[0], cfg)
+    else:
+        p["attn"] = attention_init(keys[0], cfg)
+    p["mlp"] = mlp_init(keys[1], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _rglru_block_apply(cfg: ModelConfig, p, x, positions, kind: str, state=None):
+    h = norm_apply(cfg, p["norm1"], x)
+    if kind == "rec":
+        mix_out, new_state = rglru_apply(cfg, p["rec"], h, state=state)
+    else:
+        mix_out, new_state = attention_apply(
+            cfg, p["attn"], h, positions=positions, causal=True,
+            window=cfg.window, cache=state,
+        )
+    x = x + mix_out
+    h = norm_apply(cfg, p["norm2"], x)
+    return x + mlp_apply(cfg, p["mlp"], h), new_state
+
+
+def _rwkv_block_init(rng, cfg: ModelConfig):
+    keys = jax.random.split(rng, 2)
+    return {
+        "norm1": norm_init(cfg, cfg.d_model),
+        "norm2": norm_init(cfg, cfg.d_model),
+        "time": rwkv6_timemix_init(keys[0], cfg),
+        "channel": rwkv6_channelmix_init(keys[1], cfg),
+    }
+
+
+def _rwkv_block_apply(cfg: ModelConfig, p, x, state=None):
+    tstate = None if state is None else state["time"]
+    cstate = None if state is None else state["channel"]
+    h, new_t = rwkv6_timemix_apply(cfg, p["time"], norm_apply(cfg, p["norm1"], x), state=tstate)
+    x = x + h
+    h, new_c = rwkv6_channelmix_apply(
+        cfg, p["channel"], norm_apply(cfg, p["norm2"], x), state=cstate
+    )
+    return x + h, {"time": new_t, "channel": new_c}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, rng, n: int):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    keys = jax.random.split(rng, 8)
+    d = cfg.d_model
+    params: dict = {
+        "embed": _init(keys[0], (cfg.vocab, d)),
+        "final_norm": norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(keys[1], (d, cfg.vocab))
+    if cfg.family == "lm":
+        n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else 0
+        n_dense = cfg.n_layers - n_moe
+        if n_dense:
+            params["dense_blocks"] = _stack_init(
+                lambda r: _lm_block_init(r, cfg, use_moe=False), keys[2], n_dense
+            )
+        if n_moe:
+            params["blocks"] = _stack_init(
+                lambda r: _lm_block_init(r, cfg, use_moe=True), keys[3], n_moe
+            )
+    elif cfg.family == "rglru":
+        pat = cfg.block_pattern
+        n_super, n_tail = divmod(cfg.n_layers, len(pat))
+        params["super_blocks"] = _stack_init(
+            lambda r: {
+                f"l{i}": _rglru_block_init(k, cfg, kind)
+                for i, (kind, k) in enumerate(zip(pat, jax.random.split(r, len(pat))))
+            },
+            keys[2],
+            n_super,
+        )
+        if n_tail:
+            params["tail_blocks"] = _stack_init(
+                lambda r: _rglru_block_init(r, cfg, pat[0]), keys[3], n_tail
+            )
+    elif cfg.family == "rwkv6":
+        params["blocks"] = _stack_init(lambda r: _rwkv_block_init(r, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "encdec":
+        params["enc_blocks"] = _stack_init(
+            lambda r: {
+                "norm1": norm_init(cfg, d),
+                "norm2": norm_init(cfg, d),
+                "attn": attention_init(jax.random.split(r)[0], cfg),
+                "mlp": mlp_init(jax.random.split(r)[1], cfg, d, cfg.d_ff),
+            },
+            keys[2],
+            cfg.n_enc_layers,
+        )
+        params["enc_final_norm"] = norm_init(cfg, d)
+        params["blocks"] = _stack_init(
+            lambda r: {
+                "norm1": norm_init(cfg, d),
+                "norm2": norm_init(cfg, d),
+                "norm3": norm_init(cfg, d),
+                "attn": attention_init(jax.random.split(r, 3)[0], cfg),
+                "cross": attention_init(jax.random.split(r, 3)[1], cfg),
+                "mlp": mlp_init(jax.random.split(r, 3)[2], cfg, d, cfg.d_ff),
+            },
+            keys[3],
+            cfg.n_layers,
+        )
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(positions, d):
+    half = d // 2
+    freqs = np.exp(-np.log(10_000.0) * np.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _scan_blocks(cfg, stacked, x, positions, apply_fn):
+    """remat + scan over stacked layer params; accumulates aux loss."""
+
+    block = jax.checkpoint(apply_fn, policy=_remat_policy(), static_argnums=())
+
+    def f(carry, layer_p):
+        h, aux = carry
+        h, aux_l = block(layer_p, h, positions)
+        return (constrain(h), aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(f, (constrain(x), jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, batch: dict):
+    """Full-sequence forward -> final hidden states (B, S, D) and aux loss.
+
+    batch: {"tokens": (B,S) int32} plus family extras:
+      encdec: {"frames": (B, enc_seq, D)}   (stub audio frontend output)
+      vlm:    {"patches": (B, vision_prefix, D)} (stub vision tower output)
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dt = COMPUTE_DTYPE
+    x = constrain(jnp.take(params["embed"], tokens, axis=0).astype(dt))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    n_prefix = 0
+    if cfg.vision_prefix and "patches" in batch:
+        prefix = batch["patches"].astype(dt)
+        n_prefix = prefix.shape[1]
+        x = jnp.concatenate([prefix, x], axis=1)
+        positions = jnp.broadcast_to(
+            jnp.arange(s + n_prefix, dtype=jnp.int32), (b, s + n_prefix)
+        )
+    aux = jnp.float32(0.0)
+    if cfg.family == "lm":
+        if "dense_blocks" in params:
+            x, a = _scan_blocks(
+                cfg, params["dense_blocks"], x, positions,
+                lambda p, h, pos: _lm_block_apply(cfg, p, h, pos)[:2],
+            )
+            aux += a
+        if "blocks" in params:
+            x, a = _scan_blocks(
+                cfg, params["blocks"], x, positions,
+                lambda p, h, pos: _lm_block_apply(cfg, p, h, pos)[:2],
+            )
+            aux += a
+    elif cfg.family == "rglru":
+        pat = cfg.block_pattern
+
+        def super_apply(p, h, pos):
+            for i, kind in enumerate(pat):
+                h, _ = _rglru_block_apply(cfg, p[f"l{i}"], h, pos, kind)
+            return h, jnp.float32(0.0)
+
+        x, _ = _scan_blocks(cfg, params["super_blocks"], x, positions, super_apply)
+        if "tail_blocks" in params:
+            x, _ = _scan_blocks(
+                cfg, params["tail_blocks"], x, positions,
+                lambda p, h, pos: (_rglru_block_apply(cfg, p, h, pos, pat[0])[0], jnp.float32(0.0)),
+            )
+    elif cfg.family == "rwkv6":
+        x, _ = _scan_blocks(
+            cfg, params["blocks"], x, positions,
+            lambda p, h, pos: (_rwkv_block_apply(cfg, p, h)[0], jnp.float32(0.0)),
+        )
+    elif cfg.family == "encdec":
+        enc = _encode(cfg, params, batch["frames"])
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32), enc.shape[:2]
+        )
+        x = x + _sinusoidal(positions, cfg.d_model).astype(dt)
+
+        def dec_apply(p, h, pos):
+            h1 = norm_apply(cfg, p["norm1"], h)
+            a_out, _ = attention_apply(cfg, p["attn"], h1, positions=pos, causal=True)
+            h = h + a_out
+            h2 = norm_apply(cfg, p["norm2"], h)
+            kv = _cross_kv(cfg, p["cross"], enc)
+            c_out, _ = attention_apply(
+                cfg, p["cross"], h2, positions=pos, kv_override=kv + (enc_pos,)
+            )
+            h = h + c_out
+            h3 = norm_apply(cfg, p["norm3"], h)
+            return h + mlp_apply(cfg, p["mlp"], h3), jnp.float32(0.0)
+
+        x, _ = _scan_blocks(cfg, params["blocks"], x, positions, dec_apply)
+    x = norm_apply(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return x, aux
+
+
+def _cross_kv(cfg, p, enc):
+    dt = enc.dtype
+    b, se, _ = enc.shape
+    hd = cfg.head_dim_
+    k = (enc @ p["w_k"].astype(dt)).reshape(b, se, cfg.n_kv_heads, hd)
+    v = (enc @ p["w_v"].astype(dt)).reshape(b, se, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    dt = COMPUTE_DTYPE
+    x = frames.astype(dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = x + _sinusoidal(positions, cfg.d_model).astype(dt)
+
+    def enc_apply(p, h, pos):
+        h1 = norm_apply(cfg, p["norm1"], h)
+        a_out, _ = attention_apply(cfg, p["attn"], h1, positions=pos, causal=False)
+        h = h + a_out
+        h2 = norm_apply(cfg, p["norm2"], h)
+        return h + mlp_apply(cfg, p["mlp"], h2), jnp.float32(0.0)
+
+    x, _ = _scan_blocks(cfg, params["enc_blocks"], x, positions, enc_apply)
+    return norm_apply(cfg, params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy) and prefill
+# ---------------------------------------------------------------------------
+
+
+def _lm_head(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_ce(cfg, params, hidden, targets, mask):
+    """Mean next-token CE without materializing (B, S, V)."""
+    head = _lm_head(cfg, params).astype(COMPUTE_DTYPE)
+    b, s, d = hidden.shape
+    n = -(-s // CE_CHUNK)
+    pad = n * CE_CHUNK - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = hidden.reshape(b, n, CE_CHUNK, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n, CE_CHUNK).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, CE_CHUNK).transpose(1, 0, 2)
+
+    def step(acc, inp):
+        h, t, m = inp
+        logits = (h @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (acc[0] + nll.sum(), acc[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(step, policy=_remat_policy()),
+        (jnp.float32(0.0), jnp.float32(0.0)),
+        (hc, tc, mc),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict):
+    hidden, aux = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [
+            jnp.ones(tokens[:, 1:].shape, jnp.float32),
+            jnp.zeros(tokens[:, :1].shape, jnp.float32),
+        ],
+        axis=1,
+    )
+    ce = chunked_ce(cfg, params, hidden, targets, mask)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch: dict):
+    """Full-prompt forward returning last-position logits (B, V)."""
+    hidden, _ = forward(cfg, params, batch)
+    head = _lm_head(cfg, params).astype(COMPUTE_DTYPE)
+    return (hidden[:, -1] @ head).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode (cache init + single-token step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "lm":
+        n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else 0
+        n_dense = cfg.n_layers - n_moe
+        window = cfg.window if cfg.attn_kind == "swa" else 0
+
+        def one(_):
+            if cfg.mla is not None:
+                return mla_cache_init(cfg, batch, max_len)
+            return attention_cache_init(cfg, batch, max_len, window)
+
+        cache = {}
+        if n_dense:
+            cache["dense_blocks"] = jax.vmap(one)(jnp.arange(n_dense))
+        if n_moe:
+            cache["blocks"] = jax.vmap(one)(jnp.arange(n_moe))
+        return cache
+    if cfg.family == "rglru":
+        pat = cfg.block_pattern
+        n_super, n_tail = divmod(cfg.n_layers, len(pat))
+
+        def one_super(_):
+            return {
+                f"l{i}": (
+                    rglru_state_init(cfg, batch)
+                    if kind == "rec"
+                    else attention_cache_init(cfg, batch, max_len, cfg.window)
+                )
+                for i, kind in enumerate(pat)
+            }
+
+        cache = {"super_blocks": jax.vmap(one_super)(jnp.arange(n_super))}
+        if n_tail:
+            cache["tail_blocks"] = jax.vmap(lambda _: rglru_state_init(cfg, batch))(
+                jnp.arange(n_tail)
+            )
+        return cache
+    if cfg.family == "rwkv6":
+        return {
+            "blocks": jax.vmap(lambda _: rwkv6_state_init(cfg, batch))(
+                jnp.arange(cfg.n_layers)
+            )
+        }
+    if cfg.family == "encdec":
+        # cross-attention K/V are recomputed from cached encoder output
+        return {
+            "blocks": jax.vmap(
+                lambda _: attention_cache_init(cfg, batch, max_len, 0)
+            )(jnp.arange(cfg.n_layers)),
+            "enc_out": jnp.zeros((batch, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE),
+        }
+    raise ValueError(cfg.family)
+
+
+def _scan_decode(stacked_params, stacked_cache, x, step_fn):
+    def f(h, inp):
+        layer_p, layer_c = inp
+        h, new_c = step_fn(layer_p, layer_c, h)
+        return constrain(h), new_c
+
+    return jax.lax.scan(f, constrain(x), (stacked_params, stacked_cache))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch: dict):
+    """One-token step.  batch: {"tokens": (B,1), "positions": (B,1)}.
+    Returns (logits (B, V) fp32, new_cache)."""
+    tokens, positions = batch["tokens"], batch["positions"]
+    dt = COMPUTE_DTYPE
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    new_cache = {}
+    if cfg.family == "lm":
+        def step(p, c, h):
+            h, _, nc = _lm_block_apply(cfg, p, h, positions, cache=c)
+            return h, nc
+
+        if "dense_blocks" in params:
+            x, nc = _scan_decode(params["dense_blocks"], cache["dense_blocks"], x, step)
+            new_cache["dense_blocks"] = nc
+        if "blocks" in params:
+            x, nc = _scan_decode(params["blocks"], cache["blocks"], x, step)
+            new_cache["blocks"] = nc
+    elif cfg.family == "rglru":
+        pat = cfg.block_pattern
+
+        def super_step(p, c, h):
+            new_c = {}
+            for i, kind in enumerate(pat):
+                h, new_c[f"l{i}"] = _rglru_block_apply(
+                    cfg, p[f"l{i}"], h, positions, kind, state=c[f"l{i}"]
+                )
+            return h, new_c
+
+        x, nc = _scan_decode(params["super_blocks"], cache["super_blocks"], x, super_step)
+        new_cache["super_blocks"] = nc
+        if "tail_blocks" in params:
+            def tail_step(p, c, h):
+                return _rglru_block_apply(cfg, p, h, positions, pat[0], state=c)
+
+            x, nc = _scan_decode(params["tail_blocks"], cache["tail_blocks"], x, tail_step)
+            new_cache["tail_blocks"] = nc
+    elif cfg.family == "rwkv6":
+        def step(p, c, h):
+            return _rwkv_block_apply(cfg, p, h, state=c)
+
+        x, nc = _scan_decode(params["blocks"], cache["blocks"], x, step)
+        new_cache["blocks"] = nc
+    elif cfg.family == "encdec":
+        enc = cache["enc_out"].astype(dt)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32), enc.shape[:2]
+        )
+        x = x + _sinusoidal(positions, cfg.d_model).astype(dt)
+
+        def step(p, c, h):
+            h1 = norm_apply(cfg, p["norm1"], h)
+            a_out, nc = attention_apply(
+                cfg, p["attn"], h1, positions=positions, causal=True, cache=c
+            )
+            h = h + a_out
+            h2 = norm_apply(cfg, p["norm2"], h)
+            kv = _cross_kv(cfg, p["cross"], enc)
+            c_out, _ = attention_apply(
+                cfg, p["cross"], h2, positions=positions, kv_override=kv + (enc_pos,)
+            )
+            h = h + c_out
+            h3 = norm_apply(cfg, p["norm3"], h)
+            return h + mlp_apply(cfg, p["mlp"], h3), nc
+
+        x, nc = _scan_decode(params["blocks"], cache["blocks"], x, step)
+        new_cache = {"blocks": nc, "enc_out": cache["enc_out"]}
+    x = norm_apply(cfg, params["final_norm"], x)
+    head = _lm_head(cfg, params).astype(dt)
+    logits = (x[:, -1] @ head).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,285 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV6.
+
+Both are linear recurrences, so the train path avoids token-by-token scans:
+
+  * RG-LRU: elementwise h_t = a_t * h_{t-1} + b_t -> jax.lax.associative_scan
+    (log-depth, TPU-friendly).
+  * RWKV6: matrix-state S_t = diag(w_t) S_{t-1} + k_t v_t^T -> chunked linear
+    attention (scan over chunks of CHUNK tokens, einsums within a chunk),
+    the standard O(T/C) formulation with log-space cumulative decays.
+
+Decode paths carry constant-size state: (B, width) for RG-LRU, the conv1d
+tail, and (B, H, dk, dv) for RWKV6 -- this is why these archs run the
+long_500k cell (DESIGN.md section 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init, rmsnorm
+
+RWKV_CHUNK = 128
+LRU_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: in-proj -> conv1d -> RG-LRU -> gate)
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    keys = jax.random.split(rng, 7)
+    # a_param initialised so a = sigmoid(a_param) in [0.9, 0.999]-ish
+    a_init = jnp.log(jnp.expm1(-(jnp.log(jnp.linspace(0.9, 0.999, w)))))
+    return {
+        "w_x": _init(keys[0], (d, w)),
+        "w_gate": _init(keys[1], (d, w)),
+        "conv_w": _init(keys[2], (CONV_WIDTH, w)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_rg": _init(keys[3], (w, w)),  # recurrence gate
+        "w_ig": _init(keys[4], (w, w)),  # input gate
+        "a_param": -a_init.astype(jnp.float32),
+        "w_out": _init(keys[5], (w, d)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d, width CONV_WIDTH.  state: (B, W-1, C) tail of
+    the previous tokens (decode).  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width)
+    ) + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1) :]
+    return y, new_state
+
+
+def rglru_apply(cfg: ModelConfig, p, x, *, state=None):
+    """x: (B,S,D).  state (decode): {"h": (B,W), "conv": (B,3,W)}.
+    Returns (out, new_state)."""
+    dt = x.dtype
+    xb = x @ p["w_x"].astype(dt)  # (B,S,W)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid((xc @ p["w_rg"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ p["w_ig"].astype(dt)).astype(jnp.float32))
+    log_a = -LRU_C * r * jax.nn.softplus(p["a_param"])  # (B,S,W) fp32, <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    if state is None:
+        # associative scan over the linear recurrence h_t = a_t h_{t-1} + b_t
+        def combine(l, r_):
+            (al, bl), (ar, br) = l, r_
+            return al * ar, br + ar * bl
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_h = h[:, -1]
+    else:
+        h_prev = state["h"].astype(jnp.float32)  # (B,W)
+
+        def step(hc, ab):
+            at, bt = ab
+            hn = at * hc + bt
+            return hn, hn
+
+        new_h, hs = jax.lax.scan(
+            step, h_prev, (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+        )
+        h = hs.transpose(1, 0, 2)
+    out = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    new_state = {"h": new_h.astype(jnp.float32), "conv": new_conv.astype(jnp.float32)}
+    return out, new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, w), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 32
+
+
+def rwkv6_timemix_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    keys = jax.random.split(rng, 12)
+    return {
+        "mix_base": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,w,g shift mixes
+        "mix_lora_a": _init(keys[0], (d, RWKV_LORA * 5)),
+        "mix_lora_b": _init(keys[1], (5, RWKV_LORA, d)),
+        "w_r": _init(keys[2], (d, d)),
+        "w_k": _init(keys[3], (d, d)),
+        "w_v": _init(keys[4], (d, d)),
+        "w_g": _init(keys[5], (d, d)),
+        "w_o": _init(keys[6], (d, d)),
+        "decay_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "decay_lora_a": _init(keys[7], (d, 64)),
+        "decay_lora_b": _init(keys[8], (64, d)),
+        "bonus_u": _init(keys[9], (d,), scale=0.5),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B,1,D) last token of the previous segment (or zeros)."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, head_dim: int, state=None):
+    """Chunked WKV: r,k,v (B,S,D); logw (B,S,D) per-channel log-decay (<0);
+    u (D,) bonus.  state: (B,H,dk,dv) carried matrix state.
+    Returns (out (B,S,D), new_state)."""
+    b, s, d = r.shape
+    h = d // head_dim
+    n = -(-s // RWKV_CHUNK)
+    pad = n * RWKV_CHUNK - s
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0)))  # pad decay 0 => w=1
+
+    def hsplit(x_):
+        return x_.reshape(b, n, RWKV_CHUNK, h, head_dim).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = hsplit(r), hsplit(k), hsplit(v), hsplit(logw)
+    # (n, B, H, C, dk/dv) fp32 math
+    rc, kc, vc = rc.astype(jnp.float32), kc.astype(jnp.float32), vc.astype(jnp.float32)
+    wc = wc.astype(jnp.float32)
+    uu = u.reshape(h, head_dim).astype(jnp.float32)
+    s0 = (
+        jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+
+    def chunk_step(S, inp):
+        rb, kb, vb, wb = inp  # (B,H,C,dk) etc.
+        csum = jnp.cumsum(wb, axis=2)  # inclusive cumulative log decay
+        p_incl = csum  # decay from chunk start through token i (inclusive)
+        p_excl = csum - wb  # decay through token i-1
+        # inter-chunk: r_i (decayed-from-state) @ S
+        r_dec = rb * jnp.exp(p_excl)
+        out = jnp.einsum("bhck,bhkv->bhcv", r_dec, S)
+        # intra-chunk, per-channel decay:
+        # scores_{ij} = sum_k r_ik k_jk exp(p_excl_i[k] - p_incl_j[k])  (j < i)
+        #             = <r_i * exp(p_excl_i), k_j * exp(-p_incl_j)>
+        ri = rb * jnp.exp(p_excl)  # p_excl <= 0: bounded
+        # -p_incl >= 0 is unbounded for strong decays; clip at 30 -- pairs
+        # beyond that have true weight exp(p_excl_i - p_incl_j) ~ 0 anyway
+        # (production kernels renormalize per row; fine at smoke/dry scale).
+        kj = kb * jnp.exp(jnp.clip(-p_incl, None, 30.0))
+        scores = jnp.einsum("bhck,bhjk->bhcj", ri, kj)
+        c = rb.shape[2]
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+        out = out + jnp.einsum("bhcj,bhjv->bhcv", scores * tri, vb)
+        # current-token bonus term: (r_i . (u * k_i)) v_i
+        bonus = jnp.einsum("bhck,bhck->bhc", rb, uu[None, :, None, :] * kb)
+        out = out + bonus[..., None] * vb
+        # state update: S' = diag(exp(csum_C)) S + sum_j exp(csum_C - p_incl_j) k_j v_j^T
+        total = csum[:, :, -1:, :]  # (B,H,1,dk)
+        S_new = jnp.exp(total[:, :, 0, :, None]) * S + jnp.einsum(
+            "bhjk,bhjv->bhkv", kb * jnp.exp(total - p_incl), vb
+        )
+        return S_new, out
+
+    S_final, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, n * RWKV_CHUNK, d)[:, :s]
+    return out, S_final
+
+
+def rwkv6_timemix_apply(cfg: ModelConfig, p, x, *, state=None):
+    """state (decode): {"S": (B,H,dk,dv), "prev": (B,1,D)}."""
+    dt = x.dtype
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    prev = (
+        jnp.zeros((b, 1, d), dt) if state is None else state["prev"].astype(dt)
+    )
+    xs = _token_shift(x, prev)
+    # data-dependent shift mixes (5 lora heads: r,k,v,w,g)
+    delta = xs - x
+    lora = jnp.tanh(x @ p["mix_lora_a"].astype(dt)).reshape(b, s, 5, RWKV_LORA)
+    mixes = p["mix_base"].astype(dt)[None, None] + jnp.einsum(
+        "bslr,lrd->bsld", lora, p["mix_lora_b"].astype(dt)
+    )
+    xr, xk, xv, xw, xg = [
+        x + delta * mixes[:, :, i] for i in range(5)
+    ]
+    r = xr @ p["w_r"].astype(dt)
+    k = xk @ p["w_k"].astype(dt)
+    v = xv @ p["w_v"].astype(dt)
+    g = jax.nn.silu(xg @ p["w_g"].astype(dt))
+    decay_in = jnp.tanh(xw @ p["decay_lora_a"].astype(dt)) @ p["decay_lora_b"].astype(dt)
+    logw = -jnp.exp(
+        (p["decay_base"].astype(jnp.float32) + decay_in.astype(jnp.float32))
+    )  # (B,S,D) < 0
+    prev_S = None if state is None else state["S"]
+    wkv, new_S = _wkv_chunked(r, k, v, logw, p["bonus_u"], hd, prev_S)
+    # per-head groupnorm, then the learned output scale
+    wkv = wkv.reshape(b, s, d // hd, hd)
+    wkv = rmsnorm(wkv, jnp.ones((hd,), jnp.float32)).reshape(b, s, d)
+    wkv = wkv.astype(dt) * p["ln_scale"].astype(dt)
+    out = (wkv * g) @ p["w_o"].astype(dt)
+    new_state = {"S": new_S, "prev": x[:, -1:].astype(jnp.float32)}
+    return out, new_state
+
+
+def rwkv6_channelmix_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    keys = jax.random.split(rng, 3)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "w_k": _init(keys[0], (d, cfg.d_ff)),
+        "w_v": _init(keys[1], (cfg.d_ff, d)),
+        "w_r": _init(keys[2], (d, d)),
+    }
+
+
+def rwkv6_channelmix_apply(cfg: ModelConfig, p, x, *, state=None):
+    """state (decode): {"prev": (B,1,D)}."""
+    dt = x.dtype
+    prev = (
+        jnp.zeros((x.shape[0], 1, x.shape[2]), dt)
+        if state is None
+        else state["prev"].astype(dt)
+    )
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["mix_k"].astype(dt)
+    xr = x + (xs - x) * p["mix_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt)))
+    rr = jax.nn.sigmoid(xr @ p["w_r"].astype(dt))
+    out = rr * (kk @ p["w_v"].astype(dt))
+    return out, {"prev": x[:, -1:].astype(jnp.float32)}
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int):
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    return {
+        "time": {
+            "S": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+            "prev": jnp.zeros((batch, 1, d), jnp.float32),
+        },
+        "channel": {"prev": jnp.zeros((batch, 1, d), jnp.float32)},
+    }

@@ -1,0 +1,11 @@
+from .elastic import ElasticCoordinator, MovePlan
+from .failures import FailureDetector, HeartbeatTracker
+from .straggler import StragglerMitigator
+
+__all__ = [
+    "ElasticCoordinator",
+    "FailureDetector",
+    "HeartbeatTracker",
+    "MovePlan",
+    "StragglerMitigator",
+]

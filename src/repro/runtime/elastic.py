@@ -1,0 +1,103 @@
+"""Elastic scaling coordinator: minimal-movement membership changes.
+
+The coordinator owns the authoritative ASURA ``Cluster`` table (the paper's
+temporary-central-node role, section 2.D -- any host can take it over since
+the table is tiny and serializable).  On membership events it produces a
+``MovePlan``: exactly which datum ids (shards / cache entries / checkpoint
+chunks) move where.  ASURA's optimality theorems guarantee the plan is
+minimal; tests/test_runtime.py re-verifies against brute force.
+
+Change detection uses the section 2.D metadata:
+  * removals: a datum is affected iff one of its REMOVE NUMBERS names a
+    segment of the removed node (exact, any capacity mix),
+  * additions: candidates are data whose ADDITION NUMBER is <= the assigned
+    segment number (the sound "<=" rule; the paper's "==" rule is exact only
+    for full-length segment tables -- see DESIGN.md section 7 and
+    tests/test_asura_properties.py::test_p5*), then verified by recompute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Cluster
+from repro.core.asura import addition_number, remove_numbers
+
+
+@dataclasses.dataclass
+class MovePlan:
+    """datum id -> (src node, dst node) for every datum that must move."""
+
+    moves: dict[int, tuple[int, int]]
+
+    @property
+    def n_moves(self) -> int:
+        return len(self.moves)
+
+
+class ElasticCoordinator:
+    def __init__(self, cluster: Cluster, tracked_ids: np.ndarray):
+        self.cluster = cluster
+        self.tracked = np.asarray(tracked_ids, dtype=np.uint32)
+        self._owners = self.cluster.place_nodes(self.tracked)
+        self._an: np.ndarray | None = None  # lazy ADDITION NUMBER cache
+
+    # -- metadata ------------------------------------------------------------
+
+    def _addition_numbers(self) -> np.ndarray:
+        if self._an is None:
+            lengths = self.cluster.seg_lengths()
+            node_of = self.cluster.seg_to_node()
+            self._an = np.array(
+                [addition_number(int(i), lengths, node_of) for i in self.tracked]
+            )
+        return self._an
+
+    # -- events ---------------------------------------------------------------
+
+    def add_node(self, node_id: int, capacity: float) -> MovePlan:
+        """Grow the cluster; move only data captured by the new segments.
+
+        The AN <= f prefilter shrinks the recompute set; each candidate is
+        then verified by recomputing its placement (cheap, O(1))."""
+        an = self._addition_numbers()
+        owners_before = self._owners
+        new_segs = self.cluster.add_node(node_id, capacity)
+        max_seg = max(new_segs)
+        candidates = np.nonzero(an <= max_seg)[0]
+        moves: dict[int, tuple[int, int]] = {}
+        if candidates.size:
+            new_owner = self.cluster.place_nodes(self.tracked[candidates])
+            for idx, owner in zip(candidates, new_owner):
+                if owner != owners_before[idx]:
+                    moves[int(self.tracked[idx])] = (int(owners_before[idx]), int(owner))
+                    self._owners[idx] = owner
+        self._an = None  # ANs shift once their segment is taken; recompute lazily
+        return MovePlan(moves)
+
+    def remove_node(self, node_id: int) -> MovePlan:
+        """Shrink the cluster; move exactly the data the victim held."""
+        owners_before = self._owners
+        victim_rows = np.nonzero(owners_before == node_id)[0]
+        self.cluster.remove_node(node_id)
+        moves: dict[int, tuple[int, int]] = {}
+        if victim_rows.size:
+            new_owner = self.cluster.place_nodes(self.tracked[victim_rows])
+            for idx, owner in zip(victim_rows, new_owner):
+                moves[int(self.tracked[idx])] = (node_id, int(owner))
+                self._owners[idx] = owner
+        self._an = None
+        return MovePlan(moves)
+
+    def remove_numbers_for(self, datum_id: int, n_replicas: int) -> list[int]:
+        return remove_numbers(
+            datum_id,
+            self.cluster.seg_lengths(),
+            self.cluster.seg_to_node(),
+            n_replicas,
+        )
+
+    def owners(self) -> np.ndarray:
+        return self._owners.copy()

@@ -1,0 +1,43 @@
+"""Heartbeat-based failure detection (simulated clock).
+
+A node that misses ``timeout`` of heartbeats is declared dead; the caller
+(launcher / coordinator) then drives the recovery path:
+ElasticCoordinator.remove_node -> checkpoint restore -> resume.  The clock is
+injected so tests are deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HeartbeatTracker:
+    timeout: float
+    clock: Callable[[], float]
+    last_seen: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, node_id: int) -> None:
+        self.last_seen[node_id] = self.clock()
+
+    def dead_nodes(self) -> list[int]:
+        now = self.clock()
+        return [n for n, t in self.last_seen.items() if now - t > self.timeout]
+
+
+class FailureDetector:
+    """Drives detection -> removal -> repair for a checkpoint store or an
+    elastic coordinator."""
+
+    def __init__(self, tracker: HeartbeatTracker, on_failure: Callable[[int], None]):
+        self.tracker = tracker
+        self.on_failure = on_failure
+        self.handled: set[int] = set()
+
+    def poll(self) -> list[int]:
+        newly_dead = [n for n in self.tracker.dead_nodes() if n not in self.handled]
+        for node in newly_dead:
+            self.handled.add(node)
+            self.on_failure(node)
+        return newly_dead

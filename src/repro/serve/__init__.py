@@ -1,0 +1,3 @@
+from .router import ReplicaRouter
+
+__all__ = ["ReplicaRouter"]

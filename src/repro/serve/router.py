@@ -1,0 +1,68 @@
+"""ASURA session routing across serving replicas.
+
+Sessions (request streams with KV caches) are sticky: a session's cache
+lives on one replica, so re-routing a session is expensive (cache refill =
+a full prefill). ASURA gives exactly the right trade:
+
+  * any frontend computes the owner locally from the O(N) table — no
+    routing service, no consistent-hashing ring to sync,
+  * replica loss re-routes ONLY its sessions (everyone else's caches stay
+    hot) — the paper's removal-optimality theorem,
+  * capacity-weighted replicas (heterogeneous hardware generations) get
+    proportional load via segment lengths,
+  * scale-out steals the minimal set of sessions from existing replicas.
+
+``plan_scale_event`` returns the exact session moves so the serving layer
+can schedule cache re-prefill for just those sessions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Cluster
+
+
+@dataclasses.dataclass
+class ScalePlan:
+    moved_sessions: dict[int, tuple[int, int]]  # session -> (src, dst)
+
+    @property
+    def n_reprefills(self) -> int:
+        return len(self.moved_sessions)
+
+
+class ReplicaRouter:
+    def __init__(self, replica_capacities: dict[int, float]):
+        self.cluster = Cluster()
+        for rid, cap in replica_capacities.items():
+            self.cluster.add_node(rid, cap)
+
+    def route(self, session_ids) -> np.ndarray:
+        """session ids -> replica ids (vectorized, table-local)."""
+        return self.cluster.place_nodes(np.asarray(session_ids, dtype=np.uint32))
+
+    def my_sessions(self, replica_id: int, session_ids) -> np.ndarray:
+        ids = np.asarray(session_ids, dtype=np.uint32)
+        return ids[self.route(ids) == replica_id]
+
+    def plan_scale_event(self, session_ids, *, add=None, remove=None) -> ScalePlan:
+        """Apply a membership change; return the minimal session moves."""
+        ids = np.asarray(session_ids, dtype=np.uint32)
+        before = self.route(ids)
+        if remove is not None:
+            self.cluster.remove_node(remove)
+        if add is not None:
+            rid, cap = add
+            self.cluster.add_node(rid, cap)
+        after = self.route(ids)
+        moved = np.nonzero(before != after)[0]
+        return ScalePlan(
+            {int(ids[i]): (int(before[i]), int(after[i])) for i in moved}
+        )
+
+    def table_blob(self) -> str:
+        """The only state frontends need to share (kilobytes)."""
+        return self.cluster.to_json()

@@ -1,0 +1,18 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .step import (
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "init_train_state",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,89 @@
+"""Train / serve step factories with microbatched gradient accumulation.
+
+``make_train_step(cfg)`` -> step(params, opt_state, batch) -> (params,
+opt_state, metrics); microbatching splits the per-step batch into
+``n_microbatches`` slices scanned sequentially, accumulating fp32 (or bf16)
+grads -- the activation peak scales with the slice, the accumulation buffer
+with the model.  ``make_serve_step(cfg)`` -> one-token decode against a
+cache.  Both are pure functions ready for jax.jit(in_shardings=...).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, loss_fn, prefill
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible into {n} microbatches"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    n_microbatches: int = 1,
+    grad_dtype=jnp.float32,
+):
+    def train_step(params, opt_state, batch):
+        def loss(p, mb):
+            return loss_fn(cfg, p, mb)
+
+        if n_microbatches == 1:
+            (val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch
+            )
+        else:
+            micro = _split_micro(batch, n_microbatches)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (val, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(grad_dtype), g_acc, g
+                )
+                return (g_acc, l_acc + val), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params
+            )
+            (grads, vsum), _ = jax.lax.scan(acc_step, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            val = vsum / n_microbatches
+            metrics = {}
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        out = {"loss": val, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        return decode_step(cfg, params, cache, batch)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def init_train_state(cfg: ModelConfig, params):
+    return adamw_init(params)

@@ -1,0 +1,287 @@
+"""Unit tests for the core ASURA algorithm (paper sections 2.A-2.D)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    make_cluster,
+    make_uniform_cluster,
+)
+from repro.core.asura import (
+    DEFAULT_PARAMS,
+    AsuraParams,
+    _AsuraStream,
+    _upper_bound,
+    addition_number,
+    lengths_to_u32,
+    place_batch,
+    place_replicas_batch,
+    place_replicas_scalar,
+    place_scalar,
+    placement_trace,
+    remove_numbers,
+)
+
+
+class TestStep1SegmentAssignment:
+    def test_capacity_to_segments_fig3(self):
+        """Paper Fig. 3: 1.5 TB -> full segment + half segment, etc."""
+        c = make_cluster([1.5, 0.7, 1.0])
+        # Node 0: two segments (1.0-eps, 0.5); node 1: one 0.7; node 2: one ~1.0
+        assert len(c.nodes[0].segments) == 2
+        assert len(c.nodes[1].segments) == 1
+        assert len(c.nodes[2].segments) == 1
+        lengths = c.seg_lengths()
+        assert abs(sum(lengths[s] for s in c.nodes[0].segments) - 1.5) < 1e-6
+        assert abs(lengths[c.nodes[1].segments[0]] - 0.7) < 1e-9
+
+    def test_rule4_lengths_below_one(self):
+        c = make_cluster([3.0, 2.5, 0.1])
+        assert np.all(c.seg_lengths() < 1.0)
+
+    def test_smallest_free_segment_number_rule(self):
+        """Section 2.D: additions take the smallest free number."""
+        c = make_cluster([1.0, 1.0, 1.0, 1.0])
+        c.remove_node(1)
+        freed = 1  # node 1 owned segment 1
+        segs = c.add_node(9, 1.0)
+        assert segs == [freed]
+
+    def test_existing_correspondence_never_changes(self):
+        c = make_cluster([1.0, 2.0, 0.5])
+        before = {nid: list(info.segments) for nid, info in c.nodes.items()}
+        c.add_node(3, 1.3)
+        c.remove_node(0)
+        c.add_node(4, 0.4)
+        for nid, segs in before.items():
+            if nid in c.nodes:
+                assert c.nodes[nid].segments == segs
+
+    def test_resize_grow_and_shrink(self):
+        c = make_cluster([1.5, 1.0])
+        c.resize_node(0, 2.5)
+        lengths = c.seg_lengths()
+        assert abs(sum(lengths[s] for s in c.nodes[0].segments) - 2.5) < 1e-6
+        c.resize_node(0, 0.8)
+        lengths = c.seg_lengths()
+        assert abs(sum(lengths[s] for s in c.nodes[0].segments) - 0.8) < 1e-6
+        assert np.all(lengths[lengths > 0] < 1.0)
+
+    def test_remove_rejects_unknown(self):
+        c = make_uniform_cluster(2)
+        with pytest.raises(KeyError):
+            c.remove_node(99)
+
+    def test_memory_is_order_n(self):
+        """Paper Table II: 8N bytes."""
+        c = make_uniform_cluster(10_000)
+        assert c.memory_bytes() == 8 * 10_000
+
+
+class TestStep2Placement:
+    def test_deterministic(self):
+        c = make_uniform_cluster(7)
+        assert place_scalar(123, c.seg_lengths()) == place_scalar(123, c.seg_lengths())
+
+    def test_scalar_batch_bit_identical(self):
+        c = make_cluster([1.0] * 20 + [0.3, 1.7])
+        ids = np.arange(500, dtype=np.uint32)
+        batch = place_batch(ids, c.seg_lengths())
+        for i in ids[:200]:
+            assert place_scalar(int(i), c.seg_lengths()) == batch[i]
+
+    def test_holes_never_selected(self):
+        c = make_uniform_cluster(10)
+        c.remove_node(4)
+        segs = place_batch(np.arange(20_000, dtype=np.uint32), c.seg_lengths())
+        assert 4 not in set(segs.tolist())
+
+    def test_uniformity_chi_square(self):
+        """Uniform capacities -> counts consistent with multinomial."""
+        n_nodes, n_data = 16, 64_000
+        c = make_uniform_cluster(n_nodes)
+        segs = place_batch(np.arange(n_data, dtype=np.uint32), c.seg_lengths())
+        counts = np.bincount(segs, minlength=n_nodes)
+        expected = n_data / n_nodes
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # chi2 with 15 dof: P(chi2 > 37.7) ~ 1e-3
+        assert chi2 < 37.7, counts
+
+    def test_capacity_proportionality(self):
+        caps = [2.0, 1.0, 0.5, 4.5]
+        c = make_cluster(caps)
+        nodes = c.place_nodes(np.arange(80_000, dtype=np.uint32))
+        frac = np.array([(nodes == k).mean() for k in range(4)])
+        want = np.array(caps) / sum(caps)
+        assert np.all(np.abs(frac - want) < 0.01), (frac, want)
+
+    def test_upper_bound_tracks_last_occupied(self):
+        lengths = np.array([0.9, 0.0, 0.5])
+        assert _upper_bound(lengths) == 2.5
+
+    def test_lengths_to_u32_validates(self):
+        with pytest.raises(ValueError):
+            lengths_to_u32([1.5])
+        with pytest.raises(ValueError):
+            lengths_to_u32([-0.1])
+
+
+class TestOptimalMovement:
+    """Section 2.A second/third characteristics + mathematical proofs."""
+
+    def test_addition_moves_only_to_new_node(self):
+        c = make_uniform_cluster(12)
+        ids = np.arange(30_000, dtype=np.uint32)
+        before = c.place_nodes(ids)
+        c.add_node(12, 1.0)
+        after = c.place_nodes(ids)
+        moved = before != after
+        assert np.all(after[moved] == 12)
+        # moved fraction ~ 1/13
+        assert abs(moved.mean() - 1 / 13) < 0.01
+
+    def test_removal_moves_only_from_removed_node(self):
+        c = make_uniform_cluster(12)
+        ids = np.arange(30_000, dtype=np.uint32)
+        before = c.place_nodes(ids)
+        c.remove_node(5)
+        after = c.place_nodes(ids)
+        moved = before != after
+        assert np.all(before[moved] == 5)
+        assert moved.sum() == (before == 5).sum()
+
+    def test_capacity_respected_after_churn(self):
+        c = make_cluster([1.0, 2.0, 1.0])
+        c.add_node(3, 0.5)
+        c.remove_node(0)
+        c.add_node(4, 1.5)
+        ids = np.arange(60_000, dtype=np.uint32)
+        nodes = c.place_nodes(ids)
+        caps = {nid: info.capacity for nid, info in c.nodes.items()}
+        total = sum(caps.values())
+        for nid, cap in caps.items():
+            assert abs((nodes == nid).mean() - cap / total) < 0.015
+
+
+class TestReplication:
+    def test_distinct_nodes(self):
+        c = make_uniform_cluster(8)
+        reps = c.place_replicas(np.arange(2000, dtype=np.uint32), 3)
+        for row in reps:
+            assert len(set(row.tolist())) == 3
+
+    def test_scalar_batch_identical(self):
+        c = make_cluster([1.0, 0.5, 2.0, 1.0, 1.0])
+        for datum in range(100):
+            s = place_replicas_scalar(datum, c.seg_lengths(), c.seg_to_node(), 3)
+            b = place_replicas_batch(
+                np.array([datum], dtype=np.uint32),
+                c.seg_lengths(),
+                c.seg_to_node(),
+                3,
+            )[0]
+            assert list(s) == list(b)
+
+    def test_multi_segment_node_counts_once(self):
+        """A node owning several segments must still appear once."""
+        c = make_cluster([3.5, 1.0, 1.0, 1.0])
+        reps = c.place_replicas(np.arange(3000, dtype=np.uint32), 3)
+        for row in reps:
+            assert len(set(row.tolist())) == 3
+
+    def test_too_few_nodes_raises(self):
+        c = make_uniform_cluster(2)
+        with pytest.raises(RuntimeError):
+            place_replicas_scalar(1, c.seg_lengths(), c.seg_to_node(), 3)
+
+
+class TestSection2DMetadata:
+    def test_addition_number_detects_next_capture(self):
+        """The ADDITION NUMBER names the smallest free segment whose future
+        assignment could capture the datum (exactness tested in the
+        hypothesis suite against brute force)."""
+        c = make_uniform_cluster(6)
+        an = addition_number(77, c.seg_lengths(), c.seg_to_node())
+        assert an >= 0
+        # AN is never an occupied segment's number with a hit: it comes from
+        # an unused (non-selecting) number.
+        _, numbers, used = placement_trace(77, c.seg_lengths(), c.seg_to_node())
+        unused = [v for v, u in zip(numbers[:-1], used[:-1]) if not u]
+        if unused:
+            assert an == int(min(unused))
+
+    def test_remove_numbers_are_replica_floors(self):
+        c = make_uniform_cluster(9)
+        segs = place_replicas_scalar(5, c.seg_lengths(), c.seg_to_node(), 3)
+        rn = remove_numbers(5, c.seg_lengths(), c.seg_to_node(), 3)
+        assert sorted(segs) == rn
+
+
+class TestRangeExtension:
+    """Section 2.B: extending the generator ladder never moves data."""
+
+    def test_placement_invariant_under_extra_levels(self):
+        c = make_uniform_cluster(30)
+        lengths = c.seg_lengths()
+        len32 = lengths_to_u32(lengths)
+        n_segs = len(len32)
+        top = DEFAULT_PARAMS.level_for(_upper_bound(lengths))
+
+        def place_at(datum, extra):
+            st = _AsuraStream(datum, top + extra, DEFAULT_PARAMS)
+            while True:
+                k, f = st.next()
+                if k < n_segs and f < int(len32[k]):
+                    return k
+
+        for datum in range(300):
+            assert place_at(datum, 0) == place_at(datum, 2) == place_at(datum, 5)
+
+    def test_subsequence_preserved(self):
+        """Numbers below the old range keep value and order (section 2.B)."""
+        params = DEFAULT_PARAMS
+        for datum in range(50):
+            base = _AsuraStream(datum, 3, params)
+            ext = _AsuraStream(datum, 6, params)
+            base_seq = [base.next_value() for _ in range(20)]
+            ext_seq = [ext.next_value() for _ in range(200)]
+            limit = params.range_at(3)
+            sub = [v for v in ext_seq if v < limit]
+            m = min(len(sub), len(base_seq))
+            assert sub[:m] == base_seq[:m]
+
+
+class TestSerialization:
+    def test_json_roundtrip_places_identically(self):
+        c = make_cluster([1.0, 2.5, 0.3])
+        c.add_node(7, 1.1)
+        c.remove_node(1)
+        c2 = Cluster.from_json(c.to_json())
+        ids = np.arange(5000, dtype=np.uint32)
+        assert np.array_equal(c.place_batch(ids), c2.place_batch(ids))
+        assert c2.version == c.version
+
+
+class TestParams:
+    def test_level_for(self):
+        p = AsuraParams(s_log2=1)
+        assert p.level_for(1.0) == 0
+        assert p.level_for(2.0) == 0
+        assert p.level_for(2.1) == 1
+        assert p.level_for(100.0) == 6
+        p16 = AsuraParams(s_log2=4)  # the paper's S=16
+        assert p16.level_for(16.0) == 0
+        assert p16.level_for(17.0) == 1
+
+    def test_s_log2_bounds(self):
+        with pytest.raises(ValueError):
+            AsuraParams(s_log2=0)
+
+    def test_paper_s16_config_still_places(self):
+        params = AsuraParams(s_log2=4, max_draws=512)
+        c = make_uniform_cluster(5, params=params)
+        segs = place_batch(np.arange(5000, dtype=np.uint32), c.seg_lengths(), params)
+        assert set(np.unique(segs)) <= set(range(5))
+        counts = np.bincount(segs, minlength=5)
+        assert counts.min() > 800

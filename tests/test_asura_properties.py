@@ -1,0 +1,193 @@
+"""Property-based tests (hypothesis) for ASURA's system invariants.
+
+These are the paper's section 2 theorems checked mechanically over random
+cluster histories:
+
+  P1 (addition optimality)   adding a node moves data only onto it.
+  P2 (removal optimality)    removing a node moves only its own data.
+  P3 (range extension)       extending the generator ladder is a no-op.
+  P4 (replication)           R replicas live on R distinct nodes.
+  P5 (ADDITION NUMBER)       a datum is affected by a node addition iff the
+                             added segment number equals its ADDITION NUMBER
+                             (given smallest-free-number assignment order).
+  P6 (REMOVE NUMBERS)        a datum leaves a removed node iff one of its
+                             REMOVE NUMBERS is a segment of that node.
+  P7 (determinism)           placement depends only on (id, table).
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_cluster
+from repro.core.asura import (
+    DEFAULT_PARAMS,
+    _AsuraStream,
+    _upper_bound,
+    addition_number,
+    lengths_to_u32,
+    place_batch,
+    place_replicas_batch,
+    remove_numbers,
+)
+
+capacities = st.lists(
+    st.floats(min_value=0.2, max_value=3.0, allow_nan=False), min_size=2, max_size=12
+)
+datum_ids = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(caps=capacities, new_cap=st.floats(min_value=0.2, max_value=3.0))
+def test_p1_addition_moves_only_to_new_node(caps, new_cap):
+    c = make_cluster(caps)
+    ids = np.arange(2000, dtype=np.uint32)
+    before = c.place_nodes(ids)
+    new_id = max(c.nodes) + 1
+    c.add_node(new_id, new_cap)
+    after = c.place_nodes(ids)
+    moved = before != after
+    assert np.all(after[moved] == new_id)
+
+
+@settings(max_examples=30, deadline=None)
+@given(caps=capacities, victim_idx=st.integers(min_value=0, max_value=11))
+def test_p2_removal_moves_only_victims_data(caps, victim_idx):
+    c = make_cluster(caps)
+    victim = sorted(c.nodes)[victim_idx % len(c.nodes)]
+    ids = np.arange(2000, dtype=np.uint32)
+    before = c.place_nodes(ids)
+    c.remove_node(victim)
+    after = c.place_nodes(ids)
+    moved = before != after
+    assert np.all(before[moved] == victim)
+    assert moved.sum() == (before == victim).sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(caps=capacities, datum=datum_ids, extra=st.integers(min_value=1, max_value=6))
+def test_p3_range_extension_noop(caps, datum, extra):
+    c = make_cluster(caps)
+    lengths = c.seg_lengths()
+    len32 = lengths_to_u32(lengths)
+    n_segs = len(len32)
+    top = DEFAULT_PARAMS.level_for(_upper_bound(lengths))
+
+    def place_at(t):
+        stream = _AsuraStream(datum, t, DEFAULT_PARAMS)
+        while True:
+            k, f = stream.next()
+            if k < n_segs and f < int(len32[k]):
+                return k
+
+    assert place_at(top) == place_at(top + extra)
+
+
+@settings(max_examples=20, deadline=None)
+@given(caps=st.lists(st.floats(min_value=0.5, max_value=2.0), min_size=4, max_size=10))
+def test_p4_replicas_distinct_nodes(caps):
+    c = make_cluster(caps)
+    reps = c.place_replicas(np.arange(200, dtype=np.uint32), 3)
+    for row in reps:
+        assert len(set(row.tolist())) == 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_nodes=st.integers(min_value=3, max_value=9))
+def test_p5_addition_number_exact_full_segments(n_nodes):
+    """P5 (paper-literal AN == f rule): with full-length segments, after a
+    single-segment addition at the smallest free number f, every datum that
+    moved had ADDITION NUMBER == f.
+
+    The paper's == rule is exact only for full-length segment tables: with
+    fractional segments a datum's smallest anterior number can fall in an
+    occupied segment's *miss region* (frac >= length), masking a mover whose
+    capturing number points at a larger free segment.  The framework's
+    rebalancer therefore uses the sound AN <= f rule for heterogeneous
+    capacity tables (test_p5b below); see DESIGN.md section 7.
+    """
+    c = make_cluster([1.0] * n_nodes)
+    c.remove_node(1)  # frees segment 1
+    ids = np.arange(600, dtype=np.uint32)
+    lengths, node_of = c.seg_lengths(), c.seg_to_node()
+    before = c.place_nodes(ids)
+    ans = np.array([addition_number(int(i), lengths, node_of) for i in ids])
+    new_id = max(c.nodes) + 1
+    new_segs = c.add_node(new_id, 1.0)
+    assert new_segs == [1]
+    after = c.place_nodes(ids)
+    moved = before != after
+    assert np.all(np.isin(ans[moved], new_segs))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    caps=st.lists(st.floats(min_value=0.3, max_value=2.0), min_size=3, max_size=8),
+    new_cap=st.floats(min_value=0.3, max_value=0.95),
+)
+def test_p5b_addition_number_leq_rule_sound(caps, new_cap):
+    """P5b (sound rule for fractional segments): every mover has AN <= f.
+
+    floor(smallest unused anterior) <= floor(capturing anterior) == f, so the
+    <=-rule check set provably contains all movers for ANY capacity mix."""
+    c = make_cluster(caps)
+    c.remove_node(1)
+    ids = np.arange(600, dtype=np.uint32)
+    lengths, node_of = c.seg_lengths(), c.seg_to_node()
+    before = c.place_nodes(ids)
+    ans = np.array([addition_number(int(i), lengths, node_of) for i in ids])
+    new_id = max(c.nodes) + 1
+    new_segs = c.add_node(new_id, new_cap)
+    assert len(new_segs) == 1
+    after = c.place_nodes(ids)
+    moved = before != after
+    assert np.all(ans[moved] <= new_segs[0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    caps=st.lists(st.floats(min_value=0.5, max_value=2.0), min_size=5, max_size=9),
+    victim_idx=st.integers(min_value=0, max_value=8),
+)
+def test_p6_remove_numbers_exact(caps, victim_idx):
+    c = make_cluster(caps)
+    victim = sorted(c.nodes)[victim_idx % len(c.nodes)]
+    ids = np.arange(300, dtype=np.uint32)
+    lengths, node_of = c.seg_lengths(), c.seg_to_node()
+    reps_before = c.place_replicas(ids, 2)
+    rns = [remove_numbers(int(i), lengths, node_of, 2) for i in ids]
+    victim_segs = set(c.nodes[victim].segments)
+    c.remove_node(victim)
+    reps_after = c.place_replicas(ids, 2)
+    for i in range(len(ids)):
+        lost = victim in set(reps_before[i].tolist())
+        flagged = bool(victim_segs & set(rns[i]))
+        # REMOVE NUMBERS are exactly the floors of replica-selecting numbers,
+        # so the datum had a replica on the victim iff a RN names one of the
+        # victim's segments.
+        assert lost == flagged
+        if not lost:
+            assert list(reps_before[i]) == list(reps_after[i])
+
+
+@settings(max_examples=20, deadline=None)
+@given(datum=datum_ids, caps=capacities)
+def test_p7_determinism(datum, caps):
+    c = make_cluster(caps)
+    a = place_batch(np.array([datum], dtype=np.uint32), c.seg_lengths())[0]
+    b = place_batch(np.array([datum], dtype=np.uint32), c.seg_lengths())[0]
+    assert a == b
+
+
+@settings(max_examples=10, deadline=None)
+@given(caps=capacities)
+def test_replica_batch_matches_scalar(caps):
+    from repro.core.asura import place_replicas_scalar
+
+    c = make_cluster(caps)
+    r = min(2, len(c.nodes))
+    ids = np.arange(50, dtype=np.uint32)
+    batch = place_replicas_batch(ids, c.seg_lengths(), c.seg_to_node(), r)
+    for i in ids:
+        scalar = place_replicas_scalar(int(i), c.seg_lengths(), c.seg_to_node(), r)
+        assert list(batch[i]) == list(scalar)

@@ -1,0 +1,97 @@
+"""Tests for the paper's comparison baselines (sections I, III, IV)."""
+
+import numpy as np
+
+from repro.core import ConsistentHashRing, StrawBucket
+
+
+class TestConsistentHashing:
+    def test_deterministic(self):
+        ring = ConsistentHashRing(range(10), virtual_nodes=50)
+        ids = np.arange(1000, dtype=np.uint32)
+        assert np.array_equal(ring.place(ids), ring.place(ids))
+
+    def test_all_nodes_used(self):
+        ring = ConsistentHashRing(range(20), virtual_nodes=100)
+        owners = ring.place(np.arange(50_000, dtype=np.uint32))
+        assert set(owners.tolist()) == set(range(20))
+
+    def test_removal_moves_only_victims_data(self):
+        """CH's own optimal-movement property (paper section I)."""
+        nodes = list(range(12))
+        ring = ConsistentHashRing(nodes, virtual_nodes=64)
+        ids = np.arange(20_000, dtype=np.uint32)
+        before = ring.place(ids)
+        victim = 5
+        ring2 = ConsistentHashRing([n for n in nodes if n != victim], virtual_nodes=64)
+        after = ring2.place(ids)
+        moved = before != after
+        assert np.all(before[moved] == victim)
+
+    def test_more_virtual_nodes_more_uniform(self):
+        """Paper Figs. 6-8: uniformity improves with virtual nodes."""
+        ids = np.arange(200_000, dtype=np.uint32)
+
+        def maxvar(v):
+            ring = ConsistentHashRing(range(10), virtual_nodes=v)
+            counts = np.bincount(ring.place(ids), minlength=10)
+            return (counts.max() - counts.mean()) / counts.mean()
+
+        assert maxvar(1000) < maxvar(10)
+
+    def test_memory_is_8nv(self):
+        ring = ConsistentHashRing(range(100), virtual_nodes=100)
+        assert ring.memory_bytes() == 8 * 100 * 100
+
+
+class TestStrawBucket:
+    def test_deterministic(self):
+        straw = StrawBucket(range(8))
+        ids = np.arange(1000, dtype=np.uint32)
+        assert np.array_equal(straw.place(ids), straw.place(ids))
+
+    def test_near_uniform(self):
+        straw = StrawBucket(range(10))
+        counts = np.bincount(
+            straw.place(np.arange(100_000, dtype=np.uint32)), minlength=10
+        )
+        maxvar = (counts.max() - counts.mean()) / counts.mean()
+        assert maxvar < 0.05
+
+    def test_optimal_movement_on_removal(self):
+        """Straw's max-hash property: removing a node only moves its data."""
+        nodes = list(range(10))
+        straw = StrawBucket(nodes)
+        ids = np.arange(20_000, dtype=np.uint32)
+        before = straw.place(ids)
+        victim = 3
+        straw2 = StrawBucket([n for n in nodes if n != victim])
+        after = straw2.place(ids)
+        moved = before != after
+        assert np.all(before[moved] == victim)
+
+    def test_optimal_movement_on_addition(self):
+        nodes = list(range(10))
+        straw = StrawBucket(nodes)
+        ids = np.arange(20_000, dtype=np.uint32)
+        before = straw.place(ids)
+        straw2 = StrawBucket(nodes + [10])
+        after = straw2.place(ids)
+        moved = before != after
+        assert np.all(after[moved] == 10)
+
+    def test_capacity_weighting(self):
+        straw = StrawBucket(range(3), weights=[2.0, 1.0, 1.0])
+        nodes = straw.place(np.arange(100_000, dtype=np.uint32))
+        frac0 = (nodes == 0).mean()
+        assert 0.45 < frac0 < 0.55  # 2/(2+1+1)
+
+    def test_replicas_distinct(self):
+        straw = StrawBucket(range(6))
+        reps = straw.place_replicas(np.arange(500, dtype=np.uint32), 3)
+        for row in reps:
+            assert len(set(row.tolist())) == 3
+
+    def test_memory_is_8n(self):
+        straw = StrawBucket(range(64))
+        assert straw.memory_bytes() == 8 * 64

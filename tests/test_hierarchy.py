@@ -1,0 +1,126 @@
+"""Hierarchical (failure-domain-aware) ASURA tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import HierarchicalCluster
+
+
+def _mk(domains=4, nodes_per=3, cap=1.0):
+    h = HierarchicalCluster()
+    nid = 0
+    for d in range(domains):
+        for _ in range(nodes_per):
+            h.add_node(d, nid, cap)
+            nid += 1
+    return h
+
+
+class TestPlacement:
+    def test_deterministic(self):
+        h = _mk()
+        ids = np.arange(500)
+        assert np.array_equal(h.place(ids), h.place(ids))
+
+    def test_domain_load_proportional_to_capacity(self):
+        h = HierarchicalCluster()
+        h.add_node(0, 0, 2.0)
+        h.add_node(0, 1, 2.0)  # domain 0: cap 4
+        h.add_node(1, 2, 1.0)
+        h.add_node(1, 3, 1.0)  # domain 1: cap 2
+        placed = h.place(np.arange(60_000))
+        frac0 = (placed[:, 0] == 0).mean()
+        assert abs(frac0 - 4 / 6) < 0.01
+
+    def test_node_load_within_domain(self):
+        h = HierarchicalCluster()
+        h.add_node(0, 0, 3.0)
+        h.add_node(0, 1, 1.0)
+        placed = h.place(np.arange(40_000))
+        frac_n0 = (placed[:, 1] == 0).mean()
+        assert abs(frac_n0 - 0.75) < 0.01
+
+    def test_node_belongs_to_its_domain(self):
+        h = _mk(domains=3, nodes_per=2)
+        placed = h.place(np.arange(5_000))
+        node_to_dom = {}
+        for d, dom in h.domains.items():
+            for n in dom.node_ids():
+                node_to_dom[n] = d
+        for dom_id, node_id in placed:
+            assert node_to_dom[node_id] == dom_id
+
+
+class TestFailureDomains:
+    def test_replicas_on_distinct_domains(self):
+        h = _mk(domains=5, nodes_per=2)
+        reps = h.place_replicas(np.arange(2_000), 3)
+        for row in reps:
+            assert len(set(row[:, 0].tolist())) == 3  # distinct domains
+        # whole-domain loss keeps >= 2 replicas of every datum
+        for victim in range(5):
+            surviving = (reps[:, :, 0] != victim).sum(axis=1)
+            assert surviving.min() >= 2
+
+    def test_too_few_domains_raises(self):
+        h = _mk(domains=2, nodes_per=4)
+        with pytest.raises(RuntimeError):
+            h.place_replicas(np.arange(10), 3)
+
+
+class TestMovementOptimality:
+    def test_node_change_stays_within_domain(self):
+        h = _mk(domains=4, nodes_per=3)
+        ids = np.arange(20_000)
+        before = h.place(ids)
+        h.add_node(2, 99, 1.0)  # grow domain 2
+        after = h.place(ids)
+        moved = ~(before == after).all(axis=1)
+        # domain assignment may shift only toward domain 2 (its capacity grew)
+        dom_changed = before[:, 0] != after[:, 0]
+        assert np.all(after[dom_changed, 0] == 2)
+        # data in untouched domains (and not moving to 2) never move
+        untouched = (before[:, 0] != 2) & ~dom_changed
+        assert not moved[untouched].any()
+        # within domain 2, movers go to the new node or came from outside
+        inside_movers = moved & (before[:, 0] == 2) & (after[:, 0] == 2)
+        assert np.all(after[inside_movers, 1] == 99)
+
+    def test_node_removal_moves_only_its_data(self):
+        h = _mk(domains=3, nodes_per=3)
+        ids = np.arange(20_000)
+        before = h.place(ids)
+        victim_node = 4  # lives in domain 1
+        h.remove_node(1, victim_node)
+        after = h.place(ids)
+        moved = ~(before == after).all(axis=1)
+        # movers either held the victim node, or shifted domain because
+        # domain 1's capacity shrank (level-1 resize) -- and those shifts
+        # only move data OUT of domain 1
+        for i in np.nonzero(moved)[0]:
+            if before[i, 0] == after[i, 0]:
+                assert before[i, 1] == victim_node
+            else:
+                assert before[i, 0] == 1
+
+    def test_domain_removal_moves_only_its_data(self):
+        h = _mk(domains=4, nodes_per=2)
+        ids = np.arange(15_000)
+        before = h.place(ids)
+        h.remove_domain(3)
+        after = h.place(ids)
+        moved = ~(before == after).all(axis=1)
+        assert np.all(before[moved, 0] == 3)
+
+    def test_independent_domains_unaffected_by_each_other(self):
+        """Salting: node changes in one domain never reshuffle another."""
+        h = _mk(domains=3, nodes_per=3)
+        ids = np.arange(10_000)
+        before = h.place(ids)
+        h.add_node(0, 50, 0.5)
+        after = h.place(ids)
+        other = before[:, 0] != 0
+        same_dom = before[other, 0] == after[other, 0]
+        # any datum that stayed in its (non-0) domain kept its node
+        kept = before[other][same_dom], after[other][same_dom]
+        assert np.array_equal(kept[0], kept[1])

@@ -1,0 +1,109 @@
+"""Per-kernel validation: Pallas asura_place vs the pure-jnp/NumPy oracles.
+
+Sweeps batch shapes, cluster sizes/capacity mixes and params, asserting
+bit-exact agreement (integer algorithm -- no allclose tolerance needed, but
+we use assert_allclose with atol=0 to follow the harness convention).
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import make_cluster, make_uniform_cluster
+from repro.core.asura import DEFAULT_PARAMS, AsuraParams, place_batch
+from repro.kernels.ops import asura_place, asura_place_nodes, table_prep
+from repro.kernels.ref import place_ref
+
+
+CLUSTERS = {
+    "uniform_small": [1.0] * 4,
+    "uniform_128": [1.0] * 128,
+    "mixed": [0.3, 1.7, 2.0, 0.9, 1.0, 0.5],
+    "one_node_frac": [0.6],
+    "heavy_tail": [4.0] + [0.25] * 20,
+}
+BATCHES = [1, 7, 128, 1000, 4096]
+
+
+@pytest.mark.parametrize("name", sorted(CLUSTERS))
+@pytest.mark.parametrize("batch", BATCHES)
+def test_pallas_matches_numpy(name, batch):
+    c = make_cluster(CLUSTERS[name])
+    ids = (np.arange(batch, dtype=np.uint64) * 2654435761 % (2**32)).astype(np.uint32)
+    want = place_batch(ids, c.seg_lengths())
+    got = np.asarray(asura_place(ids, c.seg_lengths(), use_pallas=True))
+    assert_allclose(got, want, atol=0)
+
+
+@pytest.mark.parametrize("name", sorted(CLUSTERS))
+def test_ref_matches_numpy(name):
+    c = make_cluster(CLUSTERS[name])
+    ids = np.arange(2048, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths())
+    got = np.asarray(asura_place(ids, c.seg_lengths(), use_pallas=False))
+    assert_allclose(got, want, atol=0)
+
+
+@pytest.mark.parametrize("rows", [8, 16, 32])
+def test_block_shape_sweep(rows):
+    c = make_uniform_cluster(32)
+    ids = np.arange(rows * 128 * 3 + 5, dtype=np.uint32)  # force padding
+    want = place_batch(ids, c.seg_lengths())
+    got = np.asarray(
+        asura_place(ids, c.seg_lengths(), use_pallas=True, rows_per_block=rows)
+    )
+    assert_allclose(got, want, atol=0)
+
+
+def test_id_dtype_acceptance():
+    c = make_uniform_cluster(8)
+    for dtype in (np.uint32, np.int32, np.int64, np.uint64):
+        ids = np.arange(256).astype(dtype)
+        got = np.asarray(asura_place(ids, c.seg_lengths()))
+        want = place_batch(ids.astype(np.uint32), c.seg_lengths())
+        assert_allclose(got, want, atol=0)
+
+
+def test_paper_s16_params():
+    params = AsuraParams(s_log2=4, max_draws=512)
+    c = make_uniform_cluster(20, params=params)
+    ids = np.arange(4096, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths(), params)
+    got = np.asarray(asura_place(ids, c.seg_lengths(), params))
+    assert_allclose(got, want, atol=0)
+
+
+def test_place_nodes_mapping():
+    c = make_cluster([2.0, 1.0, 1.0])
+    ids = np.arange(512, dtype=np.uint32)
+    segs = np.asarray(asura_place(ids, c.seg_lengths()))
+    nodes = np.asarray(asura_place_nodes(ids, c.seg_lengths(), c.seg_to_node()))
+    assert_allclose(nodes, c.seg_to_node()[segs], atol=0)
+
+
+def test_large_cluster_table_pad():
+    """Table padding to the 128-lane multiple must not change placement."""
+    c = make_uniform_cluster(130)  # 130 segments -> padded to 256
+    ids = np.arange(2048, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths())
+    got = np.asarray(asura_place(ids, c.seg_lengths()))
+    assert_allclose(got, want, atol=0)
+    assert got.max() < 130
+
+
+def test_after_churn_consistency():
+    c = make_uniform_cluster(16)
+    c.remove_node(3)
+    c.add_node(99, 0.4)
+    c.resize_node(5, 2.2)
+    ids = np.arange(3000, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths())
+    got = np.asarray(asura_place(ids, c.seg_lengths()))
+    assert_allclose(got, want, atol=0)
+
+
+def test_table_prep_levels():
+    c = make_uniform_cluster(100)
+    len32, top = table_prep(c.seg_lengths())
+    assert len32.shape[0] % 128 == 0
+    assert DEFAULT_PARAMS.range_at(top) >= 100

@@ -1,0 +1,155 @@
+"""Mathematical correctness of the sequence mixers and MoE dispatch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import reduced_config
+from repro.models.config import MoEConfig
+from repro.models.layers import mlp_apply, mlp_init, moe_apply, moe_init
+from repro.models.recurrent import (
+    _wkv_chunked,
+    rglru_apply,
+    rglru_init,
+    rglru_state_init,
+    rwkv6_state_init,
+)
+
+
+class TestRGLRU:
+    def test_parallel_scan_matches_sequential(self):
+        """associative_scan (train) == step-by-step recurrence (decode)."""
+        cfg = reduced_config(get_config("recurrentgemma-9b"))
+        rng = jax.random.PRNGKey(0)
+        p = rglru_init(rng, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model), jnp.float32)
+        full, _ = rglru_apply(cfg, p, x)
+        # feed one token at a time through the stateful path
+        state = rglru_state_init(cfg, 2)
+        outs = []
+        for t in range(12):
+            o, state = rglru_apply(cfg, p, x[:, t : t + 1], state=state)
+            outs.append(o)
+        seq = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(full, np.float32), np.asarray(seq, np.float32), atol=2e-2
+        )
+
+    def test_state_carries_across_segments(self):
+        cfg = reduced_config(get_config("recurrentgemma-9b"))
+        p = rglru_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model), jnp.float32)
+        full, _ = rglru_apply(cfg, p, x)
+        state = rglru_state_init(cfg, 1)
+        o1, state = rglru_apply(cfg, p, x[:, :8], state=state)
+        o2, _ = rglru_apply(cfg, p, x[:, 8:], state=state)
+        both = jnp.concatenate([o1, o2], axis=1)
+        np.testing.assert_allclose(
+            np.asarray(full, np.float32), np.asarray(both, np.float32), atol=2e-2
+        )
+
+
+class TestWKV:
+    def _inputs(self, b=2, s=20, d=64):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        r = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, d), jnp.float32)
+        logw = -0.1 * jax.nn.softplus(jax.random.normal(ks[3], (b, s, d)))
+        u = 0.3 * jnp.ones((d,), jnp.float32)
+        return r, k, v, logw, u
+
+    def test_chunked_matches_naive_recurrence(self):
+        """The chunked linear-attention form == the token-by-token WKV."""
+        r, k, v, logw, u = self._inputs()
+        hd = 32
+        out, _ = _wkv_chunked(r, k, v, logw, u, hd)
+        b, s, d = r.shape
+        h = d // hd
+        rr = r.reshape(b, s, h, hd)
+        kk = k.reshape(b, s, h, hd)
+        vv = v.reshape(b, s, h, hd)
+        ww = jnp.exp(logw.reshape(b, s, h, hd))
+        uu = u.reshape(h, hd)
+        S = jnp.zeros((b, h, hd, hd))
+        naive = []
+        for t in range(s):
+            bonus = jnp.einsum("bhk,bhk->bh", rr[:, t], uu[None] * kk[:, t])
+            o = jnp.einsum("bhk,bhkv->bhv", rr[:, t], S) + bonus[..., None] * vv[:, t]
+            naive.append(o)
+            S = ww[:, t][..., None] * S + jnp.einsum(
+                "bhk,bhv->bhkv", kk[:, t], vv[:, t]
+            )
+        naive = jnp.stack(naive, axis=1).reshape(b, s, d)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(naive), rtol=1e-3, atol=1e-3
+        )
+
+    def test_state_carries_across_chunk_boundaries(self):
+        r, k, v, logw, u = self._inputs(s=40)
+        hd = 32
+        full, s_full = _wkv_chunked(r, k, v, logw, u, hd)
+        o1, s1 = _wkv_chunked(r[:, :15], k[:, :15], v[:, :15], logw[:, :15], u, hd)
+        o2, s2 = _wkv_chunked(
+            r[:, 15:], k[:, 15:], v[:, 15:], logw[:, 15:], u, hd, state=s1
+        )
+        both = jnp.concatenate([o1, o2], axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(both), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), rtol=1e-3, atol=1e-3)
+
+
+class TestMoE:
+    def test_identical_experts_reduce_to_dense_mlp(self):
+        """With every expert equal and no drops, MoE(x) == MLP(x)."""
+        cfg = reduced_config(get_config("mixtral-8x22b"))
+        moe_cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=128, capacity_factor=8.0)
+        cfg = dataclasses.replace(cfg, moe=moe_cfg)
+        p = moe_init(jax.random.PRNGKey(0), cfg, moe_cfg)
+        # overwrite experts with copies of expert 0
+        for name in ("w_gate", "w_up", "w_down"):
+            p[name] = jnp.broadcast_to(p[name][:1], p[name].shape)
+        dense = {
+            "w_gate": p["w_gate"][0],
+            "w_up": p["w_up"][0],
+            "w_down": p["w_down"][0],
+        }
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model), jnp.float32)
+        y_moe, aux = moe_apply(cfg, p, x, moe_cfg)
+        y_dense = mlp_apply(cfg, dense, x)
+        np.testing.assert_allclose(
+            np.asarray(y_moe), np.asarray(y_dense), rtol=2e-2, atol=2e-2
+        )
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_tokens_gracefully(self):
+        cfg = reduced_config(get_config("mixtral-8x22b"))
+        moe_cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=128, capacity_factor=0.1)
+        cfg = dataclasses.replace(cfg, moe=moe_cfg)
+        p = moe_init(jax.random.PRNGKey(0), cfg, moe_cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model), jnp.float32)
+        y, _ = moe_apply(cfg, p, x, moe_cfg)
+        assert np.all(np.isfinite(np.asarray(y)))
+        # with tiny capacity many tokens get zero output, norm well below full
+        full_cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=128, capacity_factor=8.0)
+        y_full, _ = moe_apply(cfg, p, x, full_cfg)
+        assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y_full))
+
+    def test_aux_loss_favours_balance(self):
+        """Uniform routing gives the minimal Switch aux loss (~1.0)."""
+        cfg = reduced_config(get_config("deepseek-v2-236b"))
+        moe_cfg = MoEConfig(
+            n_experts=8, top_k=2, d_ff_expert=64, n_shared=0, capacity_factor=2.0
+        )
+        cfg = dataclasses.replace(cfg, moe=moe_cfg)
+        p = moe_init(jax.random.PRNGKey(2), cfg, moe_cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 512, cfg.d_model), jnp.float32)
+        _, aux = moe_apply(cfg, p, x, moe_cfg)
+        # with density averaged over the K routing slots, the balanced floor
+        # of sum_e density_e * prob_e * E^2/K is E/K (= 4 here); a
+        # near-uniform random-init router should sit at it
+        floor = moe_cfg.n_experts / moe_cfg.top_k
+        assert 0.9 * floor < float(aux) < 2.0 * floor

@@ -1,0 +1,256 @@
+"""Integration tests: data pipeline, checkpointing, elastic runtime."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsuraCheckpointStore, CheckpointManager
+from repro.core import Cluster, make_uniform_cluster
+from repro.data import DataPipeline, ShardedDataset
+from repro.runtime import (
+    ElasticCoordinator,
+    FailureDetector,
+    HeartbeatTracker,
+    StragglerMitigator,
+)
+
+
+class TestDataPipeline:
+    def _mk(self, n_hosts=4, n_shards=64):
+        cluster = make_uniform_cluster(n_hosts)
+        ds = ShardedDataset(n_shards=n_shards, tokens_per_shard=4096, vocab=1000)
+        pipes = [
+            DataPipeline(ds, cluster, h, batch_per_host=2, seq_len=128)
+            for h in range(n_hosts)
+        ]
+        return cluster, ds, pipes
+
+    def test_every_shard_owned_exactly_once(self):
+        _, _, pipes = self._mk()
+        owned = np.concatenate([p.owned_shards for p in pipes])
+        assert sorted(owned.tolist()) == list(range(64))
+
+    def test_batches_deterministic(self):
+        _, _, pipes = self._mk()
+        a = [b.copy() for _, b in zip(range(3), pipes[0].batches())]
+        b = [b.copy() for _, b in zip(range(3), pipes[0].batches())]
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+    def test_batch_shape_and_range(self):
+        _, _, pipes = self._mk()
+        batch = next(iter(pipes[0]))
+        assert batch.shape == (2, 128)
+        assert batch.min() >= 0 and batch.max() < 1000
+
+    def test_elastic_membership_minimal_movement(self):
+        cluster, ds, pipes = self._mk()
+        before = {h: set(p.owned_shards.tolist()) for h, p in enumerate(pipes)}
+        cluster.add_node(4, 1.0)
+        new_pipe = DataPipeline(ds, cluster, 4, batch_per_host=2, seq_len=128)
+        gained_total = set(new_pipe.owned_shards.tolist())
+        for h, p in enumerate(pipes):
+            gained, lost = p.refresh_membership()
+            assert gained.size == 0  # existing hosts never gain on addition
+            assert set(lost.tolist()) <= gained_total
+        owned = set()
+        for p in pipes + [new_pipe]:
+            owned |= set(p.owned_shards.tolist())
+        assert owned == set(range(64))
+
+    def test_epoch_order_varies(self):
+        _, _, pipes = self._mk()
+        b0 = next(pipes[0].batches(epoch=0))
+        b1 = next(pipes[0].batches(epoch=1))
+        assert not np.array_equal(b0, b1)
+
+
+class TestCheckpoint:
+    def _tree(self, rng):
+        return {
+            "w": rng.standard_normal((128, 64)).astype(np.float32),
+            "b": rng.standard_normal((7,)).astype(np.float32),
+            "nested": {"m": rng.standard_normal((33, 5)).astype(np.float32)},
+        }
+
+    def test_roundtrip(self):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=3)
+        mgr = CheckpointManager(store)
+        tree = self._tree(np.random.default_rng(0))
+        mgr.save(10, tree)
+        out = mgr.restore(10, tree)
+        assert np.array_equal(out["w"], tree["w"])
+        assert np.array_equal(out["b"], tree["b"])
+        assert np.array_equal(out["nested"]["m"], tree["nested"]["m"])
+
+    def test_survives_node_failures_below_replication(self):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=3)
+        mgr = CheckpointManager(store)
+        tree = self._tree(np.random.default_rng(1))
+        mgr.save(1, tree)
+        store.fail_node(0)
+        store.fail_node(3)  # 2 < n_replicas failures
+        out = mgr.restore(1, tree)
+        assert np.array_equal(out["w"], tree["w"])
+
+    def test_repair_moves_only_victims_chunks(self):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(8)}, n_replicas=3)
+        mgr = CheckpointManager(store)
+        tree = self._tree(np.random.default_rng(2))
+        mgr.save(5, tree)
+        victim_chunks = len(store.nodes[2].blobs)
+        moved = store.remove_node_and_repair(2)
+        assert moved == victim_chunks  # exactly the victim's copies re-made
+        out = mgr.restore(5, tree)
+        assert np.array_equal(out["nested"]["m"], tree["nested"]["m"])
+        # every chunk is back at full replication
+        for nid, node in store.nodes.items():
+            assert node.alive
+
+    def test_add_node_rebalances_minimally(self):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(4)}, n_replicas=2)
+        mgr = CheckpointManager(store)
+        tree = self._tree(np.random.default_rng(3))
+        mgr.save(7, tree)
+        keys = np.fromiter(
+            {k for n in store.nodes.values() for k in n.blobs}, dtype=np.uint32
+        )
+        before = store.replicas_for(keys)
+        moved = store.add_node(9, 1.0)
+        after = store.replicas_for(keys)
+        # exact minimality: copies written == new (key, node) assignments
+        want = sum(
+            len(set(a.tolist()) - set(b.tolist())) for a, b in zip(after, before)
+        )
+        assert moved == want
+        out = mgr.restore(7, tree)
+        assert np.array_equal(out["w"], tree["w"])
+
+    def test_async_save_overlaps(self):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(4)}, n_replicas=2)
+        mgr = CheckpointManager(store)
+        tree = self._tree(np.random.default_rng(4))
+        mgr.save_async(3, tree)
+        mgr.wait()
+        out = mgr.restore(3, tree)
+        assert np.array_equal(out["b"], tree["b"])
+
+
+class TestElasticCoordinator:
+    def test_add_plan_matches_bruteforce(self):
+        cluster = make_uniform_cluster(6)
+        ids = np.arange(3000, dtype=np.uint32)
+        coord = ElasticCoordinator(cluster, ids)
+        brute_before = cluster.place_nodes(ids)
+        plan = coord.add_node(6, 1.0)
+        brute_after = cluster.place_nodes(ids)
+        moved = np.nonzero(brute_before != brute_after)[0]
+        assert set(plan.moves) == {int(ids[i]) for i in moved}
+        for datum, (src, dst) in plan.moves.items():
+            assert dst == 6
+        assert np.array_equal(coord.owners(), brute_after)
+
+    def test_remove_plan_matches_bruteforce(self):
+        cluster = make_uniform_cluster(6)
+        ids = np.arange(3000, dtype=np.uint32)
+        coord = ElasticCoordinator(cluster, ids)
+        brute_before = cluster.place_nodes(ids)
+        plan = coord.remove_node(2)
+        brute_after = cluster.place_nodes(ids)
+        moved = np.nonzero(brute_before != brute_after)[0]
+        assert set(plan.moves) == {int(ids[i]) for i in moved}
+        for datum, (src, dst) in plan.moves.items():
+            assert src == 2
+        assert np.array_equal(coord.owners(), brute_after)
+
+    def test_heterogeneous_capacity_add(self):
+        cluster = Cluster()
+        for i, cap in enumerate([0.5, 1.7, 1.0, 2.3]):
+            cluster.add_node(i, cap)
+        ids = np.arange(2000, dtype=np.uint32)
+        coord = ElasticCoordinator(cluster, ids)
+        before = cluster.place_nodes(ids)
+        plan = coord.add_node(10, 1.4)
+        after = cluster.place_nodes(ids)
+        moved = np.nonzero(before != after)[0]
+        assert set(plan.moves) == {int(ids[i]) for i in moved}
+
+    def test_sequence_of_events(self):
+        cluster = make_uniform_cluster(5)
+        ids = np.arange(1500, dtype=np.uint32)
+        coord = ElasticCoordinator(cluster, ids)
+        for event in [("add", 5, 1.0), ("rm", 1, None), ("add", 6, 0.5), ("rm", 5, None)]:
+            if event[0] == "add":
+                coord.add_node(event[1], event[2])
+            else:
+                coord.remove_node(event[1])
+            assert np.array_equal(coord.owners(), cluster.place_nodes(ids))
+
+
+class TestFailureDetection:
+    def test_heartbeat_timeout(self):
+        t = {"now": 0.0}
+        tracker = HeartbeatTracker(timeout=5.0, clock=lambda: t["now"])
+        tracker.beat(0)
+        tracker.beat(1)
+        t["now"] = 4.0
+        tracker.beat(1)
+        t["now"] = 7.0
+        assert tracker.dead_nodes() == [0]
+
+    def test_detector_fires_once(self):
+        t = {"now": 0.0}
+        tracker = HeartbeatTracker(timeout=1.0, clock=lambda: t["now"])
+        tracker.beat(0)
+        fired = []
+        det = FailureDetector(tracker, on_failure=fired.append)
+        t["now"] = 3.0
+        assert det.poll() == [0]
+        assert det.poll() == []
+        assert fired == [0]
+
+    def test_end_to_end_failure_recovery(self):
+        """Heartbeat loss -> store repair -> restore still works."""
+        store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=3)
+        mgr = CheckpointManager(store)
+        tree = {"w": np.arange(100, dtype=np.float32)}
+        mgr.save(1, tree)
+        t = {"now": 0.0}
+        tracker = HeartbeatTracker(timeout=2.0, clock=lambda: t["now"])
+        for nid in store.nodes:
+            tracker.beat(nid)
+        det = FailureDetector(tracker, on_failure=store.remove_node_and_repair)
+        t["now"] = 3.0
+        for nid in list(store.nodes):
+            if nid != 4:
+                tracker.beat(nid)
+        t["now"] = 4.0  # node 4 last seen at 0 -> dead; others at 3 -> alive
+        assert det.poll() == [4]
+        out = mgr.restore(1, tree)
+        assert np.array_equal(out["w"], tree["w"])
+
+
+class TestStraggler:
+    def test_backup_dispatch(self):
+        t = {"now": 0.0}
+        mit = StragglerMitigator(clock=lambda: t["now"], threshold=2.0)
+        for sid, host in [(0, 0), (1, 1), (2, 2)]:
+            mit.start(sid, host)
+        t["now"] = 1.0
+        mit.complete(0)
+        mit.complete(1)
+        t["now"] = 5.0  # shard 2 is now > 2x median (1.0)
+        backups = mit.dispatch_backups([0, 1, 2, 3], load={})
+        assert backups and backups[0][0] == 2
+        assert backups[0][1] != 2
+
+    def test_no_duplicate_backups(self):
+        t = {"now": 0.0}
+        mit = StragglerMitigator(clock=lambda: t["now"], threshold=2.0)
+        mit.start(0, 0)
+        mit.start(1, 1)
+        t["now"] = 1.0
+        mit.complete(0)
+        t["now"] = 10.0
+        first = mit.dispatch_backups([0, 1], load={})
+        second = mit.dispatch_backups([0, 1], load={})
+        assert len(first) == 1 and second == []

@@ -1,0 +1,57 @@
+"""Serving-layer session routing tests."""
+
+import numpy as np
+
+from repro.serve import ReplicaRouter
+
+
+def test_routing_covers_all_replicas():
+    router = ReplicaRouter({i: 1.0 for i in range(6)})
+    owners = router.route(np.arange(10_000))
+    assert set(owners.tolist()) == set(range(6))
+
+
+def test_capacity_weighted_load():
+    router = ReplicaRouter({0: 2.0, 1: 1.0, 2: 1.0})
+    owners = router.route(np.arange(40_000))
+    frac0 = (owners == 0).mean()
+    assert 0.47 < frac0 < 0.53
+
+
+def test_replica_loss_moves_only_its_sessions():
+    sessions = np.arange(8_000)
+    router = ReplicaRouter({i: 1.0 for i in range(5)})
+    before = router.route(sessions)
+    plan = router.plan_scale_event(sessions, remove=2)
+    lost = (before == 2).sum()
+    assert plan.n_reprefills == lost
+    for sid, (src, dst) in plan.moved_sessions.items():
+        assert src == 2 and dst != 2
+
+
+def test_scale_out_steals_minimally():
+    sessions = np.arange(8_000)
+    router = ReplicaRouter({i: 1.0 for i in range(5)})
+    plan = router.plan_scale_event(sessions, add=(9, 1.0))
+    for sid, (src, dst) in plan.moved_sessions.items():
+        assert dst == 9
+    assert plan.n_reprefills < len(sessions) / 4  # ~1/6 expected
+
+
+def test_frontends_share_only_the_table():
+    router = ReplicaRouter({i: 1.0 for i in range(4)})
+    blob = router.table_blob()
+    assert len(blob) < 4096  # kilobyte-order shared state
+    from repro.core import Cluster
+
+    clone = Cluster.from_json(blob)
+    ids = np.arange(2_000, dtype=np.uint32)
+    assert np.array_equal(clone.place_nodes(ids), router.route(ids))
+
+
+def test_my_sessions_partition():
+    sessions = np.arange(5_000)
+    router = ReplicaRouter({i: 1.0 for i in range(4)})
+    parts = [router.my_sessions(r, sessions) for r in range(4)]
+    merged = np.sort(np.concatenate(parts))
+    assert np.array_equal(merged, sessions)

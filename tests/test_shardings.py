@@ -1,0 +1,186 @@
+"""Unit tests for the sharding rules and the dry-run helpers."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import data_axes, make_debug_mesh
+from repro.launch.shardings import (
+    _fit,
+    batch_shardings,
+    cache_shardings,
+    param_pspec,
+    param_shardings,
+)
+from repro.models import cache_specs, param_specs
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+def _find(tree_sh, *names):
+    node = tree_sh
+    for n in names:
+        node = node[n]
+    return node
+
+
+class TestParamRules:
+    def test_all_leaves_get_shardings(self, mesh):
+        for arch in ("granite-3-2b", "deepseek-v2-236b", "rwkv6-3b", "recurrentgemma-9b", "whisper-large-v3"):
+            cfg = get_config(arch)
+            specs = param_specs(cfg)
+            sh = param_shardings(mesh, specs)
+            assert jax.tree.structure(sh) == jax.tree.structure(specs)
+
+    def test_megatron_pairing(self, mesh):
+        """In-proj puts the wide dim on model; out-proj the reverse."""
+        cfg = get_config("granite-3-2b")
+        sh = param_shardings(mesh, param_specs(cfg))
+        blocks = sh["dense_blocks"] if "dense_blocks" in sh else sh["blocks"]
+        assert blocks["attn"]["w_q"].spec == P(None, "data", "model")
+        assert blocks["attn"]["w_o"].spec == P(None, "model", "data")
+        assert blocks["mlp"]["w_gate"].spec == P(None, "data", "model")
+        assert blocks["mlp"]["w_down"].spec == P(None, "model", "data")
+
+    def test_embed_vocab_on_model(self, mesh):
+        cfg = get_config("deepseek-7b")
+        sh = param_shardings(mesh, param_specs(cfg))
+        assert sh["embed"].spec == P("model", "data")
+        assert sh["lm_head"].spec == P("data", "model")
+
+    def test_moe_expert_parallel_when_divisible(self):
+        mesh = make_debug_mesh(1, 1)
+        cfg = get_config("deepseek-v2-236b")  # 160 experts
+        sh = param_shardings(mesh, param_specs(cfg))
+        # 160 % 1 == 0 -> expert axis keeps 'model'
+        assert sh["blocks"]["moe"]["w_gate"].spec[-3] == "model"
+
+    def test_moe_fallback_small_expert_count(self):
+        """mixtral: 8 experts < model axis 16 -> TP over d_ff instead."""
+        # fake a 16-way model axis via spec-level check (no 16 devices here):
+        cfg = get_config("mixtral-8x22b")
+        specs = param_specs(cfg)
+        leaf = specs["blocks"]["moe"]["w_gate"]  # (56, 8, 6144, 16384)
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        p = param_pspec(
+            (
+                jax.tree_util.DictKey("blocks"),
+                jax.tree_util.DictKey("moe"),
+                jax.tree_util.DictKey("w_gate"),
+            ),
+            leaf,
+            FakeMesh(),
+        )
+        assert p == P(None, None, "data", "model")
+
+    def test_norms_replicated(self, mesh):
+        cfg = get_config("granite-3-2b")
+        sh = param_shardings(mesh, param_specs(cfg))
+        assert sh["final_norm"]["scale"].spec == P()
+
+
+class TestFit:
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+        axis_names = ("pod", "data", "model")
+
+    def test_drops_nondividing(self):
+        m = self.FakeMesh()
+        assert _fit(m, P("data", "model"), (1, 32768)) == P(None, "model")
+        assert _fit(m, P("model"), (8,)) == P(None)
+        assert _fit(m, P(("pod", "data")), (64,)) == P(("pod", "data"))
+        assert _fit(m, P(("pod", "data")), (16,)) == P(None)
+
+    def test_keeps_dividing(self):
+        m = self.FakeMesh()
+        assert _fit(m, P("data", "model"), (256, 4096)) == P("data", "model")
+
+
+class TestCacheRules:
+    def test_batch_moves_to_seq_for_batch1(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        cfg = get_config("mixtral-8x22b")
+        specs = cache_specs(cfg, 1, 4096)  # long_500k clamps to window=4096
+        # can't build NamedSharding on a fake mesh; check the pspec directly
+        from repro.launch.shardings import cache_pspec
+
+        leaf = specs["blocks"]["k"]  # (56, 1, 4096, 8, 128)
+        p = cache_pspec(
+            (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("k")),
+            leaf,
+            FakeMesh(),
+            cfg,
+        )
+        # batch 1 unsharded; sequence takes dp AND model (kv=8 cannot take
+        # the 16-way model axis -> flash-decode seq sharding)
+        assert p == P(None, None, ("data", "model"), None, None)
+
+    def test_batch_sharded_when_divisible(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        from repro.launch.shardings import cache_pspec
+
+        cfg = get_config("deepseek-7b")
+        specs = cache_specs(cfg, 128, 32768)
+        leaf = specs["dense_blocks"]["k"]  # (30, 128, 32768, 32, 128)
+        p = cache_pspec(
+            (jax.tree_util.DictKey("dense_blocks"), jax.tree_util.DictKey("k")),
+            leaf,
+            FakeMesh(),
+            cfg,
+        )
+        # batch over dp; kv heads (32 % 16 == 0) on model
+        assert p == P(None, "data", None, "model", None)
+
+
+class TestCollectiveParser:
+    def test_parses_known_ops(self):
+        from repro.launch.dryrun import collective_bytes
+
+        hlo = """
+  %ag = bf16[256,4096] all-gather(bf16[16,4096] %x), dimensions={0}
+  %ar = f32[1024] all-reduce(f32[1024] %y), to_apply=%sum
+  %rs = f32[64,8] reduce-scatter(f32[1024,8] %z), dimensions={0}
+  %cp = u32[128] collective-permute(u32[128] %w), source_target_pairs={{0,1}}
+  %other = f32[2,2] add(f32[2,2] %a, f32[2,2] %b)
+"""
+        out = collective_bytes(hlo)
+        assert out["counts"] == {
+            "all-gather": 1,
+            "all-reduce": 1,
+            "reduce-scatter": 1,
+            "collective-permute": 1,
+        }
+        assert out["bytes"]["all-gather"] == 256 * 4096 * 2
+        assert out["bytes"]["all-reduce"] == 1024 * 4
+        assert out["total_bytes"] == sum(out["bytes"].values())
+
+    def test_tuple_shapes_ignored_gracefully(self):
+        from repro.launch.dryrun import collective_bytes
+
+        hlo = "%t = (f32[8], f32[8]) all-reduce(f32[8] %a, f32[8] %b)"
+        out = collective_bytes(hlo)  # tuple output lines don't match the re
+        assert out["total_bytes"] >= 0
+
+
+class TestBatchShardings:
+    def test_batch_first_dim(self, mesh):
+        import jax.numpy as jnp
+
+        tree = {"tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
+        sh = batch_shardings(mesh, tree)
+        assert sh["tokens"].spec == P(("data",), None)
