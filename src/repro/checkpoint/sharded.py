@@ -73,11 +73,15 @@ class AsuraCheckpointStore:
             self.cluster.add_node(nid, cap)
             self.nodes[nid] = StorageNode(nid, cap)
         self.n_replicas = n_replicas
+        # Chunk placement runs through the cluster's PlacementEngine: save /
+        # restore / repair issue many replica lookups against one cached
+        # table artifact per membership version (no per-call table prep).
+        self.engine = self.cluster.engine
 
     # -- placement ---------------------------------------------------------
 
     def replicas_for(self, keys: np.ndarray) -> np.ndarray:
-        return self.cluster.place_replicas(
+        return self.engine.place_replica_nodes(
             np.asarray(keys, dtype=np.uint32), self.n_replicas
         )
 

@@ -4,6 +4,7 @@ from .asura import (
     DEFAULT_PARAMS,
     AsuraParams,
     addition_number,
+    addition_numbers_batch,
     place_batch,
     place_nodes_batch,
     place_replicas_batch,
@@ -11,8 +12,10 @@ from .asura import (
     place_scalar,
     placement_trace,
     remove_numbers,
+    resolve_tail_np,
 )
 from .cluster import Cluster, NodeInfo, make_cluster, make_uniform_cluster
+from .engine import PlacementEngine, TableArtifact
 from .hierarchy import HierarchicalCluster
 from .consistent_hashing import ConsistentHashRing
 from .straw import StrawBucket
@@ -24,8 +27,11 @@ __all__ = [
     "NodeInfo",
     "ConsistentHashRing",
     "HierarchicalCluster",
+    "PlacementEngine",
     "StrawBucket",
+    "TableArtifact",
     "addition_number",
+    "addition_numbers_batch",
     "make_cluster",
     "make_uniform_cluster",
     "place_batch",
@@ -35,4 +41,5 @@ __all__ = [
     "place_scalar",
     "placement_trace",
     "remove_numbers",
+    "resolve_tail_np",
 ]

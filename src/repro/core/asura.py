@@ -109,6 +109,49 @@ def _upper_bound(seg_lengths: np.ndarray) -> float:
     return last + float(seg_lengths[last])
 
 
+def resolve_tail_np(
+    datum_ids: np.ndarray,
+    result: np.ndarray,
+    len32: np.ndarray,
+    top_level: int,
+) -> np.ndarray:
+    """Exact-integer fallback for non-converged lanes (DESIGN.md section 3.2).
+
+    Lanes still at -1 after the bounded draw loop (p < 2**-53 per lane) get a
+    uniform draw over the occupied u32 mass: one raw draw h at level
+    ``top_level + 1`` (counter 0) is scaled by the exact total mass T,
+
+        u = (h * T) >> 32,    u in [0, T),    T = sum(len32),
+
+    and mapped to the segment whose inclusive u64 cumsum first exceeds u.
+    The product h * T needs up to 95 bits (T < 2**63 since n_segs < 2**31),
+    so it is evaluated exactly through 32-bit halves of T:
+
+        u = h * (T >> 32) + ((h * (T & 0xFFFFFFFF)) >> 32)
+
+    where both terms fit uint64.  Pure integer arithmetic, so every
+    implementation (NumPy batch, jnp reference, Pallas wrapper) resolves the
+    tail bit-identically.  Trailing zero-length padding in ``len32`` never
+    wins (its cumsum equals the total).
+    """
+    result = np.asarray(result)
+    miss = result < 0
+    if not miss.any():
+        return result
+    len32 = np.asarray(len32, dtype=np.uint32)
+    cum = np.cumsum(len32.astype(np.uint64))
+    total = cum[-1]
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    h = draw_u32_np(
+        ids[miss], np.uint32(top_level + 1), np.zeros(int(miss.sum()), np.uint32)
+    ).astype(np.uint64)
+    hi, lo = total >> np.uint64(32), total & np.uint64(0xFFFFFFFF)
+    u = h * hi + ((h * lo) >> np.uint64(32))
+    result = result.copy()
+    result[miss] = np.searchsorted(cum, u, side="right")
+    return result
+
+
 # ---------------------------------------------------------------------------
 # Scalar oracle
 # ---------------------------------------------------------------------------
@@ -317,6 +360,36 @@ def _next_asura_batch(
     return out_k, out_frac
 
 
+def place_batch_u32(
+    datum_ids: np.ndarray,
+    len32: np.ndarray,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """Bounded-loop STEP 2 on a prebuilt u32 table; -1 marks non-converged.
+
+    The table-artifact entry point: ``PlacementEngine`` calls this with its
+    cached canonical table so repeated placements never re-derive ``len32``
+    or the top level.  Callers resolve the -1 tail via ``resolve_tail_np``.
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    len32 = np.asarray(len32, dtype=np.uint32)
+    n_segs = len(len32)
+    batch = ids.shape[0]
+    counters = np.zeros((batch, top_level + 1), dtype=np.uint32)
+    result = np.full(batch, -1, dtype=np.int64)
+    done = np.zeros(batch, dtype=bool)
+    for _ in range(params.max_draws):
+        k, frac = _next_asura_batch(ids, counters, top_level, params)
+        k_safe = np.minimum(k, n_segs - 1)
+        hit = (~done) & (k < n_segs) & (frac < len32[k_safe])
+        result = np.where(hit, k, result)
+        done |= hit
+        if done.all():
+            break
+    return result
+
+
 def place_batch(
     datum_ids: np.ndarray,
     seg_lengths: Sequence[float],
@@ -326,37 +399,16 @@ def place_batch(
 
     Bit-identical to ``place_scalar`` lane-by-lane (tested).  Lanes that fail
     to hit within ``params.max_draws`` draws (probability < 2**-53 per lane
-    for hole fractions <= 1/2) fall back to a uniform draw over the occupied
-    mass -- total and uniform but outside the movement-optimality guarantee;
-    see DESIGN.md section 3.2.
+    for hole fractions <= 1/2) fall back to the exact-integer uniform draw
+    over the occupied mass (``resolve_tail_np``) -- total and uniform but
+    outside the movement-optimality guarantee; see DESIGN.md section 3.2.
     """
     ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
     lengths = np.asarray(seg_lengths, dtype=np.float64)
     len32 = lengths_to_u32(lengths)
-    n_segs = len(len32)
     top = params.level_for(_upper_bound(lengths))
-    batch = ids.shape[0]
-    counters = np.zeros((batch, top + 1), dtype=np.uint32)
-    result = np.full(batch, -1, dtype=np.int64)
-    done = np.zeros(batch, dtype=bool)
-    for _ in range(params.max_draws):
-        k, frac = _next_asura_batch(ids, counters, top, params)
-        k_safe = np.minimum(k, n_segs - 1)
-        hit = (~done) & (k < n_segs) & (frac < len32[k_safe])
-        result = np.where(hit, k, result)
-        done |= hit
-        if done.all():
-            break
-    if not done.all():  # pragma: no cover - p < 2**-53 per lane
-        cdf = np.cumsum(lengths)
-        miss = ~done
-        u = (
-            draw_u32_np(ids[miss], top + 1, np.zeros(int(miss.sum()))).astype(np.float64)
-            * 2.0**-32
-            * cdf[-1]
-        )
-        result[miss] = np.searchsorted(cdf, u, side="right")
-    return result
+    result = place_batch_u32(ids, len32, top, params)
+    return resolve_tail_np(ids, result, len32, top)
 
 
 def place_nodes_batch(
@@ -370,29 +422,25 @@ def place_nodes_batch(
     return np.asarray(seg_to_node)[segs]
 
 
-def place_replicas_batch(
+def place_replicas_u32(
     datum_ids: np.ndarray,
-    seg_lengths: Sequence[float],
-    seg_to_node: Sequence[int],
+    len32: np.ndarray,
+    node_of: np.ndarray,
     n_replicas: int,
+    top_level: int,
     params: AsuraParams = DEFAULT_PARAMS,
 ) -> np.ndarray:
-    """(batch, n_replicas) segment numbers; first column is the primary.
-
-    Vectorized analogue of ``place_replicas_scalar`` (bit-identical; tested).
-    """
+    """Replica placement on a prebuilt u32 table -> (batch, R) segments."""
     ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
-    lengths = np.asarray(seg_lengths, dtype=np.float64)
-    len32 = lengths_to_u32(lengths)
-    node_of = np.asarray(seg_to_node)
+    len32 = np.asarray(len32, dtype=np.uint32)
+    node_of = np.asarray(node_of)
     n_segs = len(len32)
-    top = params.level_for(_upper_bound(lengths))
     batch = ids.shape[0]
-    counters = np.zeros((batch, top + 1), dtype=np.uint32)
+    counters = np.zeros((batch, top_level + 1), dtype=np.uint32)
     result = np.full((batch, n_replicas), -1, dtype=np.int64)
     found = np.zeros(batch, dtype=np.int64)
     for _ in range(params.max_draws * max(1, n_replicas)):
-        k, frac = _next_asura_batch(ids, counters, top, params)
+        k, frac = _next_asura_batch(ids, counters, top_level, params)
         k_safe = np.minimum(k, n_segs - 1)
         hit = (k < n_segs) & (frac < len32[k_safe]) & (found < n_replicas)
         node_k = node_of[k_safe]
@@ -409,3 +457,74 @@ def place_replicas_batch(
     if not (found >= n_replicas).all():
         raise RuntimeError("replication did not converge; too few distinct nodes?")
     return result
+
+
+def place_replicas_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """(batch, n_replicas) segment numbers; first column is the primary.
+
+    Vectorized analogue of ``place_replicas_scalar`` (bit-identical; tested).
+    """
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    top = params.level_for(_upper_bound(lengths))
+    return place_replicas_u32(
+        datum_ids, len32, np.asarray(seg_to_node), n_replicas, top, params
+    )
+
+
+def addition_numbers_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int = 1,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """Vectorized section 2.D ADDITION NUMBER for a batch of datum ids.
+
+    Runs the replica trace for every lane at once, tracking the minimum
+    *unused* anterior ASURA number as an exact (k << 32 | frac32) uint64 key
+    (value ordering is identical to the float ordering of the scalar trace,
+    without float64 round-off).  Lanes whose trace needs the rare
+    range-extension path (every anterior number used) or does not converge in
+    the bounded loop fall back to the exact scalar ``addition_number``.
+    Matches ``addition_number`` lane-by-lane (tested).
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    lengths = np.asarray(seg_lengths, dtype=np.float64)
+    len32 = lengths_to_u32(lengths)
+    node_of = np.asarray(seg_to_node)
+    n_segs = len(len32)
+    top = params.level_for(_upper_bound(lengths))
+    batch = ids.shape[0]
+    counters = np.zeros((batch, top + 1), dtype=np.uint32)
+    found = np.zeros(batch, dtype=np.int64)
+    picked_nodes = np.full((batch, n_replicas), -1, dtype=np.int64)
+    no_min = np.uint64(0xFFFFFFFFFFFFFFFF)
+    min_unused = np.full(batch, no_min, dtype=np.uint64)
+    for _ in range(params.max_draws * max(1, n_replicas)):
+        active = found < n_replicas
+        if not active.any():
+            break
+        k, frac = _next_asura_batch(ids, counters, top, params)
+        k_safe = np.minimum(k, n_segs - 1)
+        hit = (k < n_segs) & (frac < len32[k_safe])
+        node_k = node_of[k_safe]
+        dup = np.any((picked_nodes >= 0) & (picked_nodes == node_k[:, None]), axis=1)
+        used = active & hit & ~dup
+        key = (k.astype(np.uint64) << np.uint64(32)) | frac.astype(np.uint64)
+        unused = active & ~used
+        min_unused = np.where(unused, np.minimum(min_unused, key), min_unused)
+        rows = np.nonzero(used)[0]
+        picked_nodes[rows, found[rows]] = node_k[rows]
+        found[rows] += 1
+    an = (min_unused >> np.uint64(32)).astype(np.int64)
+    needs_scalar = (found < n_replicas) | (min_unused == no_min)
+    for i in np.nonzero(needs_scalar)[0]:
+        an[i] = addition_number(int(ids[i]), lengths, node_of, n_replicas, params)
+    return an

@@ -26,14 +26,7 @@ from typing import Iterable
 
 import numpy as np
 
-from .asura import (
-    DEFAULT_PARAMS,
-    AsuraParams,
-    place_batch,
-    place_nodes_batch,
-    place_replicas_batch,
-    place_scalar,
-)
+from .asura import DEFAULT_PARAMS, AsuraParams, place_scalar
 
 FULL_SEGMENT = (2.0**32 - 1.0) / 2.0**32  # rule 4: strictly under 1.0 (exact in u32)
 
@@ -55,12 +48,26 @@ class Cluster:
         self._seg_to_node: list[int] = []
         self._free_segments: list[int] = []  # min-heap of freed numbers
         self._version = 0
+        self._engine = None  # lazy PlacementEngine (one table artifact)
 
     # -- table views -------------------------------------------------------
 
     @property
     def version(self) -> int:
         return self._version
+
+    @property
+    def engine(self):
+        """The cluster's PlacementEngine (created on first placement).
+
+        All batched STEP-2 entry points below route through it, so repeated
+        placements at one version share a single cached table artifact
+        (one host->device upload on accelerator backends)."""
+        if self._engine is None:
+            from .engine import PlacementEngine  # lazy: avoids import cycle
+
+            self._engine = PlacementEngine(self)
+        return self._engine
 
     def seg_lengths(self) -> np.ndarray:
         return np.asarray(self._seg_lengths, dtype=np.float64)
@@ -168,23 +175,14 @@ class Cluster:
         return self._seg_to_node[self.place(datum_id)]
 
     def place_batch(self, datum_ids) -> np.ndarray:
-        return place_batch(datum_ids, self.seg_lengths(), self.params)
+        return self.engine.place(datum_ids)
 
     def place_nodes(self, datum_ids) -> np.ndarray:
-        return place_nodes_batch(
-            datum_ids, self.seg_lengths(), self.seg_to_node(), self.params
-        )
+        return self.engine.place_nodes(datum_ids)
 
     def place_replicas(self, datum_ids, n_replicas: int) -> np.ndarray:
         """(batch, R) node ids, primary first."""
-        segs = place_replicas_batch(
-            datum_ids,
-            self.seg_lengths(),
-            self.seg_to_node(),
-            n_replicas,
-            self.params,
-        )
-        return self.seg_to_node()[segs]
+        return self.engine.place_replica_nodes(datum_ids, n_replicas)
 
     # -- serialization (the small shared table) -----------------------------
 

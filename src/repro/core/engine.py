@@ -1,0 +1,188 @@
+"""PlacementEngine: one versioned, device-resident table artifact per cluster.
+
+Every placement consumer (router, elastic coordinator, data pipeline,
+checkpoint store, serving driver) used to re-derive, re-pad and re-upload the
+STEP-1 segment table on every call.  The engine owns a cached
+``TableArtifact`` keyed by ``Cluster.version``:
+
+  * ``len32``    -- canonical u32 lengths (round(length * 2**32)),
+  * ``node_of``  -- int32 seg->node map (-1 on holes),
+  * ``top_level``-- the static generator-ladder entry level,
+  * device copies, lane-padded for the Pallas kernels,
+
+so a STEP-1 mutation produces exactly ONE table materialization (one
+host->device upload on accelerator backends) no matter how many placement
+calls follow -- the ``uploads`` counter asserts this in tests.  STEP 2 then
+dispatches to one of three bit-identical backends:
+
+  * ``numpy``  -- vectorized NumPy (the CPU-host default; no device round
+                  trip for table or ids),
+  * ``ref``    -- jitted pure-jnp reference,
+  * ``pallas`` -- the Pallas kernel family (the TPU default), including the
+                  section 5.A replica-placement kernel.
+
+The non-converged tail (p < 2**-53 per lane) is resolved by the single
+exact-integer spec ``resolve_tail_np`` on every backend (DESIGN.md section
+3.2), so results are bit-for-bit independent of the backend choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .asura import (
+    DEFAULT_PARAMS,
+    AsuraParams,
+    _upper_bound,
+    lengths_to_u32,
+    place_batch_u32,
+    place_replicas_u32,
+    resolve_tail_np,
+)
+
+BACKENDS = ("auto", "numpy", "ref", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class TableArtifact:
+    """Immutable snapshot of one cluster version's placement table.
+
+    ``len32`` / ``node_of`` are the host (unpadded) canonical arrays --
+    ``node_of`` is int64 so per-call seg->node gathers never widen-copy the
+    table; ``len32_dev`` / ``node_of_dev`` are the lane-padded device copies
+    (None on the numpy backend, which never touches a device).
+    """
+
+    version: int
+    n_segs: int
+    top_level: int
+    len32: np.ndarray
+    node_of: np.ndarray
+    len32_dev: Any = None
+    node_of_dev: Any = None
+
+
+class PlacementEngine:
+    """Cached STEP-2 dispatcher bound to one mutable ``Cluster``.
+
+    The engine is deliberately duck-typed on the cluster: anything exposing
+    ``version``, ``params``, ``seg_lengths()`` and ``seg_to_node()`` works.
+    """
+
+    def __init__(
+        self,
+        cluster,
+        *,
+        backend: str = "auto",
+        interpret: bool | None = None,
+        rows_per_block: int | None = None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self.cluster = cluster
+        self.params: AsuraParams = getattr(cluster, "params", DEFAULT_PARAMS)
+        self._backend = backend
+        self._interpret = interpret
+        self._rows_per_block = rows_per_block
+        self._artifact: TableArtifact | None = None
+        self.uploads = 0  # table materializations (one per cluster version used)
+
+    # -- artifact lifecycle --------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        if self._backend == "auto":
+            # Lazy: only decide (and import jax) when placement is requested.
+            import jax
+
+            self._backend = "pallas" if jax.default_backend() == "tpu" else "numpy"
+        return self._backend
+
+    def artifact(self) -> TableArtifact:
+        """The current version's table, rebuilding (and re-uploading) only
+        when ``cluster.version`` has moved past the cached artifact."""
+        version = self.cluster.version
+        if self._artifact is not None and self._artifact.version == version:
+            return self._artifact
+        lengths = np.asarray(self.cluster.seg_lengths(), dtype=np.float64)
+        len32 = lengths_to_u32(lengths)
+        node_of = np.asarray(self.cluster.seg_to_node(), dtype=np.int64)
+        top_level = self.params.level_for(_upper_bound(lengths))
+        len32_dev = node_of_dev = None
+        if self.backend != "numpy":
+            from repro.kernels.ops import node_table_prep, table_prep
+
+            len32_dev, _ = table_prep(lengths, self.params)
+            node_of_dev = node_table_prep(node_of)
+        self._artifact = TableArtifact(
+            version=version,
+            n_segs=len(len32),
+            top_level=top_level,
+            len32=len32,
+            node_of=node_of,
+            len32_dev=len32_dev,
+            node_of_dev=node_of_dev,
+        )
+        self.uploads += 1
+        return self._artifact
+
+    def invalidate(self) -> None:
+        """Drop the cached artifact (next placement rebuilds it)."""
+        self._artifact = None
+
+    # -- STEP 2 dispatch -----------------------------------------------------
+
+    def _kernel_kwargs(self) -> dict:
+        kw: dict = {
+            "params": self.params,
+            "use_pallas": self.backend == "pallas",
+            "interpret": self._interpret,
+        }
+        if self._rows_per_block is not None:
+            kw["rows_per_block"] = self._rows_per_block
+        return kw
+
+    def place(self, datum_ids) -> np.ndarray:
+        """Batch placement -> int64 segment numbers (tail-resolved, total)."""
+        art = self.artifact()
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.backend == "numpy":
+            segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
+            return resolve_tail_np(ids, segs, art.len32, art.top_level)
+        from repro.kernels.ops import place_on_table
+
+        return place_on_table(
+            ids, art.len32_dev, top_level=art.top_level, **self._kernel_kwargs()
+        )
+
+    def place_nodes(self, datum_ids) -> np.ndarray:
+        """Batch placement -> int64 node ids."""
+        art = self.artifact()
+        return art.node_of[self.place(datum_ids)]
+
+    def place_replicas(self, datum_ids, n_replicas: int) -> np.ndarray:
+        """(batch, R) segment numbers on R distinct nodes, primary first."""
+        art = self.artifact()
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.backend == "numpy":
+            return place_replicas_u32(
+                ids, art.len32, art.node_of, n_replicas, art.top_level, self.params
+            )
+        from repro.kernels.ops import place_replicas_on_table
+
+        return place_replicas_on_table(
+            ids,
+            art.len32_dev,
+            art.node_of_dev,
+            n_replicas,
+            top_level=art.top_level,
+            **self._kernel_kwargs(),
+        )
+
+    def place_replica_nodes(self, datum_ids, n_replicas: int) -> np.ndarray:
+        """(batch, R) node ids, primary first."""
+        art = self.artifact()
+        return art.node_of[self.place_replicas(datum_ids, n_replicas)]

@@ -74,6 +74,10 @@ class DataPipeline:
     ):
         self.dataset = dataset
         self.cluster = cluster
+        # Every pipeline on a host shares the cluster's PlacementEngine, so
+        # ownership recomputes (initial + refresh_membership after elastic
+        # events) reuse one cached table artifact per membership version.
+        self.engine = cluster.engine
         self.host_id = host_id
         self.batch_per_host = batch_per_host
         self.seq_len = seq_len
@@ -82,7 +86,7 @@ class DataPipeline:
 
     def _compute_owned(self) -> np.ndarray:
         shard_ids = np.arange(self.dataset.n_shards, dtype=np.uint32)
-        owners = self.cluster.place_nodes(shard_ids)
+        owners = self.engine.place_nodes(shard_ids)
         return shard_ids[owners == self.host_id]
 
     def refresh_membership(self) -> tuple[np.ndarray, np.ndarray]:

@@ -1,6 +1,22 @@
-"""Pallas TPU kernels: batched ASURA placement (asura_place) with jit
-wrapper (ops) and pure-jnp oracle (ref)."""
+"""Pallas TPU kernels: batched ASURA placement and replication
+(asura_place) with jit wrappers (ops) and pure-jnp oracles (ref)."""
 
-from .ops import asura_place, asura_place_nodes, table_prep
+from .ops import (
+    asura_place,
+    asura_place_nodes,
+    asura_place_replicas,
+    node_table_prep,
+    place_on_table,
+    place_replicas_on_table,
+    table_prep,
+)
 
-__all__ = ["asura_place", "asura_place_nodes", "table_prep"]
+__all__ = [
+    "asura_place",
+    "asura_place_nodes",
+    "asura_place_replicas",
+    "node_table_prep",
+    "place_on_table",
+    "place_replicas_on_table",
+    "table_prep",
+]

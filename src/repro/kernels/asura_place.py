@@ -32,6 +32,30 @@ LANE = 128
 DEFAULT_ROWS = 16  # (16, 128) = 2048 ids per grid step
 
 
+def _next_asura_tile(ids, counters, top_level: int, s_log2: int):
+    """One ASURA number per lane of a (rows, LANE) tile: (k, frac32, ctrs).
+
+    The unrolled descend ladder shared by the placement and replication
+    kernels -- counter-based draws, MSB descend test, shift-based
+    floor/fraction (the exact-u32 formulation, DESIGN.md section 3)."""
+    shape = ids.shape
+    consult = jnp.ones(shape, dtype=bool)
+    out_k = jnp.zeros(shape, dtype=jnp.int32)
+    out_f = jnp.zeros(shape, dtype=jnp.uint32)
+    rows = []
+    for level in range(top_level, -1, -1):
+        h = draw_u32(ids, level, counters[top_level - level])
+        rows.append(counters[top_level - level] + consult.astype(jnp.uint32))
+        descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
+        emit = consult & ~descend
+        k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
+        f = h << jnp.uint32(s_log2 + level)
+        out_k = jnp.where(emit, k, out_k)
+        out_f = jnp.where(emit, f, out_f)
+        consult = descend
+    return out_k, out_f, jnp.stack(rows)
+
+
 def _place_kernel(
     ids_ref,
     table_ref,
@@ -47,21 +71,7 @@ def _place_kernel(
     shape = ids.shape
 
     def next_asura(counters):
-        consult = jnp.ones(shape, dtype=bool)
-        out_k = jnp.zeros(shape, dtype=jnp.int32)
-        out_f = jnp.zeros(shape, dtype=jnp.uint32)
-        rows = []
-        for level in range(top_level, -1, -1):
-            h = draw_u32(ids, level, counters[top_level - level])
-            rows.append(counters[top_level - level] + consult.astype(jnp.uint32))
-            descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
-            emit = consult & ~descend
-            k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
-            f = h << jnp.uint32(s_log2 + level)
-            out_k = jnp.where(emit, k, out_k)
-            out_f = jnp.where(emit, f, out_f)
-            consult = descend
-        return out_k, out_f, jnp.stack(rows)
+        return _next_asura_tile(ids, counters, top_level, s_log2)
 
     def cond(state):
         i, _, _, done = state
@@ -83,6 +93,133 @@ def _place_kernel(
         cond, body, (jnp.int32(0), counters0, result0, done0)
     )
     out_ref[...] = result
+
+
+def _place_replicas_kernel(
+    ids_ref,
+    table_ref,
+    node_ref,
+    out_ref,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs: int,
+    n_replicas: int,
+):
+    """Section 5.A replication: first R hits on distinct nodes, per lane.
+
+    Same bounded masked draw loop as ``_place_kernel``, with per-lane
+    ``(found, segs[R], nodes[R])`` state: ``nodes`` carries the node of each
+    already-picked replica in-register so the distinct-node dup test is R
+    compares instead of R extra VMEM gathers; the seg->node table is gathered
+    once per draw (alongside the length gather) to resolve the candidate's
+    node.  Draw order and hit tests are bit-identical to
+    ``place_replicas_scalar``; -1 marks non-converged entries (ops.py raises).
+    """
+    ids = ids_ref[...]  # (rows, LANE) uint32
+    table = table_ref[...]  # (n_pad,) uint32
+    node_of = node_ref[...]  # (n_pad,) int32, -1 on holes/padding
+    shape = ids.shape
+    R = n_replicas
+
+    def next_asura(counters):
+        return _next_asura_tile(ids, counters, top_level, s_log2)
+
+    def cond(state):
+        i, _, _, _, found = state
+        return (i < max_draws * max(1, R)) & ~jnp.all(found >= R)
+
+    def body(state):
+        i, counters, segs, nodes, found = state
+        k, f, counters = next_asura(counters)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        flat = k_safe.reshape(-1)
+        lens = jnp.take(table, flat, axis=0).reshape(shape)
+        node_k = jnp.take(node_of, flat, axis=0).reshape(shape)
+        hit = (found < R) & (k < n_segs) & (f < lens)
+        dup = jnp.zeros(shape, dtype=bool)
+        for r in range(R):
+            dup |= (nodes[r] >= 0) & (nodes[r] == node_k)
+        take = hit & ~dup
+        segs = jnp.stack(
+            [jnp.where(take & (found == r), k, segs[r]) for r in range(R)]
+        )
+        nodes = jnp.stack(
+            [jnp.where(take & (found == r), node_k, nodes[r]) for r in range(R)]
+        )
+        return i + 1, counters, segs, nodes, found + take.astype(jnp.int32)
+
+    counters0 = jnp.zeros((top_level + 1,) + shape, dtype=jnp.uint32)
+    segs0 = jnp.full((R,) + shape, -1, dtype=jnp.int32)
+    nodes0 = jnp.full((R,) + shape, -1, dtype=jnp.int32)
+    found0 = jnp.zeros(shape, dtype=jnp.int32)
+    _, _, segs, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), counters0, segs0, nodes0, found0)
+    )
+    out_ref[...] = segs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "top_level",
+        "s_log2",
+        "max_draws",
+        "n_replicas",
+        "rows_per_block",
+        "interpret",
+    ),
+)
+def place_replicas_pallas(
+    ids: jax.Array,
+    len32: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    n_replicas: int = 1,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched replica placement via pl.pallas_call -> (total, R) int32 segs.
+
+    ids must be (m * rows_per_block * 128,) uint32 and len32 / node_of
+    128-padded (ops.py pads; node padding is -1).  Non-converged entries are
+    -1 (the ops.py wrapper raises on them after unpadding).
+    """
+    n_segs = int(len32.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "ops.py must pad ids to a block multiple"
+    assert n_segs % LANE == 0, "ops.py must pad the table to a lane multiple"
+    assert node_of.shape[0] == n_segs, "node table must match the length table"
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _place_replicas_kernel,
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs,
+        n_replicas=n_replicas,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_segs,), lambda i: (0,)),  # whole table per block
+            pl.BlockSpec((n_segs,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_replicas, rows_per_block, LANE), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_replicas, total // LANE, LANE), jnp.int32
+        ),
+        interpret=interpret,
+    )(ids2, len32, node_of.astype(jnp.int32))
+    return out.reshape(n_replicas, total).T
 
 
 @functools.partial(

@@ -1,10 +1,16 @@
-"""Jitted public wrapper for batched ASURA placement.
+"""Jitted public wrappers for batched ASURA placement and replication.
 
 ``asura_place`` pads the id vector / segment table, dispatches to the Pallas
 kernel (interpret mode on CPU, compiled on TPU), resolves the p < 2**-53
-non-converged tail with a uniform draw over occupied mass (totality without
-sacrificing uniformity), and unpads.  ``asura_place_nodes`` additionally maps
-segments -> node ids.
+non-converged tail with the exact-integer uniform draw over occupied mass
+(``repro.core.asura.resolve_tail_np`` -- the single tail spec shared with the
+NumPy batch path; DESIGN.md section 3.2), and unpads.  ``asura_place_nodes``
+additionally maps segments -> node ids; ``asura_place_replicas`` runs the
+section 5.A distinct-node replica kernel.
+
+The ``*_on_table`` variants take a prebuilt device-resident table (lane-padded
+u32 lengths + int32 seg->node map + static top level) so the PlacementEngine
+can issue many placement calls against one host->device upload.
 """
 
 from __future__ import annotations
@@ -13,10 +19,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.asura import DEFAULT_PARAMS, AsuraParams, _upper_bound
+from repro.core.asura import (
+    DEFAULT_PARAMS,
+    AsuraParams,
+    _upper_bound,
+    resolve_tail_np,
+)
 
-from .asura_place import DEFAULT_ROWS, LANE, place_pallas
-from .ref import draw_u32, place_ref
+from .asura_place import (
+    DEFAULT_ROWS,
+    LANE,
+    place_pallas,
+    place_replicas_pallas,
+)
+from .ref import place_ref, place_replicas_ref
 
 
 def _pad_to(x: jax.Array, multiple: int, fill) -> jax.Array:
@@ -26,16 +42,11 @@ def _pad_to(x: jax.Array, multiple: int, fill) -> jax.Array:
     return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
 
 
-def _resolve_tail(ids, result, len32):
-    """Uniform-over-occupied-mass fallback for non-converged lanes."""
-    mass = jnp.cumsum(len32.astype(jnp.float32) * jnp.float32(2.0**-32))
-    u = (
-        draw_u32(ids, 40, jnp.zeros_like(ids)).astype(jnp.float32)
-        * jnp.float32(2.0**-32)
-        * mass[-1]
-    )
-    fallback = jnp.searchsorted(mass, u, side="right").astype(jnp.int32)
-    return jnp.where(result < 0, fallback, result)
+def _lane_pad_np(x: np.ndarray, fill) -> np.ndarray:
+    pad = (-x.shape[0]) % LANE
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
 
 
 def table_prep(seg_lengths, params: AsuraParams = DEFAULT_PARAMS):
@@ -43,32 +54,39 @@ def table_prep(seg_lengths, params: AsuraParams = DEFAULT_PARAMS):
     lengths = np.asarray(seg_lengths, dtype=np.float64)
     top_level = params.level_for(_upper_bound(lengths))
     len32 = np.minimum(np.round(lengths * 2.0**32), 2.0**32 - 1).astype(np.uint32)
-    pad = (-len32.shape[0]) % LANE
-    if pad:
-        len32 = np.concatenate([len32, np.zeros(pad, dtype=np.uint32)])
-    return jnp.asarray(len32), top_level
+    return jnp.asarray(_lane_pad_np(len32, np.uint32(0))), top_level
 
 
-def asura_place(
+def node_table_prep(seg_to_node) -> jax.Array:
+    """Host-side: int32 seg->node map, lane-padded with -1 (hole marker)."""
+    node_of = np.asarray(seg_to_node, dtype=np.int32)
+    return jnp.asarray(_lane_pad_np(node_of, np.int32(-1)))
+
+
+def place_on_table(
     datum_ids,
-    seg_lengths,
-    params: AsuraParams = DEFAULT_PARAMS,
+    len32: jax.Array,
     *,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
     use_pallas: bool = True,
     interpret: bool | None = None,
     rows_per_block: int = DEFAULT_ROWS,
-) -> jax.Array:
-    """Place a batch of datum ids -> int32 segment numbers.
+) -> np.ndarray:
+    """Placement against a prebuilt (lane-padded) device table -> int64 segs.
 
-    use_pallas=False routes through the pure-jnp reference (place_ref) --
-    the path the distributed pipeline uses on CPU hosts; the Pallas path is
-    the TPU fast path (validated bit-identical in tests/test_kernels.py).
+    The tail (-1 lanes, p < 2**-53) is resolved on the host with the exact
+    integer spec, so this path agrees bit-for-bit with the NumPy
+    ``place_batch`` including the fallback.  This is a host-facing API (one
+    device->host transfer per call, which every engine consumer needs
+    anyway); pipelines that keep results on device should call
+    ``place_pallas`` directly and treat -1 as the (practically impossible)
+    non-converged marker.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     ids = jnp.asarray(datum_ids).astype(jnp.uint32)
     n = ids.shape[0]
-    len32, top_level = table_prep(seg_lengths, params)
     if use_pallas:
         block = rows_per_block * LANE
         padded = _pad_to(ids, block, 0)
@@ -89,7 +107,88 @@ def asura_place(
             s_log2=params.s_log2,
             max_draws=params.max_draws,
         )
-    return _resolve_tail(ids, result, len32)
+    return resolve_tail_np(
+        np.asarray(ids), np.asarray(result).astype(np.int64), np.asarray(len32), top_level
+    )
+
+
+def place_replicas_on_table(
+    datum_ids,
+    len32: jax.Array,
+    node_of: jax.Array,
+    n_replicas: int,
+    *,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> np.ndarray:
+    """Replica placement against a prebuilt table -> (batch, R) int64 segs.
+
+    Raises on non-convergence (more replicas requested than distinct nodes
+    can supply within the bounded loop), matching the NumPy batch path.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_to(ids, block, 0)
+        result = place_replicas_pallas(
+            padded,
+            len32,
+            node_of,
+            top_level=top_level,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            n_replicas=n_replicas,
+            rows_per_block=rows_per_block,
+            interpret=interpret,
+        )[:n]
+    else:
+        result = place_replicas_ref(
+            ids,
+            len32,
+            node_of,
+            top_level=top_level,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            n_replicas=n_replicas,
+        )
+    out = np.asarray(result).astype(np.int64)
+    if (out < 0).any():
+        raise RuntimeError("replication did not converge; too few distinct nodes?")
+    return out
+
+
+def asura_place(
+    datum_ids,
+    seg_lengths,
+    params: AsuraParams = DEFAULT_PARAMS,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Place a batch of datum ids -> int32 segment numbers.
+
+    use_pallas=False routes through the pure-jnp reference (place_ref) --
+    the path the distributed pipeline uses on CPU hosts; the Pallas path is
+    the TPU fast path (validated bit-identical in tests/test_kernels.py).
+    """
+    len32, top_level = table_prep(seg_lengths, params)
+    segs = place_on_table(
+        datum_ids,
+        len32,
+        top_level=top_level,
+        params=params,
+        use_pallas=use_pallas,
+        interpret=interpret,
+        rows_per_block=rows_per_block,
+    )
+    return jnp.asarray(segs.astype(np.int32))
 
 
 def asura_place_nodes(
@@ -101,3 +200,31 @@ def asura_place_nodes(
 ) -> jax.Array:
     segs = asura_place(datum_ids, seg_lengths, params, **kwargs)
     return jnp.asarray(np.asarray(seg_to_node, dtype=np.int32))[segs]
+
+
+def asura_place_replicas(
+    datum_ids,
+    seg_lengths,
+    seg_to_node,
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Replica placement -> (batch, R) int32 segment numbers, primary first."""
+    len32, top_level = table_prep(seg_lengths, params)
+    node_of = node_table_prep(seg_to_node)
+    segs = place_replicas_on_table(
+        datum_ids,
+        len32,
+        node_of,
+        n_replicas,
+        top_level=top_level,
+        params=params,
+        use_pallas=use_pallas,
+        interpret=interpret,
+        rows_per_block=rows_per_block,
+    )
+    return jnp.asarray(segs.astype(np.int32))

@@ -96,3 +96,61 @@ def place_ref(
     done0 = jnp.zeros((batch,), dtype=bool)
     _, _, result, _ = jax.lax.while_loop(cond, body, (0, counters0, result0, done0))
     return result
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "n_replicas")
+)
+def place_replicas_ref(
+    ids: jax.Array,
+    len32: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    n_replicas: int = 1,
+) -> jax.Array:
+    """Batched section 5.A replication -> (batch, R) int32 segment numbers.
+
+    First column is the primary; the R draws hit distinct *nodes* (checked
+    against the nodes of already-picked replicas, carried in-register so the
+    dup test costs no extra table gather).  -1 marks lanes that did not
+    converge (the wrapper raises).  Bit-identical to
+    ``repro.core.asura.place_replicas_scalar`` lane-by-lane (tested).
+    """
+    ids = ids.astype(jnp.uint32)
+    n_segs = len32.shape[0]
+    batch = ids.shape[0]
+    R = n_replicas
+
+    def cond(state):
+        i, _, _, _, found = state
+        return (i < max_draws * max(1, R)) & ~jnp.all(found >= R)
+
+    def body(state):
+        i, counters, segs, nodes, found = state
+        k, f, counters = next_asura(ids, counters, top_level, s_log2)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        hit = (found < R) & (k < n_segs) & (f < len32[k_safe])
+        node_k = node_of[k_safe]
+        dup = jnp.zeros((batch,), dtype=bool)
+        for r in range(R):
+            dup |= (nodes[r] >= 0) & (nodes[r] == node_k)
+        take = hit & ~dup
+        segs = jnp.stack(
+            [jnp.where(take & (found == r), k, segs[r]) for r in range(R)]
+        )
+        nodes = jnp.stack(
+            [jnp.where(take & (found == r), node_k, nodes[r]) for r in range(R)]
+        )
+        return i + 1, counters, segs, nodes, found + take.astype(jnp.int32)
+
+    counters0 = jnp.zeros((top_level + 1, batch), dtype=jnp.uint32)
+    segs0 = jnp.full((R, batch), -1, dtype=jnp.int32)
+    nodes0 = jnp.full((R, batch), -1, dtype=jnp.int32)
+    found0 = jnp.zeros((batch,), dtype=jnp.int32)
+    _, _, segs, _, _ = jax.lax.while_loop(
+        cond, body, (0, counters0, segs0, nodes0, found0)
+    )
+    return segs.T

@@ -41,12 +41,17 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = reduced_config(cfg)
 
-    # ASURA request routing
+    # ASURA request routing via the PlacementEngine: the replica-membership
+    # table is canonicalized once and reused for every routing call below.
     routing = make_uniform_cluster(args.replicas)
+    engine = routing.engine
     req_ids = np.arange(args.requests, dtype=np.uint32)
-    owners = routing.place_nodes(req_ids)
+    owners = engine.place_nodes(req_ids)
     mine = req_ids[owners == args.replica_id]
-    print(f"replica {args.replica_id} serves {mine.size}/{args.requests} requests")
+    print(
+        f"replica {args.replica_id} serves {mine.size}/{args.requests} requests "
+        f"(engine backend={engine.backend}, table uploads={engine.uploads})"
+    )
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     serve = jax.jit(make_serve_step(cfg))

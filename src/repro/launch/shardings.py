@@ -190,6 +190,10 @@ def cache_pspec(path, leaf, mesh, cfg: ModelConfig) -> P:
     shape = tuple(getattr(leaf, "shape", ()))
     nd = len(shape)
     dp = data_axes(mesh)
+    # Canonical form: a single dp axis is the bare name ('data'), not the
+    # 1-tuple ('data',) -- _join_axes still builds real multi-axis tuples.
+    if len(dp) == 1:
+        dp = dp[0]
     if name == "index" or nd == 0:
         return P()
     batch_ok = nd >= 2 and shape[-_trailing_rank(name)] % _axis_size(mesh, dp) == 0

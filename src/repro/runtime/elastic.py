@@ -23,7 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import Cluster
-from repro.core.asura import addition_number, remove_numbers
+from repro.core.asura import addition_numbers_batch, remove_numbers
 
 
 @dataclasses.dataclass
@@ -40,18 +40,20 @@ class MovePlan:
 class ElasticCoordinator:
     def __init__(self, cluster: Cluster, tracked_ids: np.ndarray):
         self.cluster = cluster
+        self.engine = cluster.engine  # shared versioned table artifact
         self.tracked = np.asarray(tracked_ids, dtype=np.uint32)
-        self._owners = self.cluster.place_nodes(self.tracked)
+        self._owners = self.engine.place_nodes(self.tracked)
         self._an: np.ndarray | None = None  # lazy ADDITION NUMBER cache
 
     # -- metadata ------------------------------------------------------------
 
     def _addition_numbers(self) -> np.ndarray:
         if self._an is None:
-            lengths = self.cluster.seg_lengths()
-            node_of = self.cluster.seg_to_node()
-            self._an = np.array(
-                [addition_number(int(i), lengths, node_of) for i in self.tracked]
+            # Vectorized 2.D metadata: one batched trace over every tracked
+            # id (addition_numbers_batch), not a per-id Python loop.
+            art = self.engine.artifact()
+            self._an = addition_numbers_batch(
+                self.tracked, self.cluster.seg_lengths(), art.node_of
             )
         return self._an
 
@@ -69,7 +71,7 @@ class ElasticCoordinator:
         candidates = np.nonzero(an <= max_seg)[0]
         moves: dict[int, tuple[int, int]] = {}
         if candidates.size:
-            new_owner = self.cluster.place_nodes(self.tracked[candidates])
+            new_owner = self.engine.place_nodes(self.tracked[candidates])
             for idx, owner in zip(candidates, new_owner):
                 if owner != owners_before[idx]:
                     moves[int(self.tracked[idx])] = (int(owners_before[idx]), int(owner))
@@ -84,7 +86,7 @@ class ElasticCoordinator:
         self.cluster.remove_node(node_id)
         moves: dict[int, tuple[int, int]] = {}
         if victim_rows.size:
-            new_owner = self.cluster.place_nodes(self.tracked[victim_rows])
+            new_owner = self.engine.place_nodes(self.tracked[victim_rows])
             for idx, owner in zip(victim_rows, new_owner):
                 moves[int(self.tracked[idx])] = (node_id, int(owner))
                 self._owners[idx] = owner

@@ -14,6 +14,10 @@ a full prefill). ASURA gives exactly the right trade:
 
 ``plan_scale_event`` returns the exact session moves so the serving layer
 can schedule cache re-prefill for just those sessions.
+
+Routing goes through the cluster's ``PlacementEngine``: the segment table is
+canonicalized (and, on accelerator backends, uploaded) once per membership
+version, so the per-request hot path is pure placement -- no table prep.
 """
 
 from __future__ import annotations
@@ -39,10 +43,23 @@ class ReplicaRouter:
         self.cluster = Cluster()
         for rid, cap in replica_capacities.items():
             self.cluster.add_node(rid, cap)
+        self.engine = self.cluster.engine
 
     def route(self, session_ids) -> np.ndarray:
         """session ids -> replica ids (vectorized, table-local)."""
-        return self.cluster.place_nodes(np.asarray(session_ids, dtype=np.uint32))
+        return self.engine.place_nodes(np.asarray(session_ids, dtype=np.uint32))
+
+    def route_replicas(self, session_ids, n_replicas: int) -> np.ndarray:
+        """(sessions, R) replica ids on distinct replicas, primary first --
+        for read fan-out / warm-standby session caches (section 5.A)."""
+        return self.engine.place_replica_nodes(
+            np.asarray(session_ids, dtype=np.uint32), n_replicas
+        )
+
+    @property
+    def table_uploads(self) -> int:
+        """Table materializations so far (1 per membership version used)."""
+        return self.engine.uploads
 
     def my_sessions(self, replica_id: int, session_ids) -> np.ndarray:
         ids = np.asarray(session_ids, dtype=np.uint32)

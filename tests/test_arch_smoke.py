@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~4 min: every arch compiles fwd/train/decode
+
 from repro.configs import ARCHS, get_config
 from repro.models import (
     SHAPES,

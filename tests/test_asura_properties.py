@@ -16,6 +16,9 @@ cluster histories:
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # degrade, don't abort collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

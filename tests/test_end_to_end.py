@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute: real training loops
+
 from repro.checkpoint import AsuraCheckpointStore, CheckpointManager
 from repro.configs import get_config
 from repro.core import make_uniform_cluster

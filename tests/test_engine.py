@@ -1,0 +1,293 @@
+"""PlacementEngine tests: artifact caching, replica kernels, consumer paths.
+
+Covers the ISSUE acceptance criteria directly:
+  * cache invalidation on Cluster.version bump (upload counter),
+  * place_replicas_pallas (interpret) bit-identical to place_replicas_scalar
+    for R in {1, 2, 3} on mixed-capacity tables,
+  * zero table re-uploads across repeated ReplicaRouter.route /
+    Cluster.place_nodes calls at a fixed version,
+  * the unified exact-integer tail fallback across all backends,
+  * the vectorized ADDITION NUMBER trace vs the scalar oracle.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import (
+    Cluster,
+    PlacementEngine,
+    make_cluster,
+    make_uniform_cluster,
+)
+from repro.core.asura import (
+    AsuraParams,
+    addition_number,
+    addition_numbers_batch,
+    place_batch,
+    place_replicas_batch,
+    place_replicas_scalar,
+)
+from repro.kernels.ops import (
+    asura_place,
+    asura_place_replicas,
+    node_table_prep,
+    place_replicas_on_table,
+    table_prep,
+)
+from repro.runtime import ElasticCoordinator
+from repro.serve import ReplicaRouter
+
+MIXED = [0.3, 1.7, 2.0, 0.9, 1.0, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# Table artifact caching / invalidation
+# ---------------------------------------------------------------------------
+
+
+class TestArtifactCache:
+    def test_one_upload_across_repeated_calls(self):
+        c = make_cluster(MIXED)
+        ids = np.arange(256, dtype=np.uint32)
+        for _ in range(5):
+            c.place_nodes(ids)
+            c.place_batch(ids)
+            c.place_replicas(ids[:32], 2)
+        assert c.engine.uploads == 1
+
+    def test_version_bump_invalidates(self):
+        c = make_cluster(MIXED)
+        ids = np.arange(128, dtype=np.uint32)
+        c.place_nodes(ids)
+        assert c.engine.uploads == 1
+        c.add_node(50, 1.0)  # STEP-1 mutation bumps the version
+        c.place_nodes(ids)
+        assert c.engine.uploads == 2
+        c.resize_node(50, 2.5)
+        c.place_batch(ids)
+        assert c.engine.uploads == 3
+        c.remove_node(50)
+        c.place_replicas(ids[:16], 2)
+        assert c.engine.uploads == 4
+
+    def test_artifact_matches_cluster_tables(self):
+        c = make_cluster(MIXED)
+        art = c.engine.artifact()
+        assert art.version == c.version
+        assert art.n_segs == len(c.seg_lengths())
+        assert np.array_equal(art.node_of, c.seg_to_node())
+        # same object returned while the version holds
+        assert c.engine.artifact() is art
+
+    def test_invalidate_forces_rebuild(self):
+        c = make_cluster(MIXED)
+        c.engine.artifact()
+        c.engine.invalidate()
+        c.engine.artifact()
+        assert c.engine.uploads == 2
+
+    def test_rejects_unknown_backend(self):
+        with pytest.raises(ValueError):
+            PlacementEngine(make_cluster(MIXED), backend="tpuv7")
+
+
+# ---------------------------------------------------------------------------
+# Engine placement == established oracles, across backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref", "pallas"])
+class TestBackendEquivalence:
+    def test_place_matches_numpy_batch(self, backend):
+        c = make_cluster(MIXED)
+        eng = PlacementEngine(c, backend=backend)
+        ids = (np.arange(700, dtype=np.uint64) * 2654435761 % (2**32)).astype(
+            np.uint32
+        )
+        want = place_batch(ids, c.seg_lengths())
+        assert_allclose(eng.place(ids), want, atol=0)
+
+    def test_place_nodes_matches(self, backend):
+        c = make_cluster(MIXED)
+        eng = PlacementEngine(c, backend=backend)
+        ids = np.arange(512, dtype=np.uint32)
+        want = c.seg_to_node()[place_batch(ids, c.seg_lengths())]
+        assert_allclose(eng.place_nodes(ids), want, atol=0)
+
+    def test_replicas_match_numpy_batch(self, backend):
+        c = make_cluster(MIXED)
+        eng = PlacementEngine(c, backend=backend)
+        ids = np.arange(300, dtype=np.uint32)
+        want = place_replicas_batch(ids, c.seg_lengths(), c.seg_to_node(), 3)
+        assert_allclose(eng.place_replicas(ids, 3), want, atol=0)
+
+    def test_forced_tail_unified_across_backends(self, backend):
+        """max_draws=0 pushes EVERY lane through the tail fallback; the
+        exact-integer spec must agree bit-for-bit on all backends."""
+        params = AsuraParams(max_draws=0)
+        c = make_cluster(MIXED, params=params)
+        eng = PlacementEngine(c, backend=backend)
+        ids = np.arange(640, dtype=np.uint32)
+        want = place_batch(ids, c.seg_lengths(), params)
+        got = eng.place(ids)
+        assert_allclose(got, want, atol=0)
+        # fallback is total and lands only on occupied segments
+        assert (c.seg_lengths()[got] > 0).all()
+
+
+def test_forced_tail_exact_128bit_scaling():
+    """Regression: h * total_mass needs up to 95 bits.  On a 100-node table
+    a uint64 product wraps and dumps every fallback lane on segment 0; the
+    two-half evaluation must match exact Python big-int arithmetic."""
+    from repro.core.asura import lengths_to_u32
+    from repro.core.rng import draw_u32_scalar
+
+    params = AsuraParams(max_draws=0)
+    c = make_uniform_cluster(100, params=params)
+    ids = np.arange(20_000, dtype=np.uint32)
+    got = place_batch(ids, c.seg_lengths(), params)
+    len32 = lengths_to_u32(c.seg_lengths())
+    cum = np.cumsum(len32.astype(np.uint64))
+    top = c.engine.artifact().top_level
+    for i in (0, 1, 777, 19_999):  # exact big-int oracle, spot-checked
+        h = draw_u32_scalar(int(ids[i]), top + 1, 0)
+        u = (h * int(cum[-1])) >> 32
+        assert got[i] == int(np.searchsorted(cum, np.uint64(u), side="right"))
+    # uniform over occupied mass: every segment is reachable, none dominates
+    counts = np.bincount(got, minlength=100)
+    assert (counts > 0).all()
+    assert counts.max() < 3 * counts.mean()
+
+
+def test_forced_tail_partial_convergence():
+    """max_draws=1 leaves a real mixed population of converged and
+    tail-resolved lanes; kernel and NumPy paths must still agree."""
+    params = AsuraParams(max_draws=1)
+    c = make_cluster([0.1, 0.2, 0.05], params=params)  # low hit rate
+    ids = np.arange(2048, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths(), params)
+    got = np.asarray(asura_place(ids, c.seg_lengths(), params, use_pallas=True))
+    assert_allclose(got, want, atol=0)
+    got = np.asarray(asura_place(ids, c.seg_lengths(), params, use_pallas=False))
+    assert_allclose(got, want, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Replica kernel vs the scalar oracle (lane-by-lane)
+# ---------------------------------------------------------------------------
+
+
+class TestReplicaKernel:
+    @pytest.mark.parametrize("n_replicas", [1, 2, 3])
+    def test_pallas_matches_scalar_lane_by_lane(self, n_replicas):
+        c = make_cluster(MIXED)
+        ids = (np.arange(64, dtype=np.uint64) * 2654435761 % (2**32)).astype(
+            np.uint32
+        )
+        got = np.asarray(
+            asura_place_replicas(
+                ids, c.seg_lengths(), c.seg_to_node(), n_replicas, use_pallas=True
+            )
+        )
+        for lane, datum in enumerate(ids):
+            want = place_replicas_scalar(
+                int(datum), c.seg_lengths(), c.seg_to_node(), n_replicas
+            )
+            assert got[lane].tolist() == want, (lane, datum)
+
+    def test_replicas_on_distinct_nodes(self):
+        c = make_cluster([1.5, 1.0, 0.5, 2.0, 1.0])
+        reps = c.place_replicas(np.arange(400, dtype=np.uint32), 3)
+        for row in reps:
+            assert len(set(row.tolist())) == 3
+
+    def test_primary_column_is_plain_placement(self):
+        c = make_cluster(MIXED)
+        ids = np.arange(256, dtype=np.uint32)
+        reps = c.engine.place_replicas(ids, 3)
+        assert_allclose(reps[:, 0], c.engine.place(ids), atol=0)
+
+    def test_on_table_entry_point(self):
+        c = make_cluster(MIXED)
+        ids = np.arange(128, dtype=np.uint32)
+        len32, top = table_prep(c.seg_lengths())
+        node_of = node_table_prep(c.seg_to_node())
+        got = place_replicas_on_table(ids, len32, node_of, 2, top_level=top)
+        want = place_replicas_batch(ids, c.seg_lengths(), c.seg_to_node(), 2)
+        assert_allclose(got, want, atol=0)
+
+    def test_nonconvergence_raises(self):
+        c = make_cluster([1.0, 1.0])  # only 2 distinct nodes
+        with pytest.raises(RuntimeError):
+            asura_place_replicas(
+                np.arange(8, dtype=np.uint32), c.seg_lengths(), c.seg_to_node(), 3
+            )
+
+
+# ---------------------------------------------------------------------------
+# Consumer round-trips through the engine
+# ---------------------------------------------------------------------------
+
+
+class TestConsumers:
+    def test_router_zero_reuploads_at_fixed_version(self):
+        router = ReplicaRouter({i: 1.0 for i in range(5)})
+        ids = np.arange(4000, dtype=np.uint32)
+        for _ in range(4):
+            router.route(ids)
+        assert router.table_uploads == 1
+
+    def test_router_scale_event_uploads_once_per_version(self):
+        router = ReplicaRouter({i: 1.0 for i in range(5)})
+        ids = np.arange(2000, dtype=np.uint32)
+        router.route(ids)
+        router.plan_scale_event(ids, add=(9, 1.0))  # one version bump
+        router.route(ids)
+        router.route(ids)
+        assert router.table_uploads == 2
+
+    def test_router_replica_fanout(self):
+        router = ReplicaRouter({i: 1.0 for i in range(6)})
+        fan = router.route_replicas(np.arange(300), 2)
+        assert fan.shape == (300, 2)
+        assert (fan[:, 0] != fan[:, 1]).all()
+        assert_allclose(fan[:, 0], router.route(np.arange(300)), atol=0)
+
+    def test_coordinator_shares_cluster_engine(self):
+        cluster = make_uniform_cluster(6)
+        ids = np.arange(800, dtype=np.uint32)
+        coord = ElasticCoordinator(cluster, ids)
+        assert coord.engine is cluster.engine
+        before = cluster.place_nodes(ids)
+        plan = coord.add_node(6, 1.0)
+        after = cluster.place_nodes(ids)
+        moved = np.nonzero(before != after)[0]
+        assert set(plan.moves) == {int(ids[i]) for i in moved}
+        # init placement + AN trace at v0, then one rebuild for the new node
+        assert cluster.engine.uploads == 2
+
+    def test_addition_numbers_batch_matches_scalar(self):
+        c = make_cluster(MIXED)
+        ids = (np.arange(150, dtype=np.uint64) * 40503 % (2**32)).astype(np.uint32)
+        got = addition_numbers_batch(ids, c.seg_lengths(), c.seg_to_node())
+        for i, datum in enumerate(ids):
+            assert got[i] == addition_number(
+                int(datum), c.seg_lengths(), c.seg_to_node()
+            ), datum
+
+    def test_addition_numbers_batch_replicated(self):
+        c = make_cluster([1.0] * 8)
+        ids = np.arange(60, dtype=np.uint32)
+        got = addition_numbers_batch(ids, c.seg_lengths(), c.seg_to_node(), 2)
+        for i, datum in enumerate(ids):
+            assert got[i] == addition_number(
+                int(datum), c.seg_lengths(), c.seg_to_node(), 2
+            ), datum
+
+    def test_json_round_trip_preserves_placement(self):
+        c = make_cluster(MIXED)
+        ids = np.arange(500, dtype=np.uint32)
+        clone = Cluster.from_json(c.to_json())
+        assert_allclose(clone.place_nodes(ids), c.place_nodes(ids), atol=0)
+        assert clone.engine.uploads == 1
