@@ -85,6 +85,14 @@ class AsuraCheckpointStore:
             np.asarray(keys, dtype=np.uint32), self.n_replicas
         )
 
+    def replicas_for_device(self, keys):
+        """(keys, R) replica node ids as a DEVICE array, zero host syncs.
+
+        For device-chained consumers (e.g. diffing placements across a
+        membership change, or sharding device-resident key streams): the
+        placement, tail resolution and node gather all stay on device."""
+        return self.engine.place_replica_nodes_device(keys, self.n_replicas)
+
     # -- chunk I/O ----------------------------------------------------------
 
     def put_chunks(self, keys: np.ndarray, blobs: list[bytes]) -> None:
@@ -154,13 +162,28 @@ class AsuraCheckpointStore:
         for node in self.nodes.values():
             all_keys.update(node.blobs)
         keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
-        before = self.replicas_for(keys) if keys.size else np.empty((0, self.n_replicas))
+        device = self.engine.backend != "numpy"
+        if device and keys.size:
+            # Chain both placement sweeps on device; sync the rows once.
+            import jax.numpy as jnp
+
+            keys_dev = jnp.asarray(keys)
+            before_dev = self.replicas_for_device(keys_dev)
+            before = np.asarray(before_dev)
+        else:
+            before = (
+                self.replicas_for(keys)
+                if keys.size
+                else np.empty((0, self.n_replicas))
+            )
         self.cluster.add_node(node_id, capacity)
         self.nodes[node_id] = StorageNode(node_id, capacity)
         moved = 0
         if keys.size:
-            after = self.replicas_for(keys)
-            changed = ~(before == after).all(axis=1)
+            if device:
+                after = np.asarray(self.replicas_for_device(keys_dev))
+            else:
+                after = self.replicas_for(keys)
             for key, b_row, a_row in zip(keys, before, after):
                 if set(b_row.tolist()) == set(a_row.tolist()):
                     continue

@@ -13,6 +13,7 @@ from .asura import (
     placement_trace,
     remove_numbers,
     resolve_tail_np,
+    tail_cumsum_halves,
 )
 from .cluster import Cluster, NodeInfo, make_cluster, make_uniform_cluster
 from .engine import PlacementEngine, TableArtifact
@@ -42,4 +43,5 @@ __all__ = [
     "placement_trace",
     "remove_numbers",
     "resolve_tail_np",
+    "tail_cumsum_halves",
 ]

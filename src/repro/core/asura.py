@@ -47,7 +47,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .rng import draw_u32_np, draw_u32_scalar
+from .rng import GOLDEN, KMULT, draw_u32_np, draw_u32_scalar, fmix32_np
 
 U32 = np.uint32
 _2_32 = 2.0**32
@@ -107,6 +107,22 @@ def _upper_bound(seg_lengths: np.ndarray) -> float:
         raise ValueError("segment table has no occupied segments")
     last = int(occupied[-1])
     return last + float(seg_lengths[last])
+
+
+def tail_cumsum_halves(len32: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """The u64 inclusive length-cumsum as two u32 halves (hi, lo).
+
+    This is the device-side representation of the section 3.2 tail spec:
+    ``cum = cumsum(len32)`` needs up to 63 bits (n_segs < 2**31), which TPUs
+    do not carry natively, so the table artifact stores ``cum >> 32`` and
+    ``cum & 0xFFFFFFFF`` separately and the kernels compare 64-bit values
+    through the halves.  Computed on the host once per table version.
+    """
+    cum = np.cumsum(np.asarray(len32, dtype=np.uint32).astype(np.uint64))
+    return (
+        (cum >> np.uint64(32)).astype(np.uint32),
+        (cum & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+    )
 
 
 def resolve_tail_np(
@@ -332,6 +348,11 @@ def remove_numbers(
 # ---------------------------------------------------------------------------
 
 
+def _lvl_term(level: int) -> np.uint32:
+    # computed in python ints: scalar uint32 multiplies warn on overflow
+    return np.uint32((GOLDEN * (level + 1)) & 0xFFFFFFFF)
+
+
 def _next_asura_batch(
     ids: np.ndarray,
     counters: np.ndarray,
@@ -340,7 +361,69 @@ def _next_asura_batch(
 ) -> tuple[np.ndarray, np.ndarray]:
     """One ASURA number per lane as (k, frac32); advances per-level counters.
 
-    counters: (batch, top_level + 1) uint32, mutated in place.
+    counters: (top_level + 1, batch) uint32, mutated in place; row l holds
+    the level-l counters (contiguous, so per-level reads/ticks are cheap).
+
+    Lazy-depth ladder (DESIGN.md section 3.4): the descend test is a coin
+    flip per level, so the expected consulted depth is < 2 regardless of
+    ``top_level``.  The top level is consulted by EVERY lane on every draw
+    and is evaluated on the full batch with no index arrays; each deeper
+    level hashes only the (geometrically shrinking) subset of lanes still
+    consulting, and the loop exits as soon as no lane is.  Per-draw hash
+    work is therefore O(expected depth) ~ 2 level-batches, not
+    O(top_level).  Counters tick exactly one per consulted level per lane
+    -- bit-identical to the unrolled ladder and to the scalar oracle
+    (tested lane-by-lane).
+    """
+    s = params.s_log2
+    kmult = np.uint32(KMULT)
+    # -- top level: full batch, no indexing --------------------------------
+    h = fmix32_np(fmix32_np(ids + _lvl_term(top_level)) ^ (counters[top_level] * kmult))
+    counters[top_level] += np.uint32(1)
+    # Emit values computed for ALL lanes; descending lanes get theirs
+    # overwritten by the store at their (unique) emitting level below.
+    out_k = (h >> np.uint32(32 - s - top_level)).astype(np.int64)
+    out_frac = (h << np.uint32(s + top_level)).astype(np.uint32)
+    if top_level == 0:
+        return out_k, out_frac
+    descend = h < np.uint32(2**31)
+    active = np.nonzero(descend)[0]  # absolute lane index of each live row
+    sub_ids = ids[descend]
+    # -- deeper levels: compacted subsets ----------------------------------
+    for level in range(top_level - 1, -1, -1):
+        if active.size == 0:
+            break
+        ctr = counters[level]
+        h = fmix32_np(fmix32_np(sub_ids + _lvl_term(level)) ^ (ctr[active] * kmult))
+        ctr[active] += np.uint32(1)
+        if level > 0:
+            descend = h < np.uint32(2**31)
+            emit = ~descend
+        else:
+            descend = np.zeros(h.shape, dtype=bool)
+            emit = np.ones(h.shape, dtype=bool)
+        em = active[emit]
+        he = h[emit]
+        out_k[em] = (he >> np.uint32(32 - s - level)).astype(np.int64)
+        out_frac[em] = (he << np.uint32(s + level)).astype(np.uint32)
+        active = active[descend]
+        sub_ids = sub_ids[descend]
+    return out_k, out_frac
+
+
+def _next_asura_batch_unrolled(
+    ids: np.ndarray,
+    counters: np.ndarray,
+    top_level: int,
+    params: AsuraParams,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pre-lazy-ladder reference: hash EVERY level for EVERY lane per draw.
+
+    Kept (a) as the regression oracle for the lazy ladder and (b) so
+    ``benchmarks/calc_time.py`` can measure the ladder speedup against the
+    exact pre-optimization arithmetic.  Bit-identical to
+    ``_next_asura_batch`` by construction.  counters: the LEGACY
+    (batch, top_level + 1) layout, mutated in place.
     """
     batch = ids.shape[0]
     s = params.s_log2
@@ -371,6 +454,43 @@ def place_batch_u32(
     The table-artifact entry point: ``PlacementEngine`` calls this with its
     cached canonical table so repeated placements never re-derive ``len32``
     or the top level.  Callers resolve the -1 tail via ``resolve_tail_np``.
+
+    Placed lanes are compacted out between draws (lanes are independent, so
+    dropping a finished row changes nothing for the others): with expected
+    ~4 draws per lane the draw loop touches roughly ``4 * batch`` lanes
+    total instead of ``max_draws * batch``.
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    len32 = np.asarray(len32, dtype=np.uint32)
+    n_segs = len(len32)
+    batch = ids.shape[0]
+    result = np.full(batch, -1, dtype=np.int64)
+    alive = np.arange(batch)  # original lane index of each live row
+    live_ids = ids
+    counters = np.zeros((top_level + 1, batch), dtype=np.uint32)
+    for _ in range(params.max_draws):
+        if alive.size == 0:
+            break
+        k, frac = _next_asura_batch(live_ids, counters, top_level, params)
+        k_safe = np.minimum(k, n_segs - 1)
+        hit = (k < n_segs) & (frac < len32[k_safe])
+        result[alive[hit]] = k[hit]
+        keep = ~hit
+        alive = alive[keep]
+        live_ids = live_ids[keep]
+        counters = counters[:, keep]
+    return result
+
+
+def _place_batch_u32_unrolled(
+    datum_ids: np.ndarray,
+    len32: np.ndarray,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """The pre-PR bounded loop (unrolled ladder, no lane compaction).
+
+    Benchmark baseline only -- see ``_next_asura_batch_unrolled``.
     """
     ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
     len32 = np.asarray(len32, dtype=np.uint32)
@@ -380,7 +500,7 @@ def place_batch_u32(
     result = np.full(batch, -1, dtype=np.int64)
     done = np.zeros(batch, dtype=bool)
     for _ in range(params.max_draws):
-        k, frac = _next_asura_batch(ids, counters, top_level, params)
+        k, frac = _next_asura_batch_unrolled(ids, counters, top_level, params)
         k_safe = np.minimum(k, n_segs - 1)
         hit = (~done) & (k < n_segs) & (frac < len32[k_safe])
         result = np.where(hit, k, result)
@@ -436,7 +556,7 @@ def place_replicas_u32(
     node_of = np.asarray(node_of)
     n_segs = len(len32)
     batch = ids.shape[0]
-    counters = np.zeros((batch, top_level + 1), dtype=np.uint32)
+    counters = np.zeros((top_level + 1, batch), dtype=np.uint32)
     result = np.full((batch, n_replicas), -1, dtype=np.int64)
     found = np.zeros(batch, dtype=np.int64)
     for _ in range(params.max_draws * max(1, n_replicas)):
@@ -502,7 +622,7 @@ def addition_numbers_batch(
     n_segs = len(len32)
     top = params.level_for(_upper_bound(lengths))
     batch = ids.shape[0]
-    counters = np.zeros((batch, top + 1), dtype=np.uint32)
+    counters = np.zeros((top + 1, batch), dtype=np.uint32)
     found = np.zeros(batch, dtype=np.int64)
     picked_nodes = np.full((batch, n_replicas), -1, dtype=np.int64)
     no_min = np.uint64(0xFFFFFFFFFFFFFFFF)

@@ -1,19 +1,24 @@
-"""PlacementEngine: one versioned, device-resident table artifact per cluster.
+"""PlacementEngine: versioned, device-resident table artifacts per cluster.
 
 Every placement consumer (router, elastic coordinator, data pipeline,
 checkpoint store, serving driver) used to re-derive, re-pad and re-upload the
-STEP-1 segment table on every call.  The engine owns a cached
-``TableArtifact`` keyed by ``Cluster.version``:
+STEP-1 segment table on every call.  The engine owns a small LRU cache of
+``TableArtifact`` snapshots keyed by ``Cluster.version``:
 
   * ``len32``    -- canonical u32 lengths (round(length * 2**32)),
   * ``node_of``  -- int32 seg->node map (-1 on holes),
   * ``top_level``-- the static generator-ladder entry level,
-  * device copies, lane-padded for the Pallas kernels,
+  * device copies, lane-padded for the kernels, including the u64
+    length-cumsum as two u32 halves (the device-resident tail tables,
+    DESIGN.md section 3.2),
 
 so a STEP-1 mutation produces exactly ONE table materialization (one
 host->device upload on accelerator backends) no matter how many placement
-calls follow -- the ``uploads`` counter asserts this in tests.  STEP 2 then
-dispatches to one of three bit-identical backends:
+calls follow -- the ``uploads`` counter asserts this in tests.  The cache
+holds the ``CACHE_VERSIONS`` most-recent versions, so a router flapping
+between two live versions (rollback, A/B drain) re-materializes nothing.
+
+STEP 2 dispatches to one of three bit-identical backends:
 
   * ``numpy``  -- vectorized NumPy (the CPU-host default; no device round
                   trip for table or ids),
@@ -21,14 +26,22 @@ dispatches to one of three bit-identical backends:
   * ``pallas`` -- the Pallas kernel family (the TPU default), including the
                   section 5.A replica-placement kernel.
 
-The non-converged tail (p < 2**-53 per lane) is resolved by the single
-exact-integer spec ``resolve_tail_np`` on every backend (DESIGN.md section
-3.2), so results are bit-for-bit independent of the backend choice.
+Host-facing methods (``place`` / ``place_nodes`` / ``place_replicas``)
+return NumPy arrays with exactly one device->host transfer on accelerator
+backends.  The ``*_device`` variants return device arrays with ZERO host
+syncs -- placement, the non-converged tail and the seg->node gather all run
+on device -- for consumers that chain into further device work.
+
+The non-converged tail (p < 2**-53 per lane) follows the single
+exact-integer spec (``resolve_tail_np`` on the host, ``resolve_tail_dev``
+on device -- bit-identical; DESIGN.md section 3.2), so results are
+bit-for-bit independent of the backend choice.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any
 
 import numpy as np
@@ -45,6 +58,8 @@ from .asura import (
 
 BACKENDS = ("auto", "numpy", "ref", "pallas")
 
+CACHE_VERSIONS = 4  # most-recent table versions kept materialized
+
 
 @dataclasses.dataclass(frozen=True)
 class TableArtifact:
@@ -52,8 +67,10 @@ class TableArtifact:
 
     ``len32`` / ``node_of`` are the host (unpadded) canonical arrays --
     ``node_of`` is int64 so per-call seg->node gathers never widen-copy the
-    table; ``len32_dev`` / ``node_of_dev`` are the lane-padded device copies
-    (None on the numpy backend, which never touches a device).
+    table; ``len32_dev`` / ``node_of_dev`` / ``cum_hi_dev`` / ``cum_lo_dev``
+    are the lane-padded device copies (None until a device path needs them;
+    the numpy backend never builds them unless a ``*_device`` variant is
+    called).
     """
 
     version: int
@@ -63,6 +80,12 @@ class TableArtifact:
     node_of: np.ndarray
     len32_dev: Any = None
     node_of_dev: Any = None
+    cum_hi_dev: Any = None
+    cum_lo_dev: Any = None
+
+    @property
+    def has_device_tables(self) -> bool:
+        return self.len32_dev is not None
 
 
 class PlacementEngine:
@@ -79,15 +102,20 @@ class PlacementEngine:
         backend: str = "auto",
         interpret: bool | None = None,
         rows_per_block: int | None = None,
+        cache_versions: int = CACHE_VERSIONS,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if cache_versions < 1:
+            raise ValueError("cache_versions must be >= 1")
         self.cluster = cluster
         self.params: AsuraParams = getattr(cluster, "params", DEFAULT_PARAMS)
         self._backend = backend
         self._interpret = interpret
         self._rows_per_block = rows_per_block
-        self._artifact: TableArtifact | None = None
+        self._cache_versions = cache_versions
+        # version -> TableArtifact, most-recently-used last.
+        self._artifacts: OrderedDict[int, TableArtifact] = OrderedDict()
         self.uploads = 0  # table materializations (one per cluster version used)
 
     # -- artifact lifecycle --------------------------------------------------
@@ -101,37 +129,65 @@ class PlacementEngine:
             self._backend = "pallas" if jax.default_backend() == "tpu" else "numpy"
         return self._backend
 
+    def _build_device_tables(self, art: TableArtifact) -> TableArtifact:
+        """Fill the lane-padded device copies (one host->device upload)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _lane_pad_np, node_table_prep, tail_prep
+
+        len32_pad = _lane_pad_np(art.len32, np.uint32(0))
+        cum_hi, cum_lo = tail_prep(len32_pad)
+        return dataclasses.replace(
+            art,
+            len32_dev=jnp.asarray(len32_pad),
+            node_of_dev=node_table_prep(art.node_of),
+            cum_hi_dev=cum_hi,
+            cum_lo_dev=cum_lo,
+        )
+
     def artifact(self) -> TableArtifact:
         """The current version's table, rebuilding (and re-uploading) only
-        when ``cluster.version`` has moved past the cached artifact."""
+        when ``cluster.version`` is not among the cached artifacts."""
         version = self.cluster.version
-        if self._artifact is not None and self._artifact.version == version:
-            return self._artifact
+        art = self._artifacts.get(version)
+        if art is not None:
+            self._artifacts.move_to_end(version)
+            return art
         lengths = np.asarray(self.cluster.seg_lengths(), dtype=np.float64)
         len32 = lengths_to_u32(lengths)
         node_of = np.asarray(self.cluster.seg_to_node(), dtype=np.int64)
         top_level = self.params.level_for(_upper_bound(lengths))
-        len32_dev = node_of_dev = None
-        if self.backend != "numpy":
-            from repro.kernels.ops import node_table_prep, table_prep
-
-            len32_dev, _ = table_prep(lengths, self.params)
-            node_of_dev = node_table_prep(node_of)
-        self._artifact = TableArtifact(
+        art = TableArtifact(
             version=version,
             n_segs=len(len32),
             top_level=top_level,
             len32=len32,
             node_of=node_of,
-            len32_dev=len32_dev,
-            node_of_dev=node_of_dev,
         )
+        if self.backend != "numpy":
+            art = self._build_device_tables(art)
+        self._artifacts[version] = art
+        while len(self._artifacts) > self._cache_versions:
+            self._artifacts.popitem(last=False)
         self.uploads += 1
-        return self._artifact
+        return art
+
+    def _device_artifact(self) -> TableArtifact:
+        """Like ``artifact()`` but guaranteed to carry device tables.
+
+        On the numpy backend the device tables are built lazily on the
+        first ``*_device`` call (part of the same version's one
+        materialization -- the ``uploads`` counter does not tick again).
+        """
+        art = self.artifact()
+        if not art.has_device_tables:
+            art = self._build_device_tables(art)
+            self._artifacts[art.version] = art
+        return art
 
     def invalidate(self) -> None:
-        """Drop the cached artifact (next placement rebuilds it)."""
-        self._artifact = None
+        """Drop every cached artifact (next placement rebuilds)."""
+        self._artifacts.clear()
 
     # -- STEP 2 dispatch -----------------------------------------------------
 
@@ -152,16 +208,14 @@ class PlacementEngine:
         if self.backend == "numpy":
             segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
             return resolve_tail_np(ids, segs, art.len32, art.top_level)
-        from repro.kernels.ops import place_on_table
-
-        return place_on_table(
-            ids, art.len32_dev, top_level=art.top_level, **self._kernel_kwargs()
-        )
+        return np.asarray(self.place_device(ids)).astype(np.int64)
 
     def place_nodes(self, datum_ids) -> np.ndarray:
         """Batch placement -> int64 node ids."""
         art = self.artifact()
-        return art.node_of[self.place(datum_ids)]
+        if self.backend == "numpy":
+            return art.node_of[self.place(datum_ids)]
+        return np.asarray(self.place_nodes_device(datum_ids)).astype(np.int64)
 
     def place_replicas(self, datum_ids, n_replicas: int) -> np.ndarray:
         """(batch, R) segment numbers on R distinct nodes, primary first."""
@@ -173,6 +227,7 @@ class PlacementEngine:
             )
         from repro.kernels.ops import place_replicas_on_table
 
+        art = self._device_artifact()
         return place_replicas_on_table(
             ids,
             art.len32_dev,
@@ -186,3 +241,64 @@ class PlacementEngine:
         """(batch, R) node ids, primary first."""
         art = self.artifact()
         return art.node_of[self.place_replicas(datum_ids, n_replicas)]
+
+    # -- device-resident variants (zero host syncs) --------------------------
+
+    def place_device(self, datum_ids):
+        """Batch placement -> (batch,) int32 DEVICE array, total, sync-free.
+
+        Pass device-resident ids to keep the whole chain on device; NumPy
+        ids are uploaded once.  On the numpy backend this routes through
+        the jnp reference kernels (the device tables are built lazily).
+        """
+        from repro.kernels.ops import place_on_table_device
+
+        art = self._device_artifact()
+        return place_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.cum_hi_dev,
+            art.cum_lo_dev,
+            art.node_of_dev,  # cached: avoids a per-call dummy node table
+            top_level=art.top_level,
+            **self._device_kwargs(),
+        )
+
+    def place_nodes_device(self, datum_ids):
+        """Batch placement -> (batch,) int32 node ids on device (fused
+        seg->node gather, on-device tail, zero host syncs)."""
+        from repro.kernels.ops import place_nodes_on_table_device
+
+        art = self._device_artifact()
+        return place_nodes_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.cum_hi_dev,
+            art.cum_lo_dev,
+            art.node_of_dev,
+            top_level=art.top_level,
+            **self._device_kwargs(),
+        )
+
+    def place_replica_nodes_device(self, datum_ids, n_replicas: int):
+        """(batch, R) int32 node ids on device, primary first, zero host
+        syncs.  Non-converged entries stay -1 (checking would force a
+        sync); the host variant raises instead."""
+        from repro.kernels.ops import place_replicas_on_table_device
+
+        art = self._device_artifact()
+        return place_replicas_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.node_of_dev,
+            n_replicas,
+            top_level=art.top_level,
+            emit_nodes=True,
+            **self._device_kwargs(),
+        )
+
+    def _device_kwargs(self) -> dict:
+        kw = self._kernel_kwargs()
+        # numpy backend device calls run on the jnp reference kernels.
+        kw["use_pallas"] = self.backend == "pallas"
+        return kw

@@ -86,6 +86,12 @@ class DataPipeline:
 
     def _compute_owned(self) -> np.ndarray:
         shard_ids = np.arange(self.dataset.n_shards, dtype=np.uint32)
+        if self.engine.backend != "numpy":
+            # Device path: placement, tail and node gather stay on device;
+            # the only host sync is the final ownership mask (one bool
+            # vector), instead of transferring every owner id.
+            owners = self.engine.place_nodes_device(shard_ids)
+            return shard_ids[np.asarray(owners == self.host_id)]
         owners = self.engine.place_nodes(shard_ids)
         return shard_ids[owners == self.host_id]
 

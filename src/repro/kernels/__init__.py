@@ -6,9 +6,13 @@ from .ops import (
     asura_place_nodes,
     asura_place_replicas,
     node_table_prep,
+    place_nodes_on_table_device,
     place_on_table,
+    place_on_table_device,
     place_replicas_on_table,
+    place_replicas_on_table_device,
     table_prep,
+    tail_prep,
 )
 
 __all__ = [
@@ -16,7 +20,11 @@ __all__ = [
     "asura_place_nodes",
     "asura_place_replicas",
     "node_table_prep",
+    "place_nodes_on_table_device",
     "place_on_table",
+    "place_on_table_device",
     "place_replicas_on_table",
+    "place_replicas_on_table_device",
     "table_prep",
+    "tail_prep",
 ]

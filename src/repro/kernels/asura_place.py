@@ -11,11 +11,21 @@ routing and request routing.  The kernel is pure uint32 VPU work:
     40 KB for 10k segments, far under the ~16 MB VMEM budget,
   * each grid step runs the bounded masked draw loop entirely on-chip:
     counter-based hashing (no PRNG state), MSB descend test, shift-based
-    floor/fraction, one dynamic VMEM gather per draw for the hit test.
+    floor/fraction, one dynamic VMEM gather per draw for the hit test,
+  * the descend ladder is LAZY-DEPTH (DESIGN.md section 3.4): a
+    ``lax.while_loop`` over the scalar level that exits once no lane is
+    still consulting -- expected 2 consulted levels per draw, independent
+    of ``top_level``, instead of the historical fully-unrolled ladder that
+    hashed every level on every draw.
 
 Trip count: Appendix B bounds expected draws by ~4 (hole fraction <= 1/2),
 and the while_loop exits as soon as every lane has placed, so the typical
 block does 4-6 iterations; max_draws caps the tail at p < 2**-53 per lane.
+
+``place_fused_pallas`` is the fully device-resident variant: the
+non-converged tail is resolved on-chip (section 3.2 spec against the
+precomputed u64-cumsum halves) and the seg->node gather can be fused, so
+engine device paths chain into further device work with zero host syncs.
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import draw_u32
+from .ref import next_asura, resolve_tail_dev
 
 LANE = 128
 DEFAULT_ROWS = 16  # (16, 128) = 2048 ids per grid step
@@ -35,25 +45,14 @@ DEFAULT_ROWS = 16  # (16, 128) = 2048 ids per grid step
 def _next_asura_tile(ids, counters, top_level: int, s_log2: int):
     """One ASURA number per lane of a (rows, LANE) tile: (k, frac32, ctrs).
 
-    The unrolled descend ladder shared by the placement and replication
-    kernels -- counter-based draws, MSB descend test, shift-based
-    floor/fraction (the exact-u32 formulation, DESIGN.md section 3)."""
-    shape = ids.shape
-    consult = jnp.ones(shape, dtype=bool)
-    out_k = jnp.zeros(shape, dtype=jnp.int32)
-    out_f = jnp.zeros(shape, dtype=jnp.uint32)
-    rows = []
-    for level in range(top_level, -1, -1):
-        h = draw_u32(ids, level, counters[top_level - level])
-        rows.append(counters[top_level - level] + consult.astype(jnp.uint32))
-        descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
-        emit = consult & ~descend
-        k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
-        f = h << jnp.uint32(s_log2 + level)
-        out_k = jnp.where(emit, k, out_k)
-        out_f = jnp.where(emit, f, out_f)
-        consult = descend
-    return out_k, out_f, jnp.stack(rows)
+    The lazy-depth descend ladder shared by the placement and replication
+    kernels -- a ``lax.while_loop`` over the scalar level that exits as soon
+    as no lane is still consulting (expected 2 iterations instead of
+    ``top_level + 1``); counter-based draws, MSB descend test, shift-based
+    floor/fraction (the exact-u32 formulation, DESIGN.md sections 3, 3.4).
+    Shared verbatim with the jnp reference (``ref.next_asura`` is
+    shape-polymorphic), so the two paths cannot drift."""
+    return next_asura(ids, counters, top_level, s_log2)
 
 
 def _place_kernel(
@@ -95,6 +94,58 @@ def _place_kernel(
     out_ref[...] = result
 
 
+def _place_fused_kernel(
+    ids_ref,
+    table_ref,
+    cum_hi_ref,
+    cum_lo_ref,
+    node_ref,
+    out_ref,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs: int,
+    emit_nodes: bool,
+):
+    """Fully device-resident placement: bounded draw loop + on-chip tail
+    resolution (the exact section 3.2 spec via ``resolve_tail_dev``, against
+    the precomputed u64-cumsum halves held in VMEM) + optionally the fused
+    seg->node gather, so the kernel's output is final -- no host fix-up, no
+    second device pass.  ``emit_nodes=False`` writes (total, >= 0) segment
+    numbers; ``emit_nodes=True`` writes node ids."""
+    ids = ids_ref[...]  # (rows, LANE) uint32
+    table = table_ref[...]  # (n_pad,) uint32
+    cum_hi = cum_hi_ref[...]  # (n_pad,) uint32: u64 cumsum high halves
+    cum_lo = cum_lo_ref[...]  # (n_pad,) uint32: u64 cumsum low halves
+    node_of = node_ref[...]  # (n_pad,) int32, -1 on holes/padding
+    shape = ids.shape
+
+    def cond(state):
+        i, _, _, done = state
+        return (i < max_draws) & ~jnp.all(done)
+
+    def body(state):
+        i, counters, result, done = state
+        k, f, counters = _next_asura_tile(ids, counters, top_level, s_log2)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        lens = jnp.take(table, k_safe.reshape(-1), axis=0).reshape(shape)
+        hit = (~done) & (k < n_segs) & (f < lens)
+        result = jnp.where(hit, k, result)
+        return i + 1, counters, result, done | hit
+
+    counters0 = jnp.zeros((top_level + 1,) + shape, dtype=jnp.uint32)
+    result0 = jnp.full(shape, -1, dtype=jnp.int32)
+    done0 = jnp.zeros(shape, dtype=bool)
+    _, _, result, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), counters0, result0, done0)
+    )
+    result = resolve_tail_dev(ids, result, cum_hi, cum_lo, top_level)
+    if emit_nodes:
+        result = jnp.take(node_of, result.reshape(-1), axis=0).reshape(shape)
+    out_ref[...] = result
+
+
 def _place_replicas_kernel(
     ids_ref,
     table_ref,
@@ -106,6 +157,7 @@ def _place_replicas_kernel(
     max_draws: int,
     n_segs: int,
     n_replicas: int,
+    emit_nodes: bool = False,
 ):
     """Section 5.A replication: first R hits on distinct nodes, per lane.
 
@@ -115,7 +167,11 @@ def _place_replicas_kernel(
     compares instead of R extra VMEM gathers; the seg->node table is gathered
     once per draw (alongside the length gather) to resolve the candidate's
     node.  Draw order and hit tests are bit-identical to
-    ``place_replicas_scalar``; -1 marks non-converged entries (ops.py raises).
+    ``place_replicas_scalar``; -1 marks non-converged entries (ops.py raises
+    on the host path).  ``emit_nodes=True`` writes the in-register ``nodes``
+    state instead of ``segs`` -- the fused seg->node gather for the
+    device-resident path (node ids are already resolved per pick, so fusion
+    costs nothing).
     """
     ids = ids_ref[...]  # (rows, LANE) uint32
     table = table_ref[...]  # (n_pad,) uint32
@@ -154,10 +210,10 @@ def _place_replicas_kernel(
     segs0 = jnp.full((R,) + shape, -1, dtype=jnp.int32)
     nodes0 = jnp.full((R,) + shape, -1, dtype=jnp.int32)
     found0 = jnp.zeros(shape, dtype=jnp.int32)
-    _, _, segs, _, _ = jax.lax.while_loop(
+    _, _, segs, nodes, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), counters0, segs0, nodes0, found0)
     )
-    out_ref[...] = segs
+    out_ref[...] = nodes if emit_nodes else segs
 
 
 @functools.partial(
@@ -169,6 +225,7 @@ def _place_replicas_kernel(
         "n_replicas",
         "rows_per_block",
         "interpret",
+        "emit_nodes",
     ),
 )
 def place_replicas_pallas(
@@ -182,12 +239,15 @@ def place_replicas_pallas(
     n_replicas: int = 1,
     rows_per_block: int = DEFAULT_ROWS,
     interpret: bool = True,
+    emit_nodes: bool = False,
 ) -> jax.Array:
-    """Batched replica placement via pl.pallas_call -> (total, R) int32 segs.
+    """Batched replica placement via pl.pallas_call -> (total, R) int32.
 
     ids must be (m * rows_per_block * 128,) uint32 and len32 / node_of
     128-padded (ops.py pads; node padding is -1).  Non-converged entries are
-    -1 (the ops.py wrapper raises on them after unpadding).
+    -1 (the ops.py host wrapper raises on them after unpadding; the device
+    path documents them).  ``emit_nodes=True`` returns node ids directly
+    (the fused in-kernel seg->node gather) instead of segment numbers.
     """
     n_segs = int(len32.shape[0])
     total = ids.shape[0]
@@ -204,6 +264,7 @@ def place_replicas_pallas(
         max_draws=max_draws,
         n_segs=n_segs,
         n_replicas=n_replicas,
+        emit_nodes=emit_nodes,
     )
     out = pl.pallas_call(
         kernel,
@@ -267,4 +328,72 @@ def place_pallas(
         out_shape=jax.ShapeDtypeStruct(ids2.shape, jnp.int32),
         interpret=interpret,
     )(ids2, len32)
+    return out.reshape(total)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "top_level",
+        "s_log2",
+        "max_draws",
+        "rows_per_block",
+        "interpret",
+        "emit_nodes",
+    ),
+)
+def place_fused_pallas(
+    ids: jax.Array,
+    len32: jax.Array,
+    cum_hi: jax.Array,
+    cum_lo: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+    emit_nodes: bool = False,
+) -> jax.Array:
+    """Device-resident batched placement -> (total,) int32, no host fix-up.
+
+    Like ``place_pallas`` but total: the p < 2**-53 non-converged tail is
+    resolved on-chip against the precomputed u64-cumsum halves
+    (``resolve_tail_dev``, bit-identical to ``resolve_tail_np``), and with
+    ``emit_nodes=True`` the seg->node gather is fused so the output is node
+    ids.  All five operands live in VMEM per block; the result never touches
+    the host.
+    """
+    n_segs = int(len32.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "ops.py must pad ids to a block multiple"
+    assert n_segs % LANE == 0, "ops.py must pad the table to a lane multiple"
+    assert cum_hi.shape[0] == n_segs and cum_lo.shape[0] == n_segs
+    assert node_of.shape[0] == n_segs
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _place_fused_kernel,
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs,
+        emit_nodes=emit_nodes,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_segs,), lambda i: (0,)),  # whole table per block
+            pl.BlockSpec((n_segs,), lambda i: (0,)),
+            pl.BlockSpec((n_segs,), lambda i: (0,)),
+            pl.BlockSpec((n_segs,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ids2.shape, jnp.int32),
+        interpret=interpret,
+    )(ids2, len32, cum_hi, cum_lo, node_of.astype(jnp.int32))
     return out.reshape(total)

@@ -1,19 +1,29 @@
 """Jitted public wrappers for batched ASURA placement and replication.
 
-``asura_place`` pads the id vector / segment table, dispatches to the Pallas
-kernel (interpret mode on CPU, compiled on TPU), resolves the p < 2**-53
-non-converged tail with the exact-integer uniform draw over occupied mass
-(``repro.core.asura.resolve_tail_np`` -- the single tail spec shared with the
-NumPy batch path; DESIGN.md section 3.2), and unpads.  ``asura_place_nodes``
-additionally maps segments -> node ids; ``asura_place_replicas`` runs the
-section 5.A distinct-node replica kernel.
+Two tiers of entry points (DESIGN.md sections 3.2-3.4, 6):
 
-The ``*_on_table`` variants take a prebuilt device-resident table (lane-padded
-u32 lengths + int32 seg->node map + static top level) so the PlacementEngine
-can issue many placement calls against one host->device upload.
+  * ``*_on_table_device`` -- the fully device-resident path: placement,
+    the p < 2**-53 non-converged tail (resolved on device against the
+    precomputed u64-cumsum halves, bit-identical to
+    ``repro.core.asura.resolve_tail_np``) and, for the ``nodes`` variants,
+    the fused seg->node gather all run on device and return device arrays
+    with ZERO host syncs -- the path the ``PlacementEngine`` device
+    variants and device-chained consumers (router, data pipeline,
+    checkpoint store) use.
+  * ``place_on_table`` / ``place_replicas_on_table`` -- host-facing: the
+    same device computation plus exactly ONE device->host transfer of the
+    final result (no jnp->np->jnp ping-pong; historically the tail was
+    resolved on the host and the fixed-up result re-uploaded).
+
+``asura_place*`` are the table-deriving conveniences: they canonicalize the
+segment table (via ``core.asura.lengths_to_u32``, which validates lengths
+in [0, 1) exactly like the NumPy path) and dispatch to the kernels --
+Pallas (interpret mode on CPU, compiled on TPU) or the jnp reference.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,23 +33,42 @@ from repro.core.asura import (
     DEFAULT_PARAMS,
     AsuraParams,
     _upper_bound,
-    resolve_tail_np,
+    lengths_to_u32,
+    tail_cumsum_halves,
 )
 
 from .asura_place import (
     DEFAULT_ROWS,
     LANE,
+    place_fused_pallas,
     place_pallas,
     place_replicas_pallas,
 )
-from .ref import place_ref, place_replicas_ref
+from .ref import place_ref, place_replicas_ref, resolve_tail_dev
+
+__all__ = [
+    "table_prep",
+    "node_table_prep",
+    "tail_prep",
+    "place_on_table",
+    "place_on_table_device",
+    "place_nodes_on_table_device",
+    "place_replicas_on_table",
+    "place_replicas_on_table_device",
+    "asura_place",
+    "asura_place_nodes",
+    "asura_place_replicas",
+]
 
 
-def _pad_to(x: jax.Array, multiple: int, fill) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("multiple",))
+def _pad_ids(x: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad ids to a block multiple ON DEVICE (jitted so the pad
+    constant is baked at compile time -- no per-call host->device scalar)."""
     pad = (-x.shape[0]) % multiple
     if pad == 0:
         return x
-    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+    return jnp.concatenate([x, jnp.zeros((pad,), dtype=x.dtype)])
 
 
 def _lane_pad_np(x: np.ndarray, fill) -> np.ndarray:
@@ -50,10 +79,15 @@ def _lane_pad_np(x: np.ndarray, fill) -> np.ndarray:
 
 
 def table_prep(seg_lengths, params: AsuraParams = DEFAULT_PARAMS):
-    """Host-side: canonical u32 table (lane-padded) + static top level."""
+    """Host-side: canonical u32 table (lane-padded) + static top level.
+
+    Uses ``core.asura.lengths_to_u32`` -- the single canonicalization spec
+    -- so out-of-range lengths raise here exactly as on the NumPy path
+    instead of silently wrapping on device.
+    """
     lengths = np.asarray(seg_lengths, dtype=np.float64)
     top_level = params.level_for(_upper_bound(lengths))
-    len32 = np.minimum(np.round(lengths * 2.0**32), 2.0**32 - 1).astype(np.uint32)
+    len32 = lengths_to_u32(lengths)
     return jnp.asarray(_lane_pad_np(len32, np.uint32(0))), top_level
 
 
@@ -63,11 +97,169 @@ def node_table_prep(seg_to_node) -> jax.Array:
     return jnp.asarray(_lane_pad_np(node_of, np.int32(-1)))
 
 
+def tail_prep(len32) -> tuple[jax.Array, jax.Array]:
+    """Host-side: u64 length-cumsum as two lane-padded u32 halves on device.
+
+    The device-resident tail tables (DESIGN.md section 3.2): computed once
+    per table version from the (already lane-padded) u32 length table;
+    padding entries carry cumsum == total mass and can never win the tail
+    draw.  One upload alongside the length/node tables.
+    """
+    cum_hi, cum_lo = tail_cumsum_halves(np.asarray(len32, dtype=np.uint32))
+    return jnp.asarray(cum_hi), jnp.asarray(cum_lo)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "emit_nodes")
+)
+def _place_fused_ref(
+    ids: jax.Array,
+    len32: jax.Array,
+    cum_hi: jax.Array,
+    cum_lo: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    emit_nodes: bool,
+) -> jax.Array:
+    """jnp-reference analogue of ``place_fused_pallas``: total, on-device."""
+    segs = place_ref(
+        ids, len32, top_level=top_level, s_log2=s_log2, max_draws=max_draws
+    )
+    segs = resolve_tail_dev(ids, segs, cum_hi, cum_lo, top_level)
+    if emit_nodes:
+        segs = jnp.take(node_of, segs, axis=0)
+    return segs
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _head(x: jax.Array, n: int) -> jax.Array:
+    """x[:n] ON DEVICE (jitted: an eager slice materializes its start
+    indices as host scalars, which a transfer guard rightly rejects)."""
+    return x[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("top_level", "s_log2", "max_draws", "n_replicas", "emit_nodes"),
+)
+def _place_replicas_fused_ref(
+    ids: jax.Array,
+    len32: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_replicas: int,
+    emit_nodes: bool,
+) -> jax.Array:
+    """jnp-reference replica placement with the optional fused node gather
+    (one jit so no eager scalar ops escape to the host between calls)."""
+    segs = place_replicas_ref(
+        ids,
+        len32,
+        node_of,
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_replicas=n_replicas,
+    )
+    if emit_nodes:
+        segs = jnp.where(segs >= 0, jnp.take(node_of, jnp.maximum(segs, 0)), -1)
+    return segs
+
+
+def _default_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def place_on_table_device(
+    datum_ids,
+    len32: jax.Array,
+    cum_hi: jax.Array,
+    cum_lo: jax.Array,
+    node_of: jax.Array | None = None,
+    *,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+    emit_nodes: bool = False,
+) -> jax.Array:
+    """Fully device-resident placement -> (batch,) int32 device array.
+
+    Total (the tail is resolved on device, bit-identical to the host spec)
+    and sync-free: inputs already on device stay there, the output is a
+    device array, and nothing round-trips through the host.  With
+    ``emit_nodes=True`` the seg->node gather is fused and the result is
+    node ids (``node_of`` required).
+    """
+    interpret = _default_interpret(interpret)
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if emit_nodes and node_of is None:
+        raise ValueError("emit_nodes=True requires the node table")
+    if node_of is None:
+        node_of = jnp.full(len32.shape, -1, dtype=jnp.int32)
+    if n == 0:
+        return jnp.zeros((0,), dtype=jnp.int32)
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_ids(ids, block)
+        out = place_fused_pallas(
+            padded,
+            len32,
+            cum_hi,
+            cum_lo,
+            node_of,
+            top_level=top_level,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            rows_per_block=rows_per_block,
+            interpret=interpret,
+            emit_nodes=emit_nodes,
+        )
+        return _head(out, n)
+    return _place_fused_ref(
+        ids,
+        len32,
+        cum_hi,
+        cum_lo,
+        node_of,
+        top_level=top_level,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+        emit_nodes=emit_nodes,
+    )
+
+
+def place_nodes_on_table_device(
+    datum_ids,
+    len32: jax.Array,
+    cum_hi: jax.Array,
+    cum_lo: jax.Array,
+    node_of: jax.Array,
+    **kwargs,
+) -> jax.Array:
+    """Device-resident placement straight to node ids (fused gather)."""
+    return place_on_table_device(
+        datum_ids, len32, cum_hi, cum_lo, node_of, emit_nodes=True, **kwargs
+    )
+
+
 def place_on_table(
     datum_ids,
     len32: jax.Array,
     *,
     top_level: int,
+    cum_hi: jax.Array | None = None,
+    cum_lo: jax.Array | None = None,
     params: AsuraParams = DEFAULT_PARAMS,
     use_pallas: bool = True,
     interpret: bool | None = None,
@@ -75,40 +267,80 @@ def place_on_table(
 ) -> np.ndarray:
     """Placement against a prebuilt (lane-padded) device table -> int64 segs.
 
-    The tail (-1 lanes, p < 2**-53) is resolved on the host with the exact
-    integer spec, so this path agrees bit-for-bit with the NumPy
-    ``place_batch`` including the fallback.  This is a host-facing API (one
-    device->host transfer per call, which every engine consumer needs
-    anyway); pipelines that keep results on device should call
-    ``place_pallas`` directly and treat -1 as the (practically impossible)
-    non-converged marker.
+    Host-facing: runs the device-resident path (including the on-device
+    tail, bit-identical to the NumPy ``place_batch`` fallback) and pays
+    exactly one device->host transfer for the final result.  Callers that
+    chain into further device work should use ``place_on_table_device``
+    instead.  ``cum_hi``/``cum_lo`` are the precomputed tail tables
+    (``tail_prep``); if omitted they are derived here (one extra table
+    read), which only table-per-call conveniences do.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if cum_hi is None or cum_lo is None:
+        cum_hi, cum_lo = tail_prep(np.asarray(len32))
+    segs = place_on_table_device(
+        datum_ids,
+        len32,
+        cum_hi,
+        cum_lo,
+        top_level=top_level,
+        params=params,
+        use_pallas=use_pallas,
+        interpret=interpret,
+        rows_per_block=rows_per_block,
+    )
+    return np.asarray(segs).astype(np.int64)
+
+
+def place_replicas_on_table_device(
+    datum_ids,
+    len32: jax.Array,
+    node_of: jax.Array,
+    n_replicas: int,
+    *,
+    top_level: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+    emit_nodes: bool = False,
+) -> jax.Array:
+    """Device-resident replica placement -> (batch, R) int32 device array.
+
+    ``emit_nodes=True`` returns node ids via the fused in-kernel gather
+    (primary first).  Non-converged entries stay -1 -- checking would force
+    a device->host sync, so the device path documents the marker instead of
+    raising; the host wrapper ``place_replicas_on_table`` raises.
+    """
+    interpret = _default_interpret(interpret)
     ids = jnp.asarray(datum_ids).astype(jnp.uint32)
     n = ids.shape[0]
+    if n == 0:
+        return jnp.zeros((0, n_replicas), dtype=jnp.int32)
     if use_pallas:
         block = rows_per_block * LANE
-        padded = _pad_to(ids, block, 0)
-        result = place_pallas(
+        padded = _pad_ids(ids, block)
+        out = place_replicas_pallas(
             padded,
             len32,
+            node_of,
             top_level=top_level,
             s_log2=params.s_log2,
             max_draws=params.max_draws,
+            n_replicas=n_replicas,
             rows_per_block=rows_per_block,
             interpret=interpret,
-        )[:n]
-    else:
-        result = place_ref(
-            ids,
-            len32,
-            top_level=top_level,
-            s_log2=params.s_log2,
-            max_draws=params.max_draws,
+            emit_nodes=emit_nodes,
         )
-    return resolve_tail_np(
-        np.asarray(ids), np.asarray(result).astype(np.int64), np.asarray(len32), top_level
+        return _head(out, n)
+    return _place_replicas_fused_ref(
+        ids,
+        len32,
+        node_of,
+        top_level=top_level,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+        n_replicas=n_replicas,
+        emit_nodes=emit_nodes,
     )
 
 
@@ -129,34 +361,17 @@ def place_replicas_on_table(
     Raises on non-convergence (more replicas requested than distinct nodes
     can supply within the bounded loop), matching the NumPy batch path.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
-    n = ids.shape[0]
-    if use_pallas:
-        block = rows_per_block * LANE
-        padded = _pad_to(ids, block, 0)
-        result = place_replicas_pallas(
-            padded,
-            len32,
-            node_of,
-            top_level=top_level,
-            s_log2=params.s_log2,
-            max_draws=params.max_draws,
-            n_replicas=n_replicas,
-            rows_per_block=rows_per_block,
-            interpret=interpret,
-        )[:n]
-    else:
-        result = place_replicas_ref(
-            ids,
-            len32,
-            node_of,
-            top_level=top_level,
-            s_log2=params.s_log2,
-            max_draws=params.max_draws,
-            n_replicas=n_replicas,
-        )
+    result = place_replicas_on_table_device(
+        datum_ids,
+        len32,
+        node_of,
+        n_replicas,
+        top_level=top_level,
+        params=params,
+        use_pallas=use_pallas,
+        interpret=interpret,
+        rows_per_block=rows_per_block,
+    )
     out = np.asarray(result).astype(np.int64)
     if (out < 0).any():
         raise RuntimeError("replication did not converge; too few distinct nodes?")
@@ -172,23 +387,27 @@ def asura_place(
     interpret: bool | None = None,
     rows_per_block: int = DEFAULT_ROWS,
 ) -> jax.Array:
-    """Place a batch of datum ids -> int32 segment numbers.
+    """Place a batch of datum ids -> int32 segment numbers (device array).
 
     use_pallas=False routes through the pure-jnp reference (place_ref) --
     the path the distributed pipeline uses on CPU hosts; the Pallas path is
     the TPU fast path (validated bit-identical in tests/test_kernels.py).
+    The result is total (on-device tail) and stays on device -- no host
+    round trip, no result re-upload.
     """
     len32, top_level = table_prep(seg_lengths, params)
-    segs = place_on_table(
+    cum_hi, cum_lo = tail_prep(len32)
+    return place_on_table_device(
         datum_ids,
         len32,
+        cum_hi,
+        cum_lo,
         top_level=top_level,
         params=params,
         use_pallas=use_pallas,
         interpret=interpret,
         rows_per_block=rows_per_block,
     )
-    return jnp.asarray(segs.astype(np.int32))
 
 
 def asura_place_nodes(
@@ -198,8 +417,20 @@ def asura_place_nodes(
     params: AsuraParams = DEFAULT_PARAMS,
     **kwargs,
 ) -> jax.Array:
-    segs = asura_place(datum_ids, seg_lengths, params, **kwargs)
-    return jnp.asarray(np.asarray(seg_to_node, dtype=np.int32))[segs]
+    """Batch placement straight to node ids (fused gather, device array)."""
+    len32, top_level = table_prep(seg_lengths, params)
+    cum_hi, cum_lo = tail_prep(len32)
+    node_of = node_table_prep(seg_to_node)
+    return place_nodes_on_table_device(
+        datum_ids,
+        len32,
+        cum_hi,
+        cum_lo,
+        node_of,
+        top_level=top_level,
+        params=params,
+        **kwargs,
+    )
 
 
 def asura_place_replicas(

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 GOLDEN = 0x9E3779B9
 KMULT = 0x85EBCA77
-MSB = jnp.uint32(0x80000000)
+# NOTE: no module-level jnp constants here -- this module's helpers run
+# inside Pallas kernels, which reject captured device arrays.
 
 
 def fmix32(h: jax.Array) -> jax.Array:
@@ -29,9 +30,15 @@ def fmix32(h: jax.Array) -> jax.Array:
     return h
 
 
-def draw_u32(ids: jax.Array, level: int, counters: jax.Array) -> jax.Array:
-    """k-th raw draw of the level-``level`` generator (counter-based)."""
-    lvl_term = jnp.uint32((GOLDEN * (level + 1)) & 0xFFFFFFFF)
+def draw_u32(ids: jax.Array, level, counters: jax.Array) -> jax.Array:
+    """k-th raw draw of the level-``level`` generator (counter-based).
+
+    ``level`` may be a static int or a traced scalar (the lazy-depth ladder
+    walks levels inside a ``lax.while_loop``); uint32 wrap-around
+    multiplication matches the static ``(GOLDEN * (level+1)) & 0xFFFFFFFF``.
+    """
+    lvl = jnp.asarray(level).astype(jnp.uint32)
+    lvl_term = jnp.uint32(GOLDEN) * (lvl + jnp.uint32(1))
     seed = fmix32(ids.astype(jnp.uint32) + lvl_term)
     return fmix32(seed ^ (counters.astype(jnp.uint32) * jnp.uint32(KMULT)))
 
@@ -39,26 +46,129 @@ def draw_u32(ids: jax.Array, level: int, counters: jax.Array) -> jax.Array:
 def next_asura(ids, counters, top_level: int, s_log2: int):
     """One ASURA number per lane as (k:int32, frac32:uint32, new_counters).
 
-    counters: (top_level + 1, batch) uint32; row r is the counter of level
-    ``top_level - r`` (row 0 = top).
+    counters: (top_level + 1, ...) uint32; row r is the counter of level
+    ``top_level - r`` (row 0 = top).  ``ids`` may be any shape (1-D batch
+    here, (rows, 128) tiles in the Pallas kernels); counters carry one
+    leading level axis over it.
+
+    Lazy-depth ladder (DESIGN.md section 3.4): every lane starts at
+    ``top_level`` and lanes descend in lockstep one level per iteration, so
+    all still-consulting lanes sit at the SAME level and the ladder is a
+    ``lax.while_loop`` over a scalar level that exits as soon as no lane is
+    still consulting -- expected 2 iterations (the descend test is a coin
+    flip), not ``top_level + 1``.  Counter rows are read/updated through
+    dynamic indexing at the one consulted level, so the loop-carried state
+    is the counter array plus O(1) scalars instead of one rebuilt counter
+    tensor per unrolled level.  Draw order and counter ticks are
+    bit-identical to the unrolled ladder and the scalar oracle (tested).
     """
-    batch = ids.shape[0]
-    consult = jnp.ones((batch,), dtype=bool)
-    out_k = jnp.zeros((batch,), dtype=jnp.int32)
-    out_f = jnp.zeros((batch,), dtype=jnp.uint32)
-    rows = []
-    for level in range(top_level, -1, -1):
+    shape = ids.shape
+    # NOTE: constants below are created inside the traced function (not
+    # module-level jnp arrays) so this helper can run inside Pallas kernels.
+
+    def cond(state):
+        _, consult, _, _, _ = state
+        return jnp.any(consult)
+
+    def body(state):
+        level, consult, out_k, out_f, ctrs = state
         row = top_level - level
-        h = draw_u32(ids, level, counters[row])
-        rows.append(counters[row] + consult.astype(jnp.uint32))
-        descend = consult & (level > 0) & ((h & MSB) == 0)
+        ctr = jax.lax.dynamic_index_in_dim(ctrs, row, 0, keepdims=False)
+        h = draw_u32(ids, level, ctr)
+        ctrs = jax.lax.dynamic_update_index_in_dim(
+            ctrs, ctr + consult.astype(jnp.uint32), row, 0
+        )
+        descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
         emit = consult & ~descend
-        k = (h >> jnp.uint32(32 - s_log2 - level)).astype(jnp.int32)
-        f = h << jnp.uint32(s_log2 + level)
+        lvl = level.astype(jnp.uint32)
+        k = (h >> (jnp.uint32(32 - s_log2) - lvl)).astype(jnp.int32)
+        f = h << (jnp.uint32(s_log2) + lvl)
         out_k = jnp.where(emit, k, out_k)
         out_f = jnp.where(emit, f, out_f)
-        consult = descend
-    return out_k, out_f, jnp.stack(rows)
+        return level - 1, descend, out_k, out_f, ctrs
+
+    state = (
+        jnp.int32(top_level),
+        jnp.ones(shape, dtype=bool),
+        jnp.zeros(shape, dtype=jnp.int32),
+        jnp.zeros(shape, dtype=jnp.uint32),
+        counters,
+    )
+    _, _, out_k, out_f, counters = jax.lax.while_loop(cond, body, state)
+    return out_k, out_f, counters
+
+
+def mul32_wide(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full 32x32 -> 64 bit product as (hi, lo) uint32 pairs.
+
+    TPUs have no native u64, so the 64-bit product is assembled from 16-bit
+    limbs; ``t`` (the carry column) fits uint32 by construction.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    m16 = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & m16, a >> jnp.uint32(16)
+    b_lo, b_hi = b & m16, b >> jnp.uint32(16)
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    t = (ll >> jnp.uint32(16)) + (lh & m16) + (hl & m16)
+    lo = (t << jnp.uint32(16)) | (ll & m16)
+    hi = hh + (lh >> jnp.uint32(16)) + (hl >> jnp.uint32(16)) + (t >> jnp.uint32(16))
+    return hi, lo
+
+
+def resolve_tail_dev(
+    ids: jax.Array,
+    segs: jax.Array,
+    cum_hi: jax.Array,
+    cum_lo: jax.Array,
+    top_level: int,
+) -> jax.Array:
+    """Device-resident non-converged-tail fallback (DESIGN.md section 3.2).
+
+    Bit-identical to ``repro.core.asura.resolve_tail_np``: lanes with
+    ``segs < 0`` get one raw draw h at level ``top_level + 1`` (counter 0),
+    scaled by the exact total occupied mass T via
+    ``u = h*(T>>32) + ((h*(T&0xFFFFFFFF))>>32)`` (the 95-bit product split
+    through ``mul32_wide``), then mapped to the segment whose inclusive u64
+    cumsum first exceeds u -- a branchless per-lane binary search over the
+    (cum_hi, cum_lo) halves, so no u64 and no host round trip.  Trailing
+    zero-length padding (cumsum == T > u) never wins.  The whole fallback is
+    gated behind ``lax.cond`` on any lane missing, so the p < 2**-53 common
+    case pays one reduction only.  Runs in plain jit and inside Pallas
+    kernels (all constants are trace-time).
+    """
+    n_pad = cum_hi.shape[0]
+    shape = ids.shape
+    miss = segs < 0
+
+    def tail(_):
+        h = draw_u32(ids, top_level + 1, jnp.zeros(shape, dtype=jnp.uint32))
+        t_hi = cum_hi[n_pad - 1]
+        t_lo = cum_lo[n_pad - 1]
+        p1_hi, p1_lo = mul32_wide(h, t_hi)
+        p2_hi, _ = mul32_wide(h, t_lo)
+        u_lo = p1_lo + p2_hi
+        u_hi = p1_hi + (u_lo < p1_lo).astype(jnp.uint32)
+        # searchsorted(cum, u, side="right"): first index with cum[idx] > u.
+        lo = jnp.zeros(shape, dtype=jnp.int32)
+        hi = jnp.full(shape, n_pad, dtype=jnp.int32)
+        for _step in range(max(1, int(n_pad).bit_length())):
+            active = lo < hi
+            mid = jnp.minimum((lo + hi) >> 1, n_pad - 1)
+            c_hi = jnp.take(cum_hi, mid.reshape(-1), axis=0).reshape(shape)
+            c_lo = jnp.take(cum_lo, mid.reshape(-1), axis=0).reshape(shape)
+            le = (c_hi < u_hi) | ((c_hi == u_hi) & (c_lo <= u_lo))  # cum<=u
+            lo = jnp.where(active & le, mid + 1, lo)
+            hi = jnp.where(active & ~le, mid, hi)
+        return lo
+
+    tail_seg = jax.lax.cond(
+        jnp.any(miss), tail, lambda _: jnp.zeros(shape, dtype=jnp.int32), None
+    )
+    return jnp.where(miss, tail_seg, segs)
 
 
 @functools.partial(jax.jit, static_argnames=("top_level", "s_log2", "max_draws"))

@@ -49,12 +49,26 @@ class ReplicaRouter:
         """session ids -> replica ids (vectorized, table-local)."""
         return self.engine.place_nodes(np.asarray(session_ids, dtype=np.uint32))
 
+    def route_device(self, session_ids):
+        """session ids -> replica ids as a DEVICE array, zero host syncs.
+
+        The request hot path for device-chained frontends: pass
+        device-resident session ids and the placement, tail resolution and
+        replica-id gather all stay on device (the routing result feeds
+        device-side batching/dispatch without a round trip)."""
+        return self.engine.place_nodes_device(session_ids)
+
     def route_replicas(self, session_ids, n_replicas: int) -> np.ndarray:
         """(sessions, R) replica ids on distinct replicas, primary first --
         for read fan-out / warm-standby session caches (section 5.A)."""
         return self.engine.place_replica_nodes(
             np.asarray(session_ids, dtype=np.uint32), n_replicas
         )
+
+    def route_replicas_device(self, session_ids, n_replicas: int):
+        """Device-resident ``route_replicas`` (fused node gather; -1 marks
+        the practically-impossible non-converged entries)."""
+        return self.engine.place_replica_nodes_device(session_ids, n_replicas)
 
     @property
     def table_uploads(self) -> int:

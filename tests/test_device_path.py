@@ -1,0 +1,400 @@
+"""ISSUE-2 coverage: lazy-depth draw ladder + device-resident placement path.
+
+  * lazy ladder vs the scalar oracle / unrolled ladder, lane-by-lane, at
+    top_level in {0, 5, 19} (draw-sequence and placement equivalence),
+  * forced-tail lanes resolved ON DEVICE bit-identically to
+    ``resolve_tail_np`` (reusing the 128-bit tail-scaling regression
+    configuration: 100 uniform nodes, where h * total_mass needs 95 bits),
+  * non-block-multiple and size-0/size-1 batches through ``place_on_table``
+    and the engine device variants,
+  * zero host->device transfers between engine ``*_device`` calls
+    (transfer-guard + np.asarray tripwire),
+  * fused seg->node gather == host gather for placement and replicas.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Cluster, PlacementEngine, make_cluster, make_uniform_cluster
+from repro.core.asura import (
+    DEFAULT_PARAMS,
+    AsuraParams,
+    _AsuraStream,
+    _next_asura_batch,
+    _next_asura_batch_unrolled,
+    _place_batch_u32_unrolled,
+    lengths_to_u32,
+    place_batch,
+    place_batch_u32,
+    place_replicas_scalar,
+    resolve_tail_np,
+    tail_cumsum_halves,
+)
+from repro.kernels.ops import (
+    node_table_prep,
+    place_nodes_on_table_device,
+    place_on_table,
+    place_on_table_device,
+    place_replicas_on_table_device,
+    table_prep,
+    tail_prep,
+)
+
+MIXED = [0.3, 1.7, 2.0, 0.9, 1.0, 0.5]
+
+# Half-full uniform tables whose derived entry level is exactly the top we
+# want: top 19 needs upper in (2**19, 2**20], i.e. ~600k segments.
+TOP_TABLES = {
+    0: np.full(2, 0.9),
+    5: np.full(60, 0.9),
+    19: np.full(600_000, 0.9),
+}
+
+
+def _top_for(lengths) -> int:
+    occupied = np.nonzero(lengths > 0)[0]
+    upper = occupied[-1] + lengths[occupied[-1]]
+    return DEFAULT_PARAMS.level_for(float(upper))
+
+
+@pytest.mark.parametrize("top_level", sorted(TOP_TABLES))
+def test_table_levels_are_as_labelled(top_level):
+    assert _top_for(TOP_TABLES[top_level]) == top_level
+
+
+# ---------------------------------------------------------------------------
+# Lazy ladder == scalar oracle == unrolled ladder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top_level", [0, 5, 19])
+def test_lazy_ladder_draw_sequence_matches_oracle(top_level):
+    """The first 40 ASURA numbers of every lane, lane-by-lane vs the scalar
+    stream with true per-level counters."""
+    ids = (np.arange(16, dtype=np.uint64) * 2654435761 % (2**32)).astype(np.uint32)
+    n_draws = 40
+    counters = np.zeros((top_level + 1, len(ids)), dtype=np.uint32)
+    got = [
+        _next_asura_batch(ids, counters, top_level, DEFAULT_PARAMS)
+        for _ in range(n_draws)
+    ]
+    for lane, datum in enumerate(ids):
+        stream = _AsuraStream(int(datum), top_level, DEFAULT_PARAMS)
+        for d in range(n_draws):
+            k, frac = stream.next()
+            assert got[d][0][lane] == k, (lane, d)
+            assert got[d][1][lane] == frac, (lane, d)
+        assert counters[:, lane].tolist() == stream.counters, lane
+
+
+@pytest.mark.parametrize("top_level", [0, 5, 19])
+def test_lazy_ladder_matches_unrolled(top_level):
+    ids = np.arange(256, dtype=np.uint32)
+    c_lazy = np.zeros((top_level + 1, len(ids)), dtype=np.uint32)
+    c_unrl = np.zeros((len(ids), top_level + 1), dtype=np.uint32)  # legacy layout
+    for _ in range(10):
+        k1, f1 = _next_asura_batch(ids, c_lazy, top_level, DEFAULT_PARAMS)
+        k2, f2 = _next_asura_batch_unrolled(ids, c_unrl, top_level, DEFAULT_PARAMS)
+        assert_allclose(k1, k2, atol=0)
+        assert_allclose(f1, f2, atol=0)
+    assert_allclose(c_lazy, c_unrl.T, atol=0)
+
+
+def _place_scalar_at_top(datum_id, len32, top_level, params=DEFAULT_PARAMS):
+    """place_scalar with an explicitly forced entry level."""
+    stream = _AsuraStream(int(datum_id), top_level, params)
+    n_segs = len(len32)
+    while True:
+        k, frac = stream.next()
+        if k < n_segs and frac < int(len32[k]):
+            return k
+
+
+@pytest.mark.parametrize("top_level", [0, 5, 19])
+def test_lazy_placement_lane_by_lane_vs_oracle(top_level):
+    lengths = TOP_TABLES[top_level]
+    len32 = lengths_to_u32(lengths)
+    ids = (np.arange(48, dtype=np.uint64) * 2654435761 % (2**32)).astype(np.uint32)
+    got = place_batch_u32(ids, len32, top_level)
+    assert (got >= 0).all()  # half-full table: no tail lanes expected
+    for lane, datum in enumerate(ids):
+        assert got[lane] == _place_scalar_at_top(datum, len32, top_level), lane
+    assert_allclose(got, _place_batch_u32_unrolled(ids, len32, top_level), atol=0)
+
+
+@pytest.mark.parametrize("top_level", [0, 5, 19])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_kernel_ladders_match_numpy(top_level, use_pallas):
+    """jnp ref and Pallas (interpret) lazy ladders vs the NumPy batch, at
+    the same forced top level, including the on-device tail."""
+    lengths = TOP_TABLES[top_level]
+    len32 = lengths_to_u32(lengths)
+    batch = 1024 if top_level < 19 else 256
+    ids = np.arange(batch, dtype=np.uint32)
+    want = resolve_tail_np(
+        ids, place_batch_u32(ids, len32, top_level), len32, top_level
+    )
+    len32_dev, _ = table_prep(lengths)
+    cum_hi, cum_lo = tail_prep(np.asarray(len32_dev))
+    got = place_on_table_device(
+        ids,
+        len32_dev,
+        cum_hi,
+        cum_lo,
+        top_level=top_level,
+        use_pallas=use_pallas,
+        rows_per_block=2,
+    )
+    assert_allclose(np.asarray(got), want, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# On-device tail == resolve_tail_np (the 128-bit regression table)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_forced_tail_on_device_128bit_table(backend):
+    """max_draws=0 pushes EVERY lane through the tail; on the 100-node
+    uniform table h * total_mass needs up to 95 bits, so a u64-wrapping
+    device implementation would dump every lane on segment 0."""
+    params = AsuraParams(max_draws=0)
+    c = make_uniform_cluster(100, params=params)
+    ids = np.arange(20_000, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths(), params)
+    eng = PlacementEngine(c, backend=backend)
+    got = np.asarray(eng.place_device(jnp.asarray(ids)))
+    assert_allclose(got, want, atol=0)
+    # and the fused node-gather variant agrees with the host mapping
+    got_nodes = np.asarray(eng.place_nodes_device(jnp.asarray(ids)))
+    assert_allclose(got_nodes, c.seg_to_node()[want], atol=0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_partial_tail_on_device(backend):
+    """max_draws=1 leaves a real mixed population of converged and
+    tail-resolved lanes."""
+    params = AsuraParams(max_draws=1)
+    c = make_cluster([0.1, 0.2, 0.05], params=params)
+    ids = np.arange(2048, dtype=np.uint32)
+    want = place_batch(ids, c.seg_lengths(), params)
+    eng = PlacementEngine(c, backend=backend)
+    assert_allclose(np.asarray(eng.place_device(ids)), want, atol=0)
+
+
+def test_tail_cumsum_halves_exact():
+    len32 = lengths_to_u32(make_uniform_cluster(100).seg_lengths())
+    hi, lo = tail_cumsum_halves(len32)
+    cum = np.cumsum(len32.astype(np.uint64))
+    assert_allclose(
+        hi.astype(np.uint64) * 2**32 + lo.astype(np.uint64), cum, atol=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch-shape edges through place_on_table and the engine device variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch", [0, 1, 7, 100, 2049])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_odd_batches_place_on_table(batch, use_pallas):
+    c = make_cluster(MIXED)
+    len32, top = table_prep(c.seg_lengths())
+    ids = np.arange(batch, dtype=np.uint32)
+    got = place_on_table(ids, len32, top_level=top, use_pallas=use_pallas)
+    assert got.shape == (batch,)
+    if batch:
+        assert_allclose(got, place_batch(ids, c.seg_lengths()), atol=0)
+
+
+@pytest.mark.parametrize("batch", [0, 1, 7, 100, 2049])
+@pytest.mark.parametrize("backend", ["numpy", "ref", "pallas"])
+def test_odd_batches_engine_device(batch, backend):
+    c = make_cluster(MIXED)
+    eng = PlacementEngine(c, backend=backend)
+    ids = np.arange(batch, dtype=np.uint32)
+    want_segs = place_batch(ids, c.seg_lengths())
+    segs = np.asarray(eng.place_device(ids))
+    nodes = np.asarray(eng.place_nodes_device(ids))
+    assert segs.shape == (batch,) and nodes.shape == (batch,)
+    if batch:
+        assert_allclose(segs, want_segs, atol=0)
+        assert_allclose(nodes, c.seg_to_node()[want_segs], atol=0)
+    reps = np.asarray(eng.place_replica_nodes_device(ids, 2))
+    assert reps.shape == (batch, 2)
+    if batch:
+        want_reps = eng.place_replica_nodes(ids, 2)
+        assert_allclose(reps, want_reps, atol=0)
+
+
+def test_numpy_backend_device_calls_leave_host_path_intact():
+    """Device variants on the numpy backend build the device tables lazily
+    without a second materialization (uploads stays 1) and host calls keep
+    working afterwards."""
+    c = make_cluster(MIXED)
+    eng = PlacementEngine(c, backend="numpy")
+    ids = np.arange(300, dtype=np.uint32)
+    host = eng.place(ids)
+    dev = np.asarray(eng.place_device(ids))
+    assert eng.uploads == 1
+    assert_allclose(dev, host, atol=0)
+    assert_allclose(eng.place(ids), host, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Zero host syncs between device calls
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_device_path_zero_host_transfers(backend, monkeypatch):
+    """After warm-up, repeated ``place_nodes_device`` /
+    ``place_replica_nodes_device`` calls with device-resident ids must not
+    touch the host: ``jax.transfer_guard('disallow')`` rejects any
+    host->device upload (the old path re-uploaded the host-resolved tail),
+    and an ``np.asarray`` tripwire catches device->host reads that the
+    CPU-backend guard cannot see.  Results must be jax Arrays."""
+    c = make_cluster(MIXED)
+    eng = PlacementEngine(c, backend=backend)
+    ids = jnp.arange(4096, dtype=jnp.uint32)
+    rep_ids = jnp.arange(256, dtype=jnp.uint32)  # sliced OUTSIDE the guard
+    # warm-up: artifact build (the one upload) + jit compile
+    eng.place_device(ids).block_until_ready()
+    eng.place_nodes_device(ids).block_until_ready()
+    eng.place_replica_nodes_device(rep_ids, 2).block_until_ready()
+    assert eng.uploads == 1
+
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        for _ in range(3):
+            segs = eng.place_device(ids)
+            nodes = eng.place_nodes_device(ids)
+            reps = eng.place_replica_nodes_device(rep_ids, 2)
+            segs.block_until_ready()
+            nodes.block_until_ready()
+            reps.block_until_ready()
+    monkeypatch.undo()
+    assert isinstance(nodes, jax.Array) and isinstance(reps, jax.Array)
+    assert not host_reads, f"device path touched the host: {len(host_reads)} reads"
+    assert eng.uploads == 1
+
+
+# ---------------------------------------------------------------------------
+# Fused seg->node gather == host gather
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_replicas", [1, 2, 3])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_replica_node_gather_matches_scalar(n_replicas, use_pallas):
+    c = make_cluster(MIXED)
+    ids = (np.arange(64, dtype=np.uint64) * 2654435761 % (2**32)).astype(np.uint32)
+    len32, top = table_prep(c.seg_lengths())
+    node_of = node_table_prep(c.seg_to_node())
+    got = np.asarray(
+        place_replicas_on_table_device(
+            ids,
+            len32,
+            node_of,
+            n_replicas,
+            top_level=top,
+            use_pallas=use_pallas,
+            emit_nodes=True,
+        )
+    )
+    for lane, datum in enumerate(ids):
+        segs = place_replicas_scalar(
+            int(datum), c.seg_lengths(), c.seg_to_node(), n_replicas
+        )
+        want = [int(c.seg_to_node()[s]) for s in segs]
+        assert got[lane].tolist() == want, (lane, datum)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_place_node_gather_matches_host(use_pallas):
+    c = make_cluster(MIXED)
+    ids = np.arange(1000, dtype=np.uint32)
+    len32, top = table_prep(c.seg_lengths())
+    node_of = node_table_prep(c.seg_to_node())
+    cum_hi, cum_lo = tail_prep(np.asarray(len32))
+    got = np.asarray(
+        place_nodes_on_table_device(
+            ids, len32, cum_hi, cum_lo, node_of,
+            top_level=top, use_pallas=use_pallas,
+        )
+    )
+    want = c.seg_to_node()[place_batch(ids, c.seg_lengths())]
+    assert_allclose(got, want, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Consumers on the device path
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_ownership_via_device_path():
+    from repro.data.pipeline import DataPipeline, ShardedDataset
+
+    ds = ShardedDataset(n_shards=64, tokens_per_shard=128, vocab=97)
+    c_host = make_uniform_cluster(4)
+    c_dev = Cluster.from_json(c_host.to_json())
+    c_dev._engine = PlacementEngine(c_dev, backend="ref")
+    for host in range(4):
+        p_host = DataPipeline(
+            ds, c_host, host, batch_per_host=2, seq_len=32
+        )
+        p_dev = DataPipeline(ds, c_dev, host, batch_per_host=2, seq_len=32)
+        assert_allclose(p_dev.owned_shards, p_host.owned_shards, atol=0)
+
+
+def test_checkpoint_add_node_via_device_path():
+    from repro.checkpoint.sharded import AsuraCheckpointStore
+
+    def build(backend):
+        store = AsuraCheckpointStore({i: 1.0 for i in range(5)}, n_replicas=2)
+        if backend != "auto":
+            store.engine = store.cluster._engine = PlacementEngine(
+                store.cluster, backend=backend
+            )
+        keys = np.arange(40, dtype=np.uint32)
+        store.put_chunks(keys, [bytes([k % 251]) * 8 for k in keys])
+        moved = store.add_node(9, 1.0)
+        return store, moved
+
+    host_store, host_moved = build("numpy")
+    dev_store, dev_moved = build("ref")
+    assert dev_moved == host_moved
+    for nid, node in host_store.nodes.items():
+        assert dev_store.nodes[nid].blobs == node.blobs
+
+
+# ---------------------------------------------------------------------------
+# table_prep canonicalization (satellite: unify on lengths_to_u32)
+# ---------------------------------------------------------------------------
+
+
+def test_table_prep_rejects_out_of_range_lengths():
+    with pytest.raises(ValueError):
+        table_prep([0.5, 1.0])  # length 1.0 is out of [0, 1)
+    with pytest.raises(ValueError):
+        table_prep([0.5, -0.1])
+
+
+def test_table_prep_matches_lengths_to_u32():
+    lengths = make_cluster(MIXED).seg_lengths()
+    len32, _ = table_prep(lengths)
+    want = lengths_to_u32(lengths)
+    assert_allclose(np.asarray(len32)[: len(want)], want, atol=0)
+    assert (np.asarray(len32)[len(want):] == 0).all()

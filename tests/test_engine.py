@@ -87,6 +87,40 @@ class TestArtifactCache:
         c.engine.artifact()
         assert c.engine.uploads == 2
 
+    def test_version_flap_hits_cache(self):
+        """A router flapping between two live cluster versions (rollback,
+        A/B drain) must not re-materialize the table on every alternation:
+        the engine keeps the most-recent versions cached."""
+        c_new = make_cluster(MIXED)
+        c_old = Cluster.from_json(c_new.to_json())  # snapshot at version N
+        c_new.add_node(50, 1.0)  # version N+1
+        eng = PlacementEngine(c_new)
+        ids = np.arange(256, dtype=np.uint32)
+        for _ in range(6):  # flap: N+1, N, N+1, N, ...
+            eng.cluster = c_new
+            want_new = place_batch(ids, c_new.seg_lengths())
+            assert_allclose(eng.place(ids), want_new, atol=0)
+            eng.cluster = c_old
+            want_old = place_batch(ids, c_old.seg_lengths())
+            assert_allclose(eng.place(ids), want_old, atol=0)
+        assert eng.uploads == 2  # one materialization per distinct version
+
+    def test_cache_evicts_oldest_beyond_capacity(self):
+        c = make_cluster(MIXED)
+        eng = PlacementEngine(c, cache_versions=2)
+        ids = np.arange(64, dtype=np.uint32)
+        snapshots = []
+        for i in range(3):
+            snapshots.append(Cluster.from_json(c.to_json()))
+            eng.place(ids)
+            c.add_node(100 + i, 1.0)
+        eng.place(ids)
+        assert eng.uploads == 4
+        # oldest snapshot fell out of the 2-deep cache -> one more rebuild
+        eng.cluster = snapshots[0]
+        eng.place(ids)
+        assert eng.uploads == 5
+
     def test_rejects_unknown_backend(self):
         with pytest.raises(ValueError):
             PlacementEngine(make_cluster(MIXED), backend="tpuv7")
