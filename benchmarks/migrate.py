@@ -1,0 +1,67 @@
+"""Migration subsystem benchmarks (DESIGN.md section 8).
+
+Covers the two layers ``movement.py`` does not: the throttled mover's
+drain (rounds + rows/s under per-node budgets) and the dual-version
+serving window (migration-window routing throughput and the landed
+fraction it exposes).  ``--quick`` shrinks populations for the CI smoke.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_uniform_cluster
+from repro.runtime import ElasticCoordinator
+
+
+def run(csv_print, quick: bool = False) -> None:
+    n_nodes = 16 if quick else 64
+    n_ids = 100_000 if quick else 2_000_000
+    budget = 200 if quick else 2_000
+
+    cluster = make_uniform_cluster(n_nodes)
+    ids = np.arange(n_ids, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+
+    t0 = time.perf_counter()
+    mig = coord.add_node_live(n_nodes, 1.0, egress=budget, ingress=None)
+    csv_print("migrate_live_plan_s", round(time.perf_counter() - t0, 4), "an_prefilter")
+    plan = mig.state.plan
+    csv_print(
+        "migrate_live_moved_pct",
+        100 * plan.n_moves / n_ids,
+        f"optimal {100/(n_nodes+1):.3f}",
+    )
+
+    # Throttled drain: rounds + mover throughput under the egress budget.
+    t0 = time.perf_counter()
+    sample = ids[:: max(1, n_ids // 10_000)]
+    routed_to_new = 0
+    route_calls = 0
+    while not mig.done:
+        mig.round()
+        routed_to_new += int((mig.route(sample) == n_nodes).sum())
+        route_calls += len(sample)
+    dt = time.perf_counter() - t0
+    csv_print("migrate_mover_rounds", mig.mover.rounds_done, f"egress {budget}/round")
+    csv_print("migrate_mover_rows_per_s", int(plan.n_moves / dt), "incl_routing")
+    csv_print(
+        "migrate_window_hit_pct",
+        100 * routed_to_new / max(1, route_calls),
+        "reads_served_by_v1_owner",
+    )
+
+    # Migration-window routing throughput (host rule) at half-drain.
+    mig2 = coord.remove_node_live(1, ingress=budget)
+    while not mig2.done and mig2.state.n_pending > mig2.state.plan.n_moves // 2:
+        mig2.round()
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        mig2.route(sample)
+    dt = time.perf_counter() - t0
+    csv_print("migrate_route_ids_per_s", int(reps * len(sample) / dt), "dual_version")
+    if not mig2.done:
+        mig2.run()

@@ -3,47 +3,118 @@
 Measures the moved fraction for ASURA / CH / Straw against the theoretical
 optimum (cap_new / cap_total on addition; cap_victim / cap_total on
 removal), and verifies the direction constraint (moves only to the new node
-/ only off the removed node)."""
+/ only off the removed node).
+
+Also benchmarks the migration subsystem's device streaming planner
+(DESIGN.md section 8) at scale: moved fraction vs optimal and planner
+throughput (ids/s) for the chunked dual-version diff sweep, with and
+without the ADDITION-NUMBER prefilter.  ``--quick`` shrinks every
+population for the CI smoke."""
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core import ConsistentHashRing, StrawBucket, make_uniform_cluster
+from repro.core import (
+    ConsistentHashRing,
+    PlacementEngine,
+    StrawBucket,
+    make_uniform_cluster,
+)
+from repro.migrate import MigrationPlanner
 
 N_NODES = 50
 N_DATA = 200_000
 
+# Streaming-planner scale point (the ISSUE-3 acceptance config).
+PLANNER_NODES = 1024
+PLANNER_IDS = 10_000_000
+PLANNER_CHUNK = 1 << 20
 
-def run(csv_print) -> None:
-    ids = np.arange(N_DATA, dtype=np.uint32)
+
+def _classic_comparisons(csv_print, n_nodes: int, n_data: int) -> None:
+    ids = np.arange(n_data, dtype=np.uint32)
     # ASURA
-    cluster = make_uniform_cluster(N_NODES)
+    cluster = make_uniform_cluster(n_nodes)
     before = cluster.place_nodes(ids)
-    cluster.add_node(N_NODES, 1.0)
+    cluster.add_node(n_nodes, 1.0)
     after = cluster.place_nodes(ids)
     moved = before != after
-    csv_print("move_add_asura_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
-    csv_print("move_add_asura_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")
+    csv_print("move_add_asura_pct", 100 * moved.mean(), f"optimal {100/(n_nodes+1):.2f}")
+    csv_print("move_add_asura_wrong_dest", int((after[moved] != n_nodes).sum()), "must_be_0")
     before = after
     cluster.remove_node(7)
     after = cluster.place_nodes(ids)
     moved = before != after
-    csv_print("move_rm_asura_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
+    csv_print("move_rm_asura_pct", 100 * moved.mean(), f"optimal {100/(n_nodes+1):.2f}")
     csv_print("move_rm_asura_wrong_src", int((before[moved] != 7).sum()), "must_be_0")
     # Consistent Hashing
-    ring = ConsistentHashRing(range(N_NODES), virtual_nodes=100)
+    ring = ConsistentHashRing(range(n_nodes), virtual_nodes=100)
     before = ring.place(ids)
-    ring2 = ConsistentHashRing(range(N_NODES + 1), virtual_nodes=100)
+    ring2 = ConsistentHashRing(range(n_nodes + 1), virtual_nodes=100)
     after = ring2.place(ids)
     moved = before != after
-    csv_print("move_add_ch_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
-    csv_print("move_add_ch_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")
+    csv_print("move_add_ch_pct", 100 * moved.mean(), f"optimal {100/(n_nodes+1):.2f}")
+    csv_print("move_add_ch_wrong_dest", int((after[moved] != n_nodes).sum()), "must_be_0")
     # Straw
-    straw = StrawBucket(range(N_NODES))
+    straw = StrawBucket(range(n_nodes))
     before = straw.place(ids)
-    straw2 = StrawBucket(range(N_NODES + 1))
+    straw2 = StrawBucket(range(n_nodes + 1))
     after = straw2.place(ids)
     moved = before != after
-    csv_print("move_add_straw_pct", 100 * moved.mean(), f"optimal {100/(N_NODES+1):.2f}")
-    csv_print("move_add_straw_wrong_dest", int((after[moved] != N_NODES).sum()), "must_be_0")
+    csv_print("move_add_straw_pct", 100 * moved.mean(), f"optimal {100/(n_nodes+1):.2f}")
+    csv_print("move_add_straw_wrong_dest", int((after[moved] != n_nodes).sum()), "must_be_0")
+
+
+def _streaming_planner(csv_print, n_nodes: int, n_ids: int, chunk: int) -> None:
+    """Device streaming planner at scale: one add-node event, chunked sweep."""
+    ids = np.arange(n_ids, dtype=np.uint32)
+    cluster = make_uniform_cluster(n_nodes)
+    engine = PlacementEngine(cluster, backend="ref")  # the device path on CPU
+    engine.artifact()
+    v_from = cluster.version
+    new_segs = cluster.add_node(n_nodes, 1.0)
+    planner = MigrationPlanner(engine)
+
+    # warm-up: compile the dual-diff at the chunk shape and the tail shape
+    warm = [ids[:chunk]]
+    if n_ids % chunk:
+        warm.append(ids[-(n_ids % chunk):])
+    for _, moved, _, _ in planner.plan_stream(warm, v_from, cluster.version):
+        moved.block_until_ready()
+
+    t0 = time.perf_counter()
+    n_moved = 0
+    for _, moved, _, _ in planner.plan_stream(
+        planner.chunked(ids, chunk), v_from, cluster.version
+    ):
+        n_moved += int(np.asarray(moved).sum())
+    dt = time.perf_counter() - t0
+    csv_print(
+        "migrate_stream_moved_pct",
+        100 * n_moved / n_ids,
+        f"optimal {100/(n_nodes+1):.3f}",
+    )
+    csv_print("migrate_stream_ids_per_s", int(n_ids / dt), f"{n_nodes}_nodes")
+
+    # Steady state: the first call pays the AN/diff jit compiles at the
+    # prefilter's bucket shapes; time the second.
+    plan = planner.plan(
+        ids, v_from, cluster.version, chunk=chunk, max_new_seg=max(new_segs)
+    )
+    assert plan.n_moves == n_moved  # the prefilter must not change the plan
+    t0 = time.perf_counter()
+    planner.plan(ids, v_from, cluster.version, chunk=chunk, max_new_seg=max(new_segs))
+    dt = time.perf_counter() - t0
+    csv_print("migrate_prefilter_ids_per_s", int(n_ids / dt), "an_prefilter")
+
+
+def run(csv_print, quick: bool = False) -> None:
+    if quick:
+        _classic_comparisons(csv_print, n_nodes=20, n_data=20_000)
+        _streaming_planner(csv_print, n_nodes=128, n_ids=200_000, chunk=1 << 16)
+    else:
+        _classic_comparisons(csv_print, N_NODES, N_DATA)
+        _streaming_planner(csv_print, PLANNER_NODES, PLANNER_IDS, PLANNER_CHUNK)

@@ -26,6 +26,7 @@ from . import (
     calc_time,
     capacity,
     memory,
+    migrate,
     movement,
     replicas,
     roofline,
@@ -37,6 +38,7 @@ SUITES = {
     "table2_memory": memory,
     "fig67_uniformity": uniformity,
     "movement": movement,
+    "migrate": migrate,
     "replicas": replicas,
     "table3_actual_usage": actual_usage,
     "capacity": capacity,

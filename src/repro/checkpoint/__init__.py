@@ -1,3 +1,3 @@
-from .sharded import AsuraCheckpointStore, CheckpointManager
+from .sharded import AsuraCheckpointStore, CheckpointManager, StoreMigration
 
-__all__ = ["AsuraCheckpointStore", "CheckpointManager"]
+__all__ = ["AsuraCheckpointStore", "CheckpointManager", "StoreMigration"]

@@ -77,6 +77,7 @@ class AsuraCheckpointStore:
         # restore / repair issue many replica lookups against one cached
         # table artifact per membership version (no per-call table prep).
         self.engine = self.cluster.engine
+        self._migration: StoreMigration | None = None  # live rebalance window
 
     # -- placement ---------------------------------------------------------
 
@@ -93,16 +94,50 @@ class AsuraCheckpointStore:
         placement, tail resolution and node gather all stay on device."""
         return self.engine.place_replica_nodes_device(keys, self.n_replicas)
 
+    def _all_blobs(self) -> dict[int, bytes]:
+        """Every stored (key, blob) across the live nodes."""
+        all_keys: dict[int, bytes] = {}
+        for node in self.nodes.values():
+            all_keys.update(node.blobs)
+        return all_keys
+
+    def _replica_rows(self, keys: np.ndarray, keys_dev=None) -> np.ndarray:
+        """Host (keys, R) replica sweep, chained on device when available
+        (one sync for the whole sweep instead of per-key work)."""
+        if keys.size == 0:
+            return np.empty((0, self.n_replicas), dtype=np.int64)
+        if keys_dev is not None:
+            return np.asarray(self.replicas_for_device(keys_dev)).astype(np.int64)
+        return self.replicas_for(keys)
+
     # -- chunk I/O ----------------------------------------------------------
 
     def put_chunks(self, keys: np.ndarray, blobs: list[bytes]) -> None:
         placements = self.replicas_for(keys)
         for key, blob, nodes in zip(keys, blobs, placements):
+            if self._migration is not None:
+                # Write through the migration window: a pending chunk must
+                # be overwritten where READERS are routed (its v replica
+                # set) -- the fresh blob then rides the landing copy to the
+                # v+1 set (``StoreMigration._land`` prefers the live copy,
+                # and the refreshed snapshot keeps even the all-sources-died
+                # fallback from resurrecting the stale bytes).
+                row = self._migration.read_row(int(key))
+                if row is not None:
+                    nodes = row
+                    self._migration._blobs[int(key)] = blob
             for nid in nodes:
                 self.nodes[int(nid)].put(int(key), blob)
 
     def get_chunk(self, key: int) -> bytes:
-        nodes = self.replicas_for(np.array([key], dtype=np.uint32))[0]
+        nodes = None
+        if self._migration is not None:
+            # Migration-window read rule (DESIGN.md section 8): a moving
+            # chunk is read from its v replica set until its copy lands,
+            # from its v+1 set after -- the set that actually holds it.
+            nodes = self._migration.read_row(int(key))
+        if nodes is None:
+            nodes = self.replicas_for(np.array([key], dtype=np.uint32))[0]
         errors = []
         for nid in nodes:  # primary first, replicas on failure
             node = self.nodes[int(nid)]
@@ -120,12 +155,23 @@ class AsuraCheckpointStore:
     def fail_node(self, node_id: int) -> None:
         self.nodes[node_id].alive = False
 
+    def _check_no_migration(self) -> None:
+        """Membership must not mutate under a live rebalance window -- the
+        window's before/after snapshots would no longer describe reality
+        (same single-drain rule as ``ElasticCoordinator``)."""
+        if self._migration is not None and not self._migration.done:
+            raise RuntimeError(
+                "a store migration is in flight; drain it before the next "
+                "membership event"
+            )
+
     def remove_node_and_repair(self, node_id: int) -> int:
         """Remove a node; re-replicate exactly the chunks it held.
 
         Uses REMOVE NUMBERS (paper section 2.D): a chunk needs repair iff one
         of its remove numbers is a segment of the removed node.  Returns the
         number of chunk copies moved (provably minimal)."""
+        self._check_no_migration()
         victim_segments = set(self.cluster.nodes[node_id].segments)
         lengths = self.cluster.seg_lengths()
         node_of = self.cluster.seg_to_node()
@@ -156,34 +202,90 @@ class AsuraCheckpointStore:
                     moved += 1
         return moved
 
+    def begin_add_node(
+        self,
+        node_id: int,
+        capacity: float,
+        *,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ) -> "StoreMigration":
+        """Add storage as a LIVE migration: the same minimal chunk set as
+        ``add_node``, but blob copies drain in bandwidth-budgeted rounds
+        while ``get_chunk`` reads through the dual-version rule.  Drive the
+        returned ``StoreMigration`` (``round``/``pump``/``run``); the store
+        detaches it automatically once drained."""
+        from repro.migrate import LiveMigration, MigrationPlan
+
+        self._check_no_migration()
+        all_keys = self._all_blobs()
+        keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
+        keys_dev = None
+        if self.engine.backend != "numpy" and keys.size:
+            import jax.numpy as jnp
+
+            keys_dev = jnp.asarray(keys)
+        self.engine.artifact()  # pin the v table before mutating
+        v_from = self.cluster.version
+        before = self._replica_rows(keys, keys_dev)
+        self.cluster.add_node(node_id, capacity)
+        self.nodes[node_id] = StorageNode(node_id, capacity)
+        after = self._replica_rows(keys, keys_dev)
+        changed = np.any(np.sort(before, axis=1) != np.sort(after, axis=1), axis=1)
+        rows = np.nonzero(changed)[0]
+        # The throttle accounts each chunk as the copy flow it causes: the
+        # node LOSING a replica -> the node GAINING one (primaries as the
+        # degenerate fallback), so ingress/egress budgets bind on the nodes
+        # actually doing the transfer; the full replica sets drive the blob
+        # copies at land time.
+        src_nodes = np.empty(len(rows), dtype=np.int64)
+        dst_nodes = np.empty(len(rows), dtype=np.int64)
+        for i, row in enumerate(rows):
+            b, a = set(before[row].tolist()), set(after[row].tolist())
+            lost, gained = sorted(b - a), sorted(a - b)
+            src_nodes[i] = lost[0] if lost else int(before[row, 0])
+            dst_nodes[i] = gained[0] if gained else int(after[row, 0])
+        plan = MigrationPlan(
+            v_from=v_from,
+            v_to=self.cluster.version,
+            ids=keys[rows],
+            src=src_nodes,
+            dst=dst_nodes,
+            index=rows.astype(np.int64),
+            n_scanned=int(keys.size),
+        )
+        live = LiveMigration.from_plan(
+            self.engine,
+            plan,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
+        self._migration = StoreMigration(
+            self, live, before[rows], after[rows], all_keys
+        )
+        return self._migration
+
     def add_node(self, node_id: int, capacity: float) -> int:
         """Add storage; migrate exactly the chunks the new node wins."""
-        all_keys: dict[int, bytes] = {}
-        for node in self.nodes.values():
-            all_keys.update(node.blobs)
+        self._check_no_migration()
+        all_keys = self._all_blobs()
         keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
-        device = self.engine.backend != "numpy"
-        if device and keys.size:
+        keys_dev = None
+        if self.engine.backend != "numpy" and keys.size:
             # Chain both placement sweeps on device; sync the rows once.
             import jax.numpy as jnp
 
             keys_dev = jnp.asarray(keys)
-            before_dev = self.replicas_for_device(keys_dev)
-            before = np.asarray(before_dev)
-        else:
-            before = (
-                self.replicas_for(keys)
-                if keys.size
-                else np.empty((0, self.n_replicas))
-            )
+        before = self._replica_rows(keys, keys_dev)
         self.cluster.add_node(node_id, capacity)
         self.nodes[node_id] = StorageNode(node_id, capacity)
         moved = 0
         if keys.size:
-            if device:
-                after = np.asarray(self.replicas_for_device(keys_dev))
-            else:
-                after = self.replicas_for(keys)
+            after = self._replica_rows(keys, keys_dev)
             for key, b_row, a_row in zip(keys, before, after):
                 if set(b_row.tolist()) == set(a_row.tolist()):
                     continue
@@ -198,6 +300,88 @@ class AsuraCheckpointStore:
                 for nid in set(int(x) for x in b_row) - a_set:
                     self.nodes[nid].blobs.pop(int(key), None)
         return moved
+
+
+class StoreMigration:
+    """A live storage rebalance: throttled blob copies + read-through.
+
+    Wraps a ``LiveMigration`` over the affected chunk keys.  Each round the
+    mover lands a budgeted batch of rows; for every newly landed row the
+    blob is copied to the v+1 replica nodes that lack it and the superseded
+    v copies are garbage-collected (capacity is reclaimed incrementally,
+    not at a final barrier).  ``read_row`` is ``get_chunk``'s window rule:
+    the v replica set while the row is pending, the v+1 set after, ``None``
+    for unaffected keys.
+    """
+
+    def __init__(self, store, live, before_rows, after_rows, blobs):
+        self.store = store
+        self.live = live
+        self._row_of = {int(k): i for i, k in enumerate(live.state.plan.ids)}
+        self._before = before_rows
+        self._after = after_rows
+        self._blobs = blobs  # key -> blob snapshot at plan time
+        self.copies_moved = 0
+
+    @property
+    def done(self) -> bool:
+        return self.live.done
+
+    def read_row(self, key: int):
+        row = self._row_of.get(key)
+        if row is None:
+            return None
+        if self.live.state.landed[row]:
+            return self._after[row]
+        return self._before[row]
+
+    def _land(self, rows: np.ndarray) -> None:
+        for row in rows:
+            key = int(self.live.state.plan.ids[row])
+            # Prefer the live copy (the chunk may have been overwritten
+            # mid-migration); the plan-time snapshot is the fallback.
+            blob = self._blobs[key]
+            for nid in self._before[row]:
+                node = self.store.nodes.get(int(nid))
+                if node is not None and node.alive and key in node.blobs:
+                    blob = node.blobs[key]
+                    break
+            new_set = {int(n) for n in self._after[row]}
+            for nid in sorted(new_set):
+                node = self.store.nodes.get(nid)  # tolerate removed nodes
+                if node is not None and node.alive and key not in node.blobs:
+                    node.put(key, blob)
+                    self.copies_moved += 1
+            # GC the superseded v copies ONLY once the v+1 set fully holds
+            # the chunk -- a destination that died or was removed
+            # mid-migration must not cost the surviving copies (repair
+            # reconciles it later).
+            if all(
+                nid in self.store.nodes and key in self.store.nodes[nid].blobs
+                for nid in new_set
+            ):
+                for nid in {int(n) for n in self._before[row]} - new_set:
+                    node = self.store.nodes.get(nid)
+                    if node is not None:
+                        node.blobs.pop(key, None)
+
+    def _advance(self, fn) -> list[dict[tuple[int, int], int]]:
+        pre = self.live.state.landed.copy()
+        matrices = fn()
+        self._land(np.nonzero(self.live.state.landed & ~pre)[0])
+        if self.done and self.store._migration is self:
+            self.store._migration = None  # detach: table v+1 is now total
+        return matrices
+
+    def round(self) -> dict[tuple[int, int], int]:
+        [matrix] = self._advance(lambda: [self.live.round()])
+        return matrix
+
+    def pump(self) -> list[dict[tuple[int, int], int]]:
+        return self._advance(self.live.pump)
+
+    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
+        return self._advance(lambda: self.live.run(max_rounds))
 
 
 class CheckpointManager:

@@ -185,6 +185,35 @@ class PlacementEngine:
             self._artifacts[art.version] = art
         return art
 
+    def artifact_for(self, version: int) -> TableArtifact:
+        """The table artifact of a SPECIFIC version (migration dual-serving).
+
+        The current version is built on demand; any other version must
+        still be in the LRU (a consumer that placed at that version keeps
+        it cached -- the flap/rollback pattern).  An evicted version cannot
+        be rebuilt (the cluster has moved on), so this raises ``KeyError``
+        rather than silently re-deriving the wrong table.
+        """
+        if version == self.cluster.version:
+            return self.artifact()
+        art = self._artifacts.get(version)
+        if art is None:
+            raise KeyError(
+                f"table version {version} not cached (LRU holds "
+                f"{list(self._artifacts)}); place at that version before "
+                "mutating, or raise cache_versions"
+            )
+        self._artifacts.move_to_end(version)
+        return art
+
+    def _device_artifact_for(self, version: int) -> TableArtifact:
+        """``artifact_for`` with device tables (same materialization)."""
+        art = self.artifact_for(version)
+        if not art.has_device_tables:
+            art = self._build_device_tables(art)
+            self._artifacts[art.version] = art
+        return art
+
     def invalidate(self) -> None:
         """Drop every cached artifact (next placement rebuilds)."""
         self._artifacts.clear()
@@ -242,6 +271,25 @@ class PlacementEngine:
         art = self.artifact()
         return art.node_of[self.place_replicas(datum_ids, n_replicas)]
 
+    # -- version-pinned placement (migration dual-version serving) -----------
+
+    def place_at(self, datum_ids, version: int) -> np.ndarray:
+        """Batch placement under a SPECIFIC cached table version -> int64
+        segments (tail-resolved, total).  Same results ``place`` gave while
+        that version was current -- the dual-version read rule's building
+        block (DESIGN.md section 8)."""
+        art = self.artifact_for(version)
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.backend == "numpy":
+            segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
+            return resolve_tail_np(ids, segs, art.len32, art.top_level)
+        return np.asarray(self.place_device_at(ids, version)).astype(np.int64)
+
+    def place_nodes_at(self, datum_ids, version: int) -> np.ndarray:
+        """Batch placement under a specific version -> int64 node ids."""
+        art = self.artifact_for(version)
+        return art.node_of[self.place_at(datum_ids, version)]
+
     # -- device-resident variants (zero host syncs) --------------------------
 
     def place_device(self, datum_ids):
@@ -295,6 +343,91 @@ class PlacementEngine:
             top_level=art.top_level,
             emit_nodes=True,
             **self._device_kwargs(),
+        )
+
+    def place_device_at(self, datum_ids, version: int):
+        """``place_device`` under a specific cached version (zero syncs)."""
+        from repro.kernels.ops import place_on_table_device
+
+        art = self._device_artifact_for(version)
+        return place_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.cum_hi_dev,
+            art.cum_lo_dev,
+            art.node_of_dev,
+            top_level=art.top_level,
+            **self._device_kwargs(),
+        )
+
+    def place_nodes_device_at(self, datum_ids, version: int):
+        """``place_nodes_device`` under a specific cached version."""
+        from repro.kernels.ops import place_nodes_on_table_device
+
+        art = self._device_artifact_for(version)
+        return place_nodes_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.cum_hi_dev,
+            art.cum_lo_dev,
+            art.node_of_dev,
+            top_level=art.top_level,
+            **self._device_kwargs(),
+        )
+
+    # -- migration planner primitives ----------------------------------------
+
+    def diff_nodes_device(self, datum_ids, v_from: int, v_to: int):
+        """Two-version placement diff -> (moved, src, dst) DEVICE arrays.
+
+        Places every id under the ``v_from`` and ``v_to`` table artifacts
+        (both must be in the LRU -- they are, during a migration window) in
+        one device pass: ``src``/``dst`` are int32 node ids under the two
+        versions and ``moved = src != dst``.  Zero host syncs -- the
+        streaming planner chains chunks of this in fixed device memory
+        (DESIGN.md section 8).
+        """
+        from repro.kernels.ops import diff_nodes_on_tables_device
+
+        art_a = self._device_artifact_for(v_from)
+        art_b = self._device_artifact_for(v_to)
+        return diff_nodes_on_tables_device(
+            datum_ids,
+            art_a.len32_dev,
+            art_a.cum_hi_dev,
+            art_a.cum_lo_dev,
+            art_a.node_of_dev,
+            art_b.len32_dev,
+            art_b.cum_hi_dev,
+            art_b.cum_lo_dev,
+            art_b.node_of_dev,
+            top_a=art_a.top_level,
+            top_b=art_b.top_level,
+            **self._device_kwargs(),
+        )
+
+    def addition_numbers_device(
+        self, datum_ids, version: int | None = None, n_replicas: int = 1
+    ):
+        """Device-resident section 2.D ADDITION NUMBERs -> int32 device array.
+
+        The planner's add-node prefilter: computed against the (cached)
+        ``version`` table (default: current).  -1 means "unknown, treat as
+        candidate" -- the exact-fallback lanes the NumPy batch resolves via
+        the scalar oracle would force a host sync here (see
+        ``addition_numbers_ref``)."""
+        from repro.kernels.ops import addition_numbers_on_table_device
+
+        if version is None:
+            version = self.cluster.version
+        art = self._device_artifact_for(version)
+        return addition_numbers_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.node_of_dev,
+            top_level=art.top_level,
+            n_replicas=n_replicas,
+            params=self.params,
         )
 
     def _device_kwargs(self) -> dict:

@@ -94,13 +94,12 @@ def _place_kernel(
     out_ref[...] = result
 
 
-def _place_fused_kernel(
-    ids_ref,
-    table_ref,
-    cum_hi_ref,
-    cum_lo_ref,
-    node_ref,
-    out_ref,
+def _place_total_tile(
+    ids,
+    table,
+    cum_hi,
+    cum_lo,
+    node_of,
     *,
     top_level: int,
     s_log2: int,
@@ -108,17 +107,12 @@ def _place_fused_kernel(
     n_segs: int,
     emit_nodes: bool,
 ):
-    """Fully device-resident placement: bounded draw loop + on-chip tail
-    resolution (the exact section 3.2 spec via ``resolve_tail_dev``, against
-    the precomputed u64-cumsum halves held in VMEM) + optionally the fused
-    seg->node gather, so the kernel's output is final -- no host fix-up, no
-    second device pass.  ``emit_nodes=False`` writes (total, >= 0) segment
-    numbers; ``emit_nodes=True`` writes node ids."""
-    ids = ids_ref[...]  # (rows, LANE) uint32
-    table = table_ref[...]  # (n_pad,) uint32
-    cum_hi = cum_hi_ref[...]  # (n_pad,) uint32: u64 cumsum high halves
-    cum_lo = cum_lo_ref[...]  # (n_pad,) uint32: u64 cumsum low halves
-    node_of = node_ref[...]  # (n_pad,) int32, -1 on holes/padding
+    """Total placement of one (rows, LANE) tile against one in-VMEM table.
+
+    The shared body of ``_place_fused_kernel`` and ``_diff_kernel``: bounded
+    masked draw loop, on-chip section 3.2 tail resolution, optional fused
+    seg->node gather.  Pure traced jnp so it can run twice (once per table
+    version) inside a single kernel invocation."""
     shape = ids.shape
 
     def cond(state):
@@ -143,7 +137,98 @@ def _place_fused_kernel(
     result = resolve_tail_dev(ids, result, cum_hi, cum_lo, top_level)
     if emit_nodes:
         result = jnp.take(node_of, result.reshape(-1), axis=0).reshape(shape)
-    out_ref[...] = result
+    return result
+
+
+def _place_fused_kernel(
+    ids_ref,
+    table_ref,
+    cum_hi_ref,
+    cum_lo_ref,
+    node_ref,
+    out_ref,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs: int,
+    emit_nodes: bool,
+):
+    """Fully device-resident placement: bounded draw loop + on-chip tail
+    resolution (the exact section 3.2 spec via ``resolve_tail_dev``, against
+    the precomputed u64-cumsum halves held in VMEM) + optionally the fused
+    seg->node gather, so the kernel's output is final -- no host fix-up, no
+    second device pass.  ``emit_nodes=False`` writes (total, >= 0) segment
+    numbers; ``emit_nodes=True`` writes node ids."""
+    out_ref[...] = _place_total_tile(
+        ids_ref[...],
+        table_ref[...],
+        cum_hi_ref[...],
+        cum_lo_ref[...],
+        node_ref[...],
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs,
+        emit_nodes=emit_nodes,
+    )
+
+
+def _diff_kernel(
+    ids_ref,
+    table_a_ref,
+    cum_hi_a_ref,
+    cum_lo_a_ref,
+    node_a_ref,
+    table_b_ref,
+    cum_hi_b_ref,
+    cum_lo_b_ref,
+    node_b_ref,
+    out_ref,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs_a: int,
+    n_segs_b: int,
+):
+    """Version-diff kernel (DESIGN.md section 8): place every id under TWO
+    table versions in one kernel pass.
+
+    Both tables (lengths, u64-cumsum halves, seg->node maps) sit in VMEM
+    side by side; each (rows, LANE) id tile runs the full bounded draw loop
+    + tail + node gather against table A, then -- with fresh counters, the
+    ASURA stream restarts per table -- against table B.  Output row 0 is the
+    node under A (v), row 1 the node under B (v+1): the migration planner's
+    ``(src, dst)`` with ``moved = src != dst`` derived outside.  One id
+    upload, one kernel launch, zero host syncs."""
+    ids = ids_ref[...]  # (rows, LANE) uint32
+    src = _place_total_tile(
+        ids,
+        table_a_ref[...],
+        cum_hi_a_ref[...],
+        cum_lo_a_ref[...],
+        node_a_ref[...],
+        top_level=top_a,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs_a,
+        emit_nodes=True,
+    )
+    dst = _place_total_tile(
+        ids,
+        table_b_ref[...],
+        cum_hi_b_ref[...],
+        cum_lo_b_ref[...],
+        node_b_ref[...],
+        top_level=top_b,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs_b,
+        emit_nodes=True,
+    )
+    out_ref[...] = jnp.stack([src, dst])
 
 
 def _place_replicas_kernel(
@@ -397,3 +482,93 @@ def place_fused_pallas(
         interpret=interpret,
     )(ids2, len32, cum_hi, cum_lo, node_of.astype(jnp.int32))
     return out.reshape(total)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "top_a",
+        "top_b",
+        "s_log2",
+        "max_draws",
+        "rows_per_block",
+        "interpret",
+    ),
+)
+def diff_nodes_pallas(
+    ids: jax.Array,
+    len32_a: jax.Array,
+    cum_hi_a: jax.Array,
+    cum_lo_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    cum_hi_b: jax.Array,
+    cum_lo_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dual-version placement via pl.pallas_call -> (2, total) int32 nodes.
+
+    Row 0 is each id's owner under table A (version v), row 1 under table B
+    (version v+1) -- the migration planner derives ``(moved, src, dst)``
+    from this.  Both tables must be lane-padded (ops.py pads); ids must be
+    a block multiple.  One kernel pass over the ids, both tables resident
+    in VMEM, zero host syncs.
+    """
+    n_segs_a = int(len32_a.shape[0])
+    n_segs_b = int(len32_b.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "ops.py must pad ids to a block multiple"
+    assert n_segs_a % LANE == 0 and n_segs_b % LANE == 0
+    assert cum_hi_a.shape[0] == n_segs_a and cum_lo_a.shape[0] == n_segs_a
+    assert cum_hi_b.shape[0] == n_segs_b and cum_lo_b.shape[0] == n_segs_b
+    assert node_a.shape[0] == n_segs_a and node_b.shape[0] == n_segs_b
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _diff_kernel,
+        top_a=top_a,
+        top_b=top_b,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs_a=n_segs_a,
+        n_segs_b=n_segs_b,
+    )
+    spec_a = pl.BlockSpec((n_segs_a,), lambda i: (0,))
+    spec_b = pl.BlockSpec((n_segs_b,), lambda i: (0,))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            spec_a,  # whole A table per block
+            spec_a,
+            spec_a,
+            spec_a,
+            spec_b,  # whole B table per block
+            spec_b,
+            spec_b,
+            spec_b,
+        ],
+        out_specs=pl.BlockSpec((2, rows_per_block, LANE), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, total // LANE, LANE), jnp.int32),
+        interpret=interpret,
+    )(
+        ids2,
+        len32_a,
+        cum_hi_a,
+        cum_lo_a,
+        node_a.astype(jnp.int32),
+        len32_b,
+        cum_hi_b,
+        cum_lo_b,
+        node_b.astype(jnp.int32),
+    )
+    return out.reshape(2, total)

@@ -40,11 +40,17 @@ from repro.core.asura import (
 from .asura_place import (
     DEFAULT_ROWS,
     LANE,
+    diff_nodes_pallas,
     place_fused_pallas,
     place_pallas,
     place_replicas_pallas,
 )
-from .ref import place_ref, place_replicas_ref, resolve_tail_dev
+from .ref import (
+    addition_numbers_ref,
+    place_ref,
+    place_replicas_ref,
+    resolve_tail_dev,
+)
 
 __all__ = [
     "table_prep",
@@ -55,6 +61,8 @@ __all__ = [
     "place_nodes_on_table_device",
     "place_replicas_on_table",
     "place_replicas_on_table_device",
+    "diff_nodes_on_tables_device",
+    "addition_numbers_on_table_device",
     "asura_place",
     "asura_place_nodes",
     "asura_place_replicas",
@@ -236,6 +244,157 @@ def place_on_table_device(
         s_log2=params.s_log2,
         max_draws=params.max_draws,
         emit_nodes=emit_nodes,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_a", "top_b", "s_log2", "max_draws")
+)
+def _diff_fused_ref(
+    ids: jax.Array,
+    len32_a: jax.Array,
+    cum_hi_a: jax.Array,
+    cum_lo_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    cum_hi_b: jax.Array,
+    cum_lo_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int,
+    max_draws: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """jnp-reference version diff: both placements + the compare in ONE jit
+    (no eager scalar ops escape to the host between the two sweeps)."""
+    src = _place_fused_ref(
+        ids, len32_a, cum_hi_a, cum_lo_a, node_a,
+        top_level=top_a, s_log2=s_log2, max_draws=max_draws, emit_nodes=True,
+    )
+    dst = _place_fused_ref(
+        ids, len32_b, cum_hi_b, cum_lo_b, node_b,
+        top_level=top_b, s_log2=s_log2, max_draws=max_draws, emit_nodes=True,
+    )
+    return src != dst, src, dst
+
+
+@jax.jit
+def _neq(src: jax.Array, dst: jax.Array) -> jax.Array:
+    """src != dst ON DEVICE (jitted so no eager dispatch can stage through
+    host scalars under a transfer guard)."""
+    return src != dst
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _split_diff(out: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """(2, padded) kernel output -> (src[:n], dst[:n]) ON DEVICE (an eager
+    row index would materialize its start index as a host scalar)."""
+    return out[0, :n], out[1, :n]
+
+
+def diff_nodes_on_tables_device(
+    datum_ids,
+    len32_a: jax.Array,
+    cum_hi_a: jax.Array,
+    cum_lo_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    cum_hi_b: jax.Array,
+    cum_lo_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Version diff against two prebuilt tables -> (moved, src, dst).
+
+    Places every id under table A (version v) and table B (version v+1) in
+    one device pass and emits the migration planner's triple: ``moved``
+    (bool, owner changed), ``src`` / ``dst`` (int32 node ids under v / v+1).
+    All three are DEVICE arrays and nothing round-trips through the host --
+    the planner's ``plan_stream`` chains chunks of this with zero syncs
+    (DESIGN.md section 8).
+    """
+    interpret = _default_interpret(interpret)
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if n == 0:
+        empty = jnp.zeros((0,), dtype=jnp.int32)
+        return jnp.zeros((0,), dtype=bool), empty, empty
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_ids(ids, block)
+        out = diff_nodes_pallas(
+            padded,
+            len32_a, cum_hi_a, cum_lo_a, node_a,
+            len32_b, cum_hi_b, cum_lo_b, node_b,
+            top_a=top_a,
+            top_b=top_b,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            rows_per_block=rows_per_block,
+            interpret=interpret,
+        )
+        src, dst = _split_diff(out, n)
+        return _neq(src, dst), src, dst
+    return _diff_fused_ref(
+        ids,
+        len32_a, cum_hi_a, cum_lo_a, node_a,
+        len32_b, cum_hi_b, cum_lo_b, node_b,
+        top_a=top_a,
+        top_b=top_b,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+    )
+
+
+def addition_numbers_on_table_device(
+    datum_ids,
+    len32: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    n_replicas: int = 1,
+    extra_levels: int | None = None,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> jax.Array:
+    """Device-resident ADDITION NUMBERs against a prebuilt table.
+
+    Runs the trace ``extra_levels`` generator levels ABOVE the entry level
+    (default: up to 4, capped by the 2**31 segment-space bound).  Extension
+    is how the scalar oracle handles the common "placed on the first draw,
+    no anterior number" case, and it is exact here too: by the section 2.B
+    invariance the extended stream only INSERTS numbers, every inserted
+    number is a miss (its value exceeds every segment), and numbers emitted
+    at level l lie in the disjoint range [2**(s+l-1), 2**(s+l)), so the
+    minimum unused anterior is unchanged when the unextended trace has one
+    and equals the minimally-extended scalar result when it does not.
+
+    -1 marks the remaining lanes (needs more extension than the static
+    budget, or non-convergence) -- checking on device would force a sync,
+    so callers treat -1 as "candidate", which keeps the prefilter sound.
+    Both engine backends route through the jitted jnp reference
+    (``addition_numbers_ref``); the trace is metadata work off the
+    placement hot path, so it has no Pallas variant.
+    """
+    if extra_levels is None:
+        extra_levels = max(0, min(4, 31 - params.s_log2 - top_level))
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    if ids.shape[0] == 0:
+        return jnp.zeros((0,), dtype=jnp.int32)
+    return addition_numbers_ref(
+        ids,
+        len32,
+        node_of,
+        top_level=top_level + extra_levels,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+        n_replicas=n_replicas,
     )
 
 

@@ -211,6 +211,73 @@ def place_ref(
 @functools.partial(
     jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "n_replicas")
 )
+def addition_numbers_ref(
+    ids: jax.Array,
+    len32: jax.Array,
+    node_of: jax.Array,
+    *,
+    top_level: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    n_replicas: int = 1,
+) -> jax.Array:
+    """Device-resident section 2.D ADDITION NUMBER -> (batch,) int32.
+
+    The migration planner's prefilter variant of
+    ``repro.core.asura.addition_numbers_batch``: every lane runs the bounded
+    replica trace on device, tracking the minimum *unused* anterior ASURA
+    number as an exact ``(k, frac32)`` lexicographic pair (no u64 needed, so
+    it runs on TPUs).  Where the NumPy batch falls back to the exact scalar
+    oracle (non-convergence, or the rare range-extension case where every
+    anterior number was used), this returns ``-1`` -- checking would force a
+    host sync.  ``-1`` means "unknown: treat as a candidate", which keeps
+    the AN <= f prefilter sound (DESIGN.md sections 7, 8); lanes with a
+    definite result are bit-identical to the NumPy batch (tested).
+    """
+    ids = ids.astype(jnp.uint32)
+    n_segs = len32.shape[0]
+    batch = ids.shape[0]
+    R = n_replicas
+    NO_K = jnp.int32(0x7FFFFFFF)  # above any reachable k (k < 2**(s+top))
+
+    def cond(state):
+        i, _, _, found, _, _ = state
+        return (i < max_draws * max(1, R)) & ~jnp.all(found >= R)
+
+    def body(state):
+        i, counters, nodes, found, min_k, min_f = state
+        k, f, counters = next_asura(ids, counters, top_level, s_log2)
+        k_safe = jnp.minimum(k, n_segs - 1)
+        hit = (k < n_segs) & (f < len32[k_safe])
+        node_k = node_of[k_safe]
+        dup = jnp.zeros((batch,), dtype=bool)
+        for r in range(R):
+            dup |= (nodes[r] >= 0) & (nodes[r] == node_k)
+        active = found < R
+        used = active & hit & ~dup
+        unused = active & ~used
+        better = unused & ((k < min_k) | ((k == min_k) & (f < min_f)))
+        min_k = jnp.where(better, k, min_k)
+        min_f = jnp.where(better, f, min_f)
+        nodes = jnp.stack(
+            [jnp.where(used & (found == r), node_k, nodes[r]) for r in range(R)]
+        )
+        return i + 1, counters, nodes, found + used.astype(jnp.int32), min_k, min_f
+
+    counters0 = jnp.zeros((top_level + 1, batch), dtype=jnp.uint32)
+    nodes0 = jnp.full((R, batch), -1, dtype=jnp.int32)
+    found0 = jnp.zeros((batch,), dtype=jnp.int32)
+    min_k0 = jnp.full((batch,), NO_K, dtype=jnp.int32)
+    min_f0 = jnp.zeros((batch,), dtype=jnp.uint32)
+    _, _, _, found, min_k, _ = jax.lax.while_loop(
+        cond, body, (0, counters0, nodes0, found0, min_k0, min_f0)
+    )
+    return jnp.where((found >= R) & (min_k != NO_K), min_k, jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "n_replicas")
+)
 def place_replicas_ref(
     ids: jax.Array,
     len32: jax.Array,

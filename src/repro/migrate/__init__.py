@@ -1,0 +1,33 @@
+"""Device-resident migration subsystem (DESIGN.md section 8).
+
+Three layers over one membership change v -> v+1:
+
+  1. ``MigrationPlanner``  -- streaming version-diff planner: places every
+     id under both cached table versions in one device pass (fused
+     dual-table kernel, ADDITION-NUMBER prefilter for add-node events) and
+     emits the minimal ``MigrationPlan``.
+  2. ``ThrottledMover``    -- drains the plan in rounds under per-node
+     ingress/egress budgets (simulated clock), maintaining the landed
+     bitmap in ``MigrationState`` and per-round movement matrices.
+  3. ``LiveMigration``     -- dual-version serving: routes every read to
+     the node that actually holds the datum mid-drain (v owner while the
+     move is pending, v+1 owner after it lands), host and device paths,
+     with free rollback of half-landed migrations.
+
+Consumers: ``runtime.elastic`` (live add/remove), ``runtime.failures``
+(failure -> throttled repair), ``serve.router`` (serve through a scale
+event), ``checkpoint.sharded`` (read-through blob migration).
+"""
+
+from .live import LiveMigration
+from .mover import MigrationState, ThrottledMover
+from .planner import DEFAULT_CHUNK, MigrationPlan, MigrationPlanner
+
+__all__ = [
+    "DEFAULT_CHUNK",
+    "LiveMigration",
+    "MigrationPlan",
+    "MigrationPlanner",
+    "MigrationState",
+    "ThrottledMover",
+]

@@ -1,0 +1,213 @@
+"""Migration layer 3: the dual-version serving window.
+
+While a plan drains, the system is BETWEEN versions: some data already
+sits at its v+1 owner, the rest still at its v owner.  ``LiveMigration``
+owns that window and gives readers one total rule (DESIGN.md section 8):
+
+    route(id) = v   owner  if id's move is still pending,
+                v+1 owner  otherwise (landed, or never had to move)
+
+Equivalently: route to the v+1 owner iff the id's move has landed.  The
+"pending" formulation is what makes ROLLBACK free: reversing a
+half-landed migration is just a new LiveMigration whose plan is the
+landed rows with src/dst swapped and v_from/v_to swapped -- unlanded
+rows of the original never moved, so under the reversed rule they fall
+into the "not in plan -> v_to(reverse) = v(original) owner" case, which
+is exactly where they physically are.
+
+Both versions' placements come from the engine's artifact LRU (no table
+re-upload during the window, no matter how often the router flaps) and
+``route_device`` keeps the whole rule on device: the fused dual-table
+diff kernel supplies both owners, a sorted-membership probe against the
+pending set supplies the landed bit, and one ``where`` merges them --
+zero host syncs after the per-round control-path update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .mover import MigrationState, ThrottledMover
+
+
+@functools.cache
+def _member_fn():
+    """Jitted sorted-set membership (lazy: no jax import on the host path)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def member(ids, sorted_pad, n):
+        pos = jnp.searchsorted(sorted_pad, ids.astype(jnp.uint32), side="left")
+        pos_c = jnp.minimum(pos, sorted_pad.shape[0] - 1)
+        return (pos < n) & (sorted_pad[pos_c] == ids)
+
+    return member
+
+
+class LiveMigration:
+    """One membership change served THROUGH its throttled drain.
+
+    Wraps the three layers: the assembled plan (in ``state.plan``), the
+    landed bitmap (``state``), and the budgeted scheduler (``mover``).
+    The cluster table is already at v+1 when this object exists; readers
+    must go through ``route``/``route_device`` until ``done``.
+    """
+
+    def __init__(self, engine, state: MigrationState, mover: ThrottledMover):
+        self.engine = engine
+        self.state = state
+        self.mover = mover
+        self.aborted = False
+
+    @classmethod
+    def from_plan(
+        cls,
+        engine,
+        plan,
+        *,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ) -> "LiveMigration":
+        """Assemble the standard state + throttled mover around a plan (the
+        one construction path every consumer shares)."""
+        state = MigrationState(plan)
+        mover = ThrottledMover(
+            state,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
+        return cls(engine, state, mover)
+
+    # -- window state ---------------------------------------------------------
+
+    @property
+    def v_from(self) -> int:
+        return self.state.plan.v_from
+
+    @property
+    def v_to(self) -> int:
+        return self.state.plan.v_to
+
+    @property
+    def done(self) -> bool:
+        return self.state.done
+
+    def _check_live(self) -> None:
+        if self.aborted:
+            raise RuntimeError("migration was rolled back; drive the reverse one")
+
+    # -- dual-version read rule ----------------------------------------------
+
+    def route(self, datum_ids) -> np.ndarray:
+        """ids -> the node that HOLDS each datum right now (host path).
+
+        Only the (typically shrinking) pending subset pays the second
+        placement under v; everything else is one placement under v+1.
+        """
+        self._check_live()
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        owner = self.engine.place_nodes_at(ids, self.v_to)
+        pending = self.state.is_pending(ids)
+        if pending.any():
+            owner[pending] = self.engine.place_nodes_at(
+                ids[pending], self.v_from
+            )
+        return owner
+
+    def route_device(self, datum_ids):
+        """Device-resident read rule: int32 node ids, zero host syncs.
+
+        The pending-set device view is refreshed on the control path
+        (``round``/``pump`` mark rows landed; the first ``route_device``
+        after that pays the one upload) -- call once outside any transfer
+        guard after each round, then serve freely."""
+        self._check_live()
+        import jax.numpy as jnp
+
+        _, src, dst = self.engine.diff_nodes_device(
+            datum_ids, self.v_from, self.v_to
+        )
+        sorted_pad, n = self.state.pending_device()
+        pending = _member_fn()(jnp.asarray(datum_ids), sorted_pad, n)
+        return jnp.where(pending, src, dst)
+
+    # -- drain control --------------------------------------------------------
+
+    def round(self) -> dict[tuple[int, int], int]:
+        """One throttled round; returns its (src, dst) movement matrix."""
+        self._check_live()
+        return self.mover.round()
+
+    def pump(self) -> list[dict[tuple[int, int], int]]:
+        """Clock-driven advance (see ``ThrottledMover.pump``)."""
+        self._check_live()
+        return self.mover.pump()
+
+    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
+        self._check_live()
+        return self.mover.run(max_rounds)
+
+    # -- rollback -------------------------------------------------------------
+
+    def rollback(self) -> "LiveMigration":
+        """Reverse a half-landed migration; returns the reverse migration.
+
+        The reverse plan is the LANDED rows with src/dst and v_from/v_to
+        swapped (unlanded rows never moved -- nothing to reverse).  This
+        object becomes inert; drive and route through the returned one.
+        Budgets swap roles with the flow direction: the forward drain's
+        per-node ingress caps bind the reverse drain's egress and vice
+        versa, so the node the throttle was protecting stays protected.
+        Both versions stay in the artifact LRU, so the flap re-uploads
+        nothing.  Once the reverse drain completes, all data is back at
+        its v owner and the caller may revert the membership change
+        itself (e.g. ``cluster.remove_node`` of the just-added node) --
+        segment correspondences never change (paper rule 2), so the
+        reverted table places identically to v.  Consumers that maintain
+        side state per owner should roll it back too
+        (``ElasticCoordinator.rollback_live`` does).
+        """
+        self._check_live()
+        if getattr(self, "membership_event", None) is not None and not getattr(
+            self, "_coordinator_rollback", False
+        ):
+            # A coordinator-owned migration carries side state (owner table,
+            # membership) that a bare reversal would silently desync.
+            raise RuntimeError(
+                "this migration belongs to an ElasticCoordinator; use "
+                "coordinator.rollback_live(migration)"
+            )
+        from .planner import MigrationPlan
+
+        plan, landed = self.state.plan, self.state.landed
+        reverse_plan = MigrationPlan(
+            v_from=plan.v_to,
+            v_to=plan.v_from,
+            ids=plan.ids[landed],
+            src=plan.dst[landed],
+            dst=plan.src[landed],
+            index=plan.index[landed],
+            n_scanned=plan.n_scanned,
+        )
+        self.aborted = True
+        mover = self.mover
+        reverse = LiveMigration.from_plan(
+            self.engine,
+            reverse_plan,
+            egress=mover.ingress,  # reversed flows: receive caps now bind sends
+            ingress=mover.egress,
+            clock=mover.clock,
+            round_seconds=mover.round_seconds,
+        )
+        tracked = getattr(self, "tracked_rows", None)
+        if tracked is not None:
+            # consumer side-state mapping rides along (plan rows = landed)
+            reverse.tracked_rows = tracked[landed]
+        return reverse

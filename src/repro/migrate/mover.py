@@ -1,0 +1,276 @@
+"""Migration layer 2: the bandwidth-throttled mover.
+
+Draining a ``MigrationPlan`` all at once would saturate the cluster
+network exactly when it is already degraded (the scenario Sequential
+Checking, arXiv:1707.00904, and the mean-field repair analysis,
+arXiv:1701.00335, treat as the scarce resource).  The mover drains the
+plan in ROUNDS under per-node ingress/egress budgets:
+
+  * ``MigrationState`` -- the plan plus a landed bitmap (which moves have
+    physically completed) and a device view of the still-pending id set
+    for the dual-version read rule (``live.py``),
+  * ``ThrottledMover``  -- each round picks pending rows in plan order,
+    admitting a row only while both its source's egress budget and its
+    destination's ingress budget have headroom, and returns the round's
+    per-(src, dst) movement matrix.  The clock is injected (simulated,
+    like ``runtime/failures.py``) so ``pump()`` advances exactly the
+    rounds the wall time allows and tests stay deterministic.
+
+Budget admission is conservative: ranks are computed per src group and
+per dst group up front (vectorized), and a row is admitted iff BOTH ranks
+are within budget -- a row blocked on one side may leave a slot of the
+other side unused for a round, but neither budget is ever exceeded.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import numpy as np
+
+from .planner import MigrationPlan
+
+
+def _group_ranks(keys: np.ndarray) -> np.ndarray:
+    """Rank of each element within its value group, preserving order.
+
+    ``keys = [7, 3, 7, 7, 2]`` -> ``[0, 0, 1, 2, 0]``: the cumcount the
+    budget admission is defined on (see ``_GroupIndex`` for the per-round
+    sort-free evaluation).
+    """
+    if keys.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    return _GroupIndex(keys).ranks(np.ones(len(keys), dtype=bool))
+
+
+class _GroupIndex:
+    """Per-round group-rank evaluation without per-round sorting.
+
+    The plan's row order never changes -- only the pending mask does -- so
+    the stable sort by node and the group boundaries are computed ONCE;
+    each round the rank of every pending row within its group's pending
+    rows is a segmented cumsum over the precomputed order: O(n) arithmetic,
+    no sort, and bit-identical to ranking the compacted pending set.
+    """
+
+    def __init__(self, keys: np.ndarray):
+        self.order = np.argsort(keys, kind="stable")
+        sorted_keys = keys[self.order]
+        self.is_start = np.empty(len(keys), dtype=bool)
+        if len(keys):
+            self.is_start[0] = True
+            np.not_equal(sorted_keys[1:], sorted_keys[:-1], out=self.is_start[1:])
+
+    def ranks(self, flags: np.ndarray) -> np.ndarray:
+        """Rank of each row among the FLAGGED rows of its group (row order);
+        meaningful only where ``flags`` is True."""
+        if flags.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        f = flags[self.order].astype(np.int64)
+        cum = np.cumsum(f)
+        before = cum - f  # flagged rows anywhere before this position
+        base = np.maximum.accumulate(np.where(self.is_start, before, 0))
+        ranks = np.empty(len(f), dtype=np.int64)
+        ranks[self.order] = before - base
+        return ranks
+
+
+def _budget_of(budget, nodes: np.ndarray) -> np.ndarray:
+    """Per-row budget array from None (unlimited), a scalar, or a dict.
+
+    The dict path pays one Python lookup per DISTINCT node, not per
+    pending row -- rounds over multi-million-row plans stay NumPy-bound.
+    """
+    no_limit = np.iinfo(np.int64).max
+    if budget is None:
+        return np.full(len(nodes), no_limit, dtype=np.int64)
+    if isinstance(budget, dict):
+        uniq, inverse = np.unique(nodes, return_inverse=True)
+        caps = np.array(
+            [budget.get(int(n), no_limit) for n in uniq], dtype=np.int64
+        )
+        return caps[inverse]
+    return np.full(len(nodes), int(budget), dtype=np.int64)
+
+
+class MigrationState:
+    """A plan plus its landed bitmap -- the single source of truth for the
+    dual-version read rule.
+
+    ``landed[i]`` flips True when row i's datum has physically arrived at
+    ``dst[i]`` (and left ``src[i]``); until then readers must be routed to
+    the v owner.  ``pending_device()`` exposes the still-pending id set as
+    a sorted, sentinel-padded device array so the serving hot path tests
+    membership with zero host syncs (padding to the next power of two
+    bounds recompiles at O(log n) distinct shapes).
+    """
+
+    _SENTINEL = np.uint32(0xFFFFFFFF)
+
+    def __init__(self, plan: MigrationPlan):
+        self.plan = plan
+        self.landed = np.zeros(plan.n_moves, dtype=bool)
+        self._sorted_pending = None  # host cache for the serving hot path
+        self._dev_view = None  # (padded sorted pending ids, count) device pair
+
+    # -- host views ----------------------------------------------------------
+
+    @property
+    def n_pending(self) -> int:
+        return int((~self.landed).sum())
+
+    @property
+    def done(self) -> bool:
+        return self.n_pending == 0
+
+    def pending_ids(self) -> np.ndarray:
+        return self.plan.ids[~self.landed]
+
+    def landed_ids(self) -> np.ndarray:
+        return self.plan.ids[self.landed]
+
+    def is_pending(self, datum_ids) -> np.ndarray:
+        """Vectorized membership of ids in the still-pending move set.
+
+        Probes a sorted pending array cached per round (invalidated by
+        ``mark_landed``), so a serving read batch costs O(batch log
+        pending), not a fresh sort of the pending set per call."""
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self._sorted_pending is None:
+            self._sorted_pending = np.sort(self.pending_ids())
+        pending = self._sorted_pending
+        if pending.size == 0:
+            return np.zeros(ids.shape, dtype=bool)
+        pos = np.searchsorted(pending, ids)
+        return (pos < pending.size) & (pending[np.minimum(pos, pending.size - 1)] == ids)
+
+    def mark_landed(self, rows: np.ndarray) -> None:
+        """Flip plan rows to landed (the mover calls this per round)."""
+        self.landed[rows] = True
+        self._sorted_pending = None  # host and device views are stale
+        self._dev_view = None
+
+    # -- device view ----------------------------------------------------------
+
+    def pending_device(self):
+        """(sorted_padded_ids, count) device pair for sync-free membership.
+
+        Rebuilt lazily after ``mark_landed`` -- ONE upload per round on the
+        control path, so the serving path (``live.route_device``) stays
+        guarded-transfer clean.  Call this outside any transfer guard.
+        """
+        if self._dev_view is None:
+            import jax.numpy as jnp
+
+            pending = np.sort(self.pending_ids())
+            n = len(pending)
+            padded_len = max(1, 1 << (n - 1).bit_length()) if n else 1
+            padded = np.full(padded_len, self._SENTINEL, dtype=np.uint32)
+            padded[:n] = pending
+            self._dev_view = (jnp.asarray(padded), jnp.asarray(np.int32(n)))
+        return self._dev_view
+
+
+class ThrottledMover:
+    """Drains a ``MigrationState`` in budgeted rounds.
+
+    ``egress`` / ``ingress``: max rows a node may send / receive per round
+    -- ``None`` (unlimited), a scalar applied to every node, or a
+    ``{node_id: limit}`` dict (missing nodes unlimited).  ``clock`` is an
+    injected time source; ``pump()`` runs however many whole
+    ``round_seconds`` periods have elapsed since the last call, so a
+    simulated clock drives deterministic tests and a real clock drives a
+    real drain loop.
+    """
+
+    def __init__(
+        self,
+        state: MigrationState,
+        *,
+        egress=None,
+        ingress=None,
+        clock: Callable[[], float] | None = None,
+        round_seconds: float = 1.0,
+    ):
+        self.state = state
+        self.egress = egress
+        self.ingress = ingress
+        self.clock = clock
+        self.round_seconds = float(round_seconds)
+        self.rounds_done = 0
+        self._pumped = 0  # clock-paced rounds only (manual round()s excluded)
+        self.history: list[dict[tuple[int, int], int]] = []
+        self._t0 = clock() if clock is not None else 0.0
+        # Row order and budgets never change; precompute so each round is
+        # pure O(n) arithmetic (no sort, no Python per-row lookups).
+        self._by_src = _GroupIndex(state.plan.src)
+        self._by_dst = _GroupIndex(state.plan.dst)
+        self._cap_src = _budget_of(egress, state.plan.src)
+        self._cap_dst = _budget_of(ingress, state.plan.dst)
+
+    @property
+    def done(self) -> bool:
+        return self.state.done
+
+    def round(self) -> dict[tuple[int, int], int]:
+        """One throttled round -> the per-(src, dst) movement matrix."""
+        state = self.state
+        pending = ~state.landed
+        take = (
+            pending
+            & (self._by_src.ranks(pending) < self._cap_src)
+            & (self._by_dst.ranks(pending) < self._cap_dst)
+        )
+        moved_rows = np.nonzero(take)[0]
+        state.mark_landed(moved_rows)
+        matrix: dict[tuple[int, int], int] = {}
+        if moved_rows.size:
+            pairs, counts = np.unique(
+                np.stack([state.plan.src[take], state.plan.dst[take]], axis=1),
+                axis=0,
+                return_counts=True,
+            )
+            matrix = {
+                (int(s), int(d)): int(c) for (s, d), c in zip(pairs, counts)
+            }
+        self.rounds_done += 1
+        self.history.append(matrix)
+        return matrix
+
+    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
+        """Drain to completion; returns the per-round matrices."""
+        out = []
+        for _ in range(max_rounds):
+            if self.done:
+                break
+            out.append(self.round())
+        if not self.done:
+            raise RuntimeError(
+                f"mover did not drain within {max_rounds} rounds "
+                f"({self.state.n_pending} rows pending) -- zero budget?"
+            )
+        return out
+
+    def pump(self) -> list[dict[tuple[int, int], int]]:
+        """Run the rounds the injected clock says are due (0 if none).
+
+        Clock-paced rounds are accounted separately from manual ``round()``
+        calls, so mixing an eager kick-off round with ``pump()`` never
+        skips periods the clock has earned."""
+        if self.clock is None:
+            return [] if self.done else [self.round()]
+        due = int(math.floor((self.clock() - self._t0) / self.round_seconds))
+        out = []
+        while self._pumped < due and not self.done:
+            out.append(self.round())
+            self._pumped += 1
+        return out
+
+    def movement_matrix(self) -> dict[tuple[int, int], int]:
+        """Accumulated (src, dst) -> rows moved so far, across all rounds."""
+        total: dict[tuple[int, int], int] = {}
+        for matrix in self.history:
+            for pair, count in matrix.items():
+                total[pair] = total.get(pair, 0) + count
+        return total

@@ -1,0 +1,202 @@
+"""Migration layer 1: the streaming version-diff planner.
+
+A membership change turns cluster version v into v+1.  The planner answers
+"which data must move, from where, to where" by placing every tracked id
+under BOTH table versions (both artifacts coexist in the engine's LRU --
+DESIGN.md section 6) and diffing the owners:
+
+  * ``diff_device``   -- one chunk: (moved, src, dst) DEVICE arrays, zero
+                         host syncs (the fused dual-table kernel,
+                         ``kernels.ops.diff_nodes_on_tables_device``).
+  * ``plan_stream``   -- the streaming sweep: iterate id chunks through
+                         ``diff_device`` so tens of millions of ids are
+                         diffed in fixed device memory.  Yields device
+                          4-tuples and never touches the host (tested under
+                         a transfer guard).
+  * ``plan``          -- host-facing assembly into a ``MigrationPlan``
+                         (the moved rows only).  For the common add-node
+                         case, pass ``max_new_seg`` to enable the
+                         device-side ADDITION-NUMBER prefilter (section
+                         2.D): a cheap metadata sweep marks the candidate
+                         set and only candidates pay the full dual diff.
+
+ASURA's optimality theorems make the diff minimal by construction; the
+oracle tests re-verify against brute force (tests/test_migrate.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_CHUNK = 1 << 20  # ids per streaming chunk (fixed device memory)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """The moved rows of a two-version placement diff.
+
+    ``ids[i]`` must move from node ``src[i]`` (its v owner) to node
+    ``dst[i]`` (its v+1 owner); ``index[i]`` is the row's position in the
+    scanned id array (so callers can update per-id side tables without a
+    search).  Rows keep scan order.
+    """
+
+    v_from: int
+    v_to: int
+    ids: np.ndarray  # uint32, moved ids
+    src: np.ndarray  # int64, owner under v_from
+    dst: np.ndarray  # int64, owner under v_to
+    index: np.ndarray  # int64, positions in the scanned id array
+    n_scanned: int
+
+    @property
+    def n_moves(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def moved_fraction(self) -> float:
+        return self.n_moves / max(1, self.n_scanned)
+
+    def moves_dict(self) -> dict[int, tuple[int, int]]:
+        """datum id -> (src, dst), built from the vectorized arrays (no
+        per-candidate Python compare loop)."""
+        return dict(
+            zip(
+                self.ids.tolist(),
+                zip(self.src.tolist(), self.dst.tolist()),
+            )
+        )
+
+
+class MigrationPlanner:
+    """Version-diff planner bound to one ``PlacementEngine``.
+
+    Both versions' artifacts must be cached (place at v before mutating --
+    every engine consumer already does) or ``engine.artifact_for`` raises.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    # -- device streaming sweep ---------------------------------------------
+
+    def diff_device(self, datum_ids, v_from: int, v_to: int):
+        """One chunk -> (moved, src, dst) device arrays, zero host syncs."""
+        return self.engine.diff_nodes_device(datum_ids, v_from, v_to)
+
+    def plan_stream(self, id_chunks, v_from: int, v_to: int):
+        """Streaming sweep: yield ``(ids, moved, src, dst)`` per chunk.
+
+        ``id_chunks`` is any iterable of id arrays (device arrays keep the
+        whole sweep sync-free; NumPy chunks pay one upload each -- the
+        host-feeding pattern).  Device memory is bounded by the largest
+        chunk, not the id population.
+        """
+        for chunk in id_chunks:
+            moved, src, dst = self.diff_device(chunk, v_from, v_to)
+            yield chunk, moved, src, dst
+
+    @staticmethod
+    def chunked(ids: np.ndarray, chunk: int = DEFAULT_CHUNK):
+        """Host-side chunking helper for ``plan_stream``."""
+        for start in range(0, len(ids), chunk):
+            yield ids[start : start + chunk]
+
+    # -- host-facing plan assembly ------------------------------------------
+
+    def plan(
+        self,
+        datum_ids,
+        v_from: int,
+        v_to: int,
+        *,
+        chunk: int = DEFAULT_CHUNK,
+        max_new_seg: int | None = None,
+        known_src=None,
+    ) -> MigrationPlan:
+        """Assemble the full ``MigrationPlan`` for a tracked id set.
+
+        ``max_new_seg`` (the largest segment number the v -> v+1 change
+        assigned; add-node events know it) enables the ADDITION-NUMBER
+        prefilter: a device metadata sweep computes each id's AN against
+        the v table and only ids with AN <= max_new_seg (or AN unknown,
+        the sound fallback) pay the full dual-version diff -- the paper's
+        section 2.D fast path for the common scale-out event.
+
+        ``known_src`` (aligned with ``datum_ids``) supplies the v owners a
+        caller already maintains (``ElasticCoordinator``'s owner table), so
+        the host path places each id once, not twice.
+
+        On the numpy backend the diff runs on the vectorized host path
+        (same bit-identical placements, no jit warm-up) -- the engine's
+        usual backend contract.
+        """
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        host = self.engine.backend == "numpy"
+        if known_src is not None:
+            known_src = np.asarray(known_src, dtype=np.int64)
+        out_ids: list[np.ndarray] = []
+        out_src: list[np.ndarray] = []
+        out_dst: list[np.ndarray] = []
+        out_idx: list[np.ndarray] = []
+        for start in range(0, len(ids), chunk):
+            c = ids[start : start + chunk]
+            base = np.arange(start, start + len(c), dtype=np.int64)
+            if max_new_seg is not None:
+                keep = self._candidates(c, v_from, max_new_seg, host)
+                c, base = c[keep], base[keep]
+            if c.size == 0:
+                continue
+            if host:
+                src = (
+                    known_src[base]
+                    if known_src is not None
+                    else self.engine.place_nodes_at(c, v_from)
+                )
+                dst = self.engine.place_nodes_at(c, v_to)
+                moved = src != dst
+            else:
+                # Pad ragged (prefiltered) chunks to the next power of two
+                # so the jitted diff sees O(log chunk) distinct shapes, not
+                # one compile per candidate count.
+                n_c = len(c)
+                target = 1 << max(0, n_c - 1).bit_length()
+                cp = np.pad(c, (0, target - n_c)) if target != n_c else c
+                moved_d, src_d, dst_d = self.diff_device(cp, v_from, v_to)
+                moved = np.asarray(moved_d)[:n_c]
+                src = np.asarray(src_d)[:n_c].astype(np.int64)
+                dst = np.asarray(dst_d)[:n_c].astype(np.int64)
+            out_ids.append(c[moved])
+            out_src.append(src[moved])
+            out_dst.append(dst[moved])
+            out_idx.append(base[moved])
+        cat = lambda parts, dtype: (  # noqa: E731
+            np.concatenate(parts) if parts else np.zeros(0, dtype=dtype)
+        )
+        return MigrationPlan(
+            v_from=v_from,
+            v_to=v_to,
+            ids=cat(out_ids, np.uint32),
+            src=cat(out_src, np.int64),
+            dst=cat(out_dst, np.int64),
+            index=cat(out_idx, np.int64),
+            n_scanned=len(ids),
+        )
+
+    def _candidates(
+        self, chunk: np.ndarray, v_from: int, max_new_seg: int, host: bool
+    ) -> np.ndarray:
+        """AN <= max_new_seg prefilter mask (sound: unknown -> candidate)."""
+        if host:
+            from repro.core.asura import addition_numbers_batch
+
+            art = self.engine.artifact_for(v_from)
+            lengths = art.len32.astype(np.float64) / 2.0**32  # exact round-trip
+            an = addition_numbers_batch(
+                chunk, lengths, art.node_of, params=self.engine.params
+            )
+            return an <= max_new_seg
+        an = np.asarray(self.engine.addition_numbers_device(chunk, version=v_from))
+        return (an < 0) | (an <= max_new_seg)

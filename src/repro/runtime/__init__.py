@@ -1,11 +1,12 @@
 from .elastic import ElasticCoordinator, MovePlan
-from .failures import FailureDetector, HeartbeatTracker
+from .failures import FailureDetector, HeartbeatTracker, MigrationDriver
 from .straggler import StragglerMitigator
 
 __all__ = [
     "ElasticCoordinator",
     "FailureDetector",
     "HeartbeatTracker",
+    "MigrationDriver",
     "MovePlan",
     "StragglerMitigator",
 ]

@@ -14,6 +14,13 @@ Change detection uses the section 2.D metadata:
     segment number (the sound "<=" rule; the paper's "==" rule is exact only
     for full-length segment tables -- see DESIGN.md section 7 and
     tests/test_asura_properties.py::test_p5*), then verified by recompute.
+
+The recompute itself runs through the migration planner (DESIGN.md section
+8): candidates are diffed against the v and v+1 table artifacts in one
+vectorized sweep -- the ``MovePlan`` dict is built from the plan's moved
+arrays, not a per-candidate Python loop.  ``add_node_live`` /
+``remove_node_live`` return the same change as a ``LiveMigration``: a
+throttled, dual-version-served drain instead of an instantaneous swap.
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ import numpy as np
 
 from repro.core import Cluster
 from repro.core.asura import addition_numbers_batch, remove_numbers
+from repro.migrate import LiveMigration, MigrationPlan, MigrationPlanner
 
 
 @dataclasses.dataclass
@@ -41,9 +49,11 @@ class ElasticCoordinator:
     def __init__(self, cluster: Cluster, tracked_ids: np.ndarray):
         self.cluster = cluster
         self.engine = cluster.engine  # shared versioned table artifact
+        self.planner = MigrationPlanner(self.engine)
         self.tracked = np.asarray(tracked_ids, dtype=np.uint32)
         self._owners = self.engine.place_nodes(self.tracked)
         self._an: np.ndarray | None = None  # lazy ADDITION NUMBER cache
+        self._live_migration: LiveMigration | None = None  # in-flight drain
 
     # -- metadata ------------------------------------------------------------
 
@@ -59,39 +69,164 @@ class ElasticCoordinator:
 
     # -- events ---------------------------------------------------------------
 
-    def add_node(self, node_id: int, capacity: float) -> MovePlan:
-        """Grow the cluster; move only data captured by the new segments.
-
-        The AN <= f prefilter shrinks the recompute set; each candidate is
-        then verified by recomputing its placement (cheap, O(1))."""
-        an = self._addition_numbers()
-        owners_before = self._owners
-        new_segs = self.cluster.add_node(node_id, capacity)
-        max_seg = max(new_segs)
-        candidates = np.nonzero(an <= max_seg)[0]
-        moves: dict[int, tuple[int, int]] = {}
-        if candidates.size:
-            new_owner = self.engine.place_nodes(self.tracked[candidates])
-            for idx, owner in zip(candidates, new_owner):
-                if owner != owners_before[idx]:
-                    moves[int(self.tracked[idx])] = (int(owners_before[idx]), int(owner))
-                    self._owners[idx] = owner
+    def _apply(self, plan: MigrationPlan, rows: np.ndarray) -> MovePlan:
+        """Fold a planner diff over ``rows`` of the tracked set into the
+        owner table and a ``MovePlan`` (vectorized dict build)."""
+        self._owners[rows[plan.index]] = plan.dst
         self._an = None  # ANs shift once their segment is taken; recompute lazily
-        return MovePlan(moves)
+        return MovePlan(plan.moves_dict())
+
+    def _add_plan(self, node_id: int, capacity: float):
+        """Mutate the cluster; diff the AN-candidate rows -> (plan, rows).
+
+        The AN <= f prefilter shrinks the recompute set; the candidates
+        are then diffed in one planner sweep, with the cached owner table
+        supplying the v owners (one placement per candidate, not two)."""
+        an = self._addition_numbers()
+        self.engine.artifact()  # pin the v table in the LRU before mutating
+        v_from = self.cluster.version
+        new_segs = self.cluster.add_node(node_id, capacity)
+        rows = np.nonzero(an <= max(new_segs))[0]
+        plan = self.planner.plan(
+            self.tracked[rows],
+            v_from,
+            self.cluster.version,
+            known_src=self._owners[rows],
+        )
+        return plan, rows
+
+    def _remove_plan(self, node_id: int):
+        """Mutate the cluster; diff the victim's rows -> (plan, rows)."""
+        self.engine.artifact()
+        v_from = self.cluster.version
+        rows = np.nonzero(self._owners == node_id)[0]
+        self.cluster.remove_node(node_id)
+        plan = self.planner.plan(
+            self.tracked[rows],
+            v_from,
+            self.cluster.version,
+            known_src=self._owners[rows],
+        )
+        return plan, rows
+
+    def add_node(self, node_id: int, capacity: float) -> MovePlan:
+        """Grow the cluster; move only data captured by the new segments."""
+        self._check_no_live()
+        return self._apply(*self._add_plan(node_id, capacity))
 
     def remove_node(self, node_id: int) -> MovePlan:
         """Shrink the cluster; move exactly the data the victim held."""
-        owners_before = self._owners
-        victim_rows = np.nonzero(owners_before == node_id)[0]
-        self.cluster.remove_node(node_id)
-        moves: dict[int, tuple[int, int]] = {}
-        if victim_rows.size:
-            new_owner = self.engine.place_nodes(self.tracked[victim_rows])
-            for idx, owner in zip(victim_rows, new_owner):
-                moves[int(self.tracked[idx])] = (node_id, int(owner))
-                self._owners[idx] = owner
+        self._check_no_live()
+        return self._apply(*self._remove_plan(node_id))
+
+    # -- live (throttled, dual-version-served) events -------------------------
+
+    def _check_no_live(self) -> None:
+        """Dual-version read rules of OVERLAPPING migrations do not compose
+        (a second plan's src comes from the eagerly-advanced owner table,
+        not from where pending data physically sits) -- one drain at a
+        time, like the checkpoint store."""
+        live = self._live_migration
+        if live is not None and not (live.done or live.aborted):
+            raise RuntimeError(
+                "a live migration is already in flight; drain or roll it "
+                "back before the next membership event"
+            )
+
+    def _live(
+        self, plan: MigrationPlan, rows: np.ndarray, egress, ingress, clock,
+        round_seconds: float,
+    ) -> LiveMigration:
+        self._apply(plan, rows)  # owner table tracks the post-drain state
+        migration = LiveMigration.from_plan(
+            self.engine,
+            plan,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
+        # remembered so rollback_live can revert the owner table rows
+        migration.tracked_rows = rows[plan.index]
+        self._live_migration = migration
+        return migration
+
+    def add_node_live(
+        self,
+        node_id: int,
+        capacity: float,
+        *,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ) -> LiveMigration:
+        """Grow the cluster as a LIVE migration: the same minimal plan as
+        ``add_node``, drained under bandwidth budgets while reads are
+        served through the dual-version rule (route via the returned
+        migration until it is ``done``)."""
+        self._check_no_live()
+        plan, rows = self._add_plan(node_id, capacity)
+        migration = self._live(plan, rows, egress, ingress, clock, round_seconds)
+        migration.membership_event = ("add", node_id)
+        return migration
+
+    def remove_node_live(
+        self,
+        node_id: int,
+        *,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ) -> LiveMigration:
+        """Shrink the cluster as a live migration (planned drain / scale-in;
+        for a crashed node the drain degenerates to repair traffic -- the
+        source copies are gone, but the (src, dst) matrix still bounds the
+        per-node repair ingress)."""
+        self._check_no_live()
+        plan, rows = self._remove_plan(node_id)
+        migration = self._live(plan, rows, egress, ingress, clock, round_seconds)
+        migration.membership_event = ("remove", node_id)
+        return migration
+
+    def rollback_live(self, migration: LiveMigration) -> LiveMigration:
+        """Roll back one of THIS coordinator's live ADD migrations.
+
+        Beyond ``LiveMigration.rollback``: the owner-table rows the forward
+        migration eagerly advanced to v+1 are reverted to their v owners
+        (landed rows return via the reverse drain; unlanded rows never
+        left), and the membership change itself is reverted NOW -- removing
+        the just-added node frees exactly the segments it was assigned, so
+        the current table places bit-identically to v and every
+        non-migrating consumer immediately plans/routes against the truth.
+        The reverse drain keeps routing through the v/v+1 artifacts in the
+        LRU regardless.
+
+        Rolling back a REMOVAL is not an inverse operation but a fresh
+        scale-out (re-adding the node may be assigned different free
+        segments): use ``add_node``/``add_node_live`` instead.
+        """
+        # Fail BEFORE mutating: stale references (an earlier, already-drained
+        # migration) or foreign migrations must not touch cluster state.
+        if migration is not self._live_migration or migration.done:
+            raise ValueError(
+                "can only roll back this coordinator's in-flight migration"
+            )
+        migration._check_live()
+        event = getattr(migration, "membership_event", (None,))
+        if event[0] != "add":
+            raise ValueError(
+                "only add-node migrations roll back exactly; undo a removal "
+                "by re-adding the node (a regular add event)"
+            )
+        self._owners[migration.tracked_rows] = migration.state.plan.src
         self._an = None
-        return MovePlan(moves)
+        self.cluster.remove_node(event[1])
+        migration._coordinator_rollback = True  # bare rollback() is refused
+        reverse = migration.rollback()
+        self._live_migration = reverse  # the drain in flight is now the reverse
+        return reverse
 
     def remove_numbers_for(self, datum_id: int, n_replicas: int) -> list[int]:
         return remove_numbers(

@@ -4,6 +4,13 @@ A node that misses ``timeout`` of heartbeats is declared dead; the caller
 (launcher / coordinator) then drives the recovery path:
 ElasticCoordinator.remove_node -> checkpoint restore -> resume.  The clock is
 injected so tests are deterministic.
+
+``MigrationDriver`` is the live-migration wiring (DESIGN.md section 8): a
+detected failure starts a throttled repair ``LiveMigration`` instead of an
+instantaneous table swap, and the same injected clock that declared the
+node dead paces the repair rounds -- repair bandwidth is the scarce
+resource (arXiv:1701.00335), so recovery traffic is budgeted exactly like
+planned scale events.
 """
 
 from __future__ import annotations
@@ -41,3 +48,48 @@ class FailureDetector:
             self.handled.add(node)
             self.on_failure(node)
         return newly_dead
+
+
+class MigrationDriver:
+    """Failure -> throttled repair migration (no instantaneous swap).
+
+    ``start_repair(node_id)`` must produce a ``LiveMigration`` (typically
+    ``ElasticCoordinator.remove_node_live`` with the same injected clock).
+    ``poll()`` detects deaths and queues their repairs; ``pump()`` advances
+    the in-flight repair by the rounds its clock says are due and retires
+    it when drained.  Repairs run ONE AT A TIME in death order -- the
+    dual-version read rules of overlapping migrations do not compose
+    (a second plan would source ids from mid-flight locations), and the
+    coordinator enforces the same single-drain rule.  While a repair is in
+    flight, readers route through its rule (``active`` exposes it).
+    """
+
+    def __init__(self, tracker: HeartbeatTracker, start_repair: Callable[[int], "object"]):
+        self.start_repair = start_repair
+        self.queued: list[int] = []  # victims awaiting their repair window
+        self.active: list = []  # at most one in-flight repair
+        self.completed: list = []
+        self._detector = FailureDetector(tracker, self._on_failure)
+
+    def _on_failure(self, node_id: int) -> None:
+        self.queued.append(node_id)
+        self._start_next()
+
+    def _start_next(self) -> None:
+        if not self.active and self.queued:
+            self.active.append(self.start_repair(self.queued.pop(0)))
+
+    def poll(self) -> list[int]:
+        """Detect new deaths; queue one repair migration per victim."""
+        return self._detector.poll()
+
+    def pump(self) -> list[dict[tuple[int, int], int]]:
+        """Advance the in-flight repair; returns the rounds' matrices."""
+        matrices: list[dict[tuple[int, int], int]] = []
+        for migration in list(self.active):
+            matrices.extend(migration.pump())
+            if migration.done:
+                self.active.remove(migration)
+                self.completed.append(migration)
+        self._start_next()
+        return matrices

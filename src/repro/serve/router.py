@@ -44,6 +44,7 @@ class ReplicaRouter:
         for rid, cap in replica_capacities.items():
             self.cluster.add_node(rid, cap)
         self.engine = self.cluster.engine
+        self._scale_migration = None  # at most one live window at a time
 
     def route(self, session_ids) -> np.ndarray:
         """session ids -> replica ids (vectorized, table-local)."""
@@ -93,6 +94,72 @@ class ReplicaRouter:
         return ScalePlan(
             {int(ids[i]): (int(before[i]), int(after[i])) for i in moved}
         )
+
+    # -- migration-window serving (DESIGN.md section 8) ----------------------
+
+    def begin_scale_migration(
+        self,
+        session_ids,
+        *,
+        add=None,
+        remove=None,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ):
+        """Apply a membership change as a LIVE migration.
+
+        Instead of an instantaneous table swap, the minimal session moves
+        (session cache re-prefills) drain under per-replica ingress/egress
+        budgets while ``route_migrating`` keeps every request on a replica
+        whose cache is actually warm: the v owner until the session's
+        re-prefill lands, the v+1 owner after.  The add-node case uses the
+        ADDITION-NUMBER device prefilter, so only AN-candidates pay the
+        dual-version diff.  Returns a ``LiveMigration``.
+        """
+        from repro.migrate import LiveMigration, MigrationPlanner
+
+        live = self._scale_migration
+        if live is not None and not (live.done or live.aborted):
+            # overlapping windows' read rules do not compose (section 8.3)
+            raise RuntimeError(
+                "a scale migration is already in flight; drain it first"
+            )
+        ids = np.asarray(session_ids, dtype=np.uint32)
+        self.engine.artifact()  # pin the v table in the LRU before mutating
+        v_from = self.cluster.version
+        max_new_seg = None
+        if remove is not None:
+            self.cluster.remove_node(remove)
+        if add is not None:
+            rid, cap = add
+            new_segs = self.cluster.add_node(rid, cap)
+            if remove is None:
+                max_new_seg = max(new_segs)
+        plan = MigrationPlanner(self.engine).plan(
+            ids, v_from, self.cluster.version, max_new_seg=max_new_seg
+        )
+        self._scale_migration = LiveMigration.from_plan(
+            self.engine,
+            plan,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
+        return self._scale_migration
+
+    def route_migrating(self, session_ids, migration) -> np.ndarray:
+        """Migration-window routing: each session goes to the replica that
+        holds its warm cache right now (v owner while its re-prefill is
+        pending, v+1 owner once landed)."""
+        return migration.route(np.asarray(session_ids, dtype=np.uint32))
+
+    def route_migrating_device(self, session_ids, migration):
+        """Device-resident migration-window routing (zero host syncs after
+        the per-round pending-set refresh)."""
+        return migration.route_device(session_ids)
 
     def table_blob(self) -> str:
         """The only state frontends need to share (kilobytes)."""

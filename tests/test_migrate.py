@@ -1,0 +1,687 @@
+"""ISSUE-3 coverage: the device-resident migration subsystem.
+
+  * planner vs the brute-force two-placement NumPy oracle -- bit-identical
+    (moved, src, dst) for add, remove and capacity-mix events at top_level
+    in {0, 5, 19}, on both device backends,
+  * a transfer-guard + np.asarray-tripwire proof that the streaming plan
+    sweep performs ZERO host syncs,
+  * the device ADDITION-NUMBER prefilter: exact where it reports a value,
+    sound (a superset of the true movers) always, and plan-preserving,
+  * the throttled mover: budgets never exceeded, full drain, per-round
+    movement matrices, simulated-clock pacing,
+  * dual-version routing under version flap: add a node, roll back
+    mid-migration -- both artifacts served from the engine's LRU with no
+    re-upload, and every id routes to a node that actually holds it at
+    every round,
+  * consumers: live elastic events match the atomic MovePlan, the failure
+    detector drives throttled repair, and the checkpoint store restores
+    bit-identically at every round of a live rebalance.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsuraCheckpointStore, CheckpointManager
+from repro.core import Cluster, PlacementEngine, make_cluster, make_uniform_cluster
+from repro.core.asura import DEFAULT_PARAMS, addition_numbers_batch, place_batch
+from repro.migrate import (
+    MigrationPlan,
+    MigrationPlanner,
+    MigrationState,
+    ThrottledMover,
+)
+from repro.migrate.mover import _group_ranks
+from repro.runtime import ElasticCoordinator, HeartbeatTracker, MigrationDriver
+
+MIXED = [0.3, 1.7, 2.0, 0.9, 1.0, 0.5]
+
+
+class TableCluster:
+    """Duck-typed cluster with direct segment-table control.
+
+    The engine only needs ``version`` / ``params`` / ``seg_lengths()`` /
+    ``seg_to_node()``, so oracle tests can pin exact tables (and exact
+    top levels) without driving STEP-1 through thousands of node adds.
+    """
+
+    def __init__(self, lengths, node_of, params=DEFAULT_PARAMS):
+        self.params = params
+        self.version = 1
+        self._lengths = np.asarray(lengths, dtype=np.float64)
+        self._nodes = np.asarray(node_of, dtype=np.int64)
+
+    def seg_lengths(self):
+        return self._lengths.copy()
+
+    def seg_to_node(self):
+        return self._nodes.copy()
+
+    def mutate(self, lengths, node_of):
+        self._lengths = np.asarray(lengths, dtype=np.float64)
+        self._nodes = np.asarray(node_of, dtype=np.int64)
+        self.version += 1
+
+
+def _uniform_table(n_segs, node_per_seg=1):
+    lengths = np.full(n_segs, 0.9)
+    nodes = np.arange(n_segs) // node_per_seg
+    return lengths, nodes
+
+
+# Tables whose entry level is exactly the top we want (see
+# tests/test_device_path.py): top 19 needs upper in (2**19, 2**20].
+TOP_CASES = {
+    0: _uniform_table(2),
+    5: _uniform_table(60),
+    19: _uniform_table(600_000, node_per_seg=1024),
+}
+
+
+def _mutations(top_level):
+    """(name, lengths, node_of) variants of the base table at this top."""
+    lengths, nodes = TOP_CASES[top_level]
+    # add: a fresh node takes appended segments (and the freed hole if any)
+    add_l = np.concatenate([lengths, [0.9, 0.4]])
+    add_n = np.concatenate([nodes, [nodes.max() + 1] * 2])
+    # remove: zero out one node's segments (correspondences intact)
+    rm_l, rm_n = lengths.copy(), nodes.copy()
+    victim = nodes[len(nodes) // 2]
+    rm_l[nodes == victim] = 0.0
+    rm_n[nodes == victim] = -1
+    # capacity mix: a heterogeneous re-table (some shrunk, one grown)
+    mix_l, mix_n = lengths.copy(), nodes.copy()
+    mix_l[:: max(1, len(lengths) // 7)] = 0.31
+    mix_l = np.concatenate([mix_l, [0.77]])
+    mix_n = np.concatenate([mix_n, [nodes.max() + 2]])
+    return [("add", add_l, add_n), ("remove", rm_l, rm_n), ("mix", mix_l, mix_n)]
+
+
+def _oracle_nodes(ids, lengths, node_of):
+    return np.asarray(node_of)[place_batch(ids, lengths)]
+
+
+# ---------------------------------------------------------------------------
+# Planner == brute-force two-placement diff (the NumPy oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("top_level", sorted(TOP_CASES))
+def test_diff_matches_bruteforce_oracle(backend, top_level):
+    lengths, nodes = TOP_CASES[top_level]
+    n_ids = 256 if (backend == "pallas" and top_level == 19) else 1024
+    ids = (np.arange(n_ids, dtype=np.uint64) * 2654435761 % (2**32)).astype(
+        np.uint32
+    )
+    for name, new_l, new_n in _mutations(top_level):
+        cluster = TableCluster(lengths, nodes)
+        eng = PlacementEngine(cluster, backend=backend)
+        eng.artifact()
+        v_from = cluster.version
+        cluster.mutate(new_l, new_n)
+        moved, src, dst = eng.diff_nodes_device(ids, v_from, cluster.version)
+        want_src = _oracle_nodes(ids, lengths, nodes)
+        want_dst = _oracle_nodes(ids, new_l, new_n)
+        assert_allclose(np.asarray(src), want_src, atol=0, err_msg=name)
+        assert_allclose(np.asarray(dst), want_dst, atol=0, err_msg=name)
+        assert_allclose(
+            np.asarray(moved), want_src != want_dst, atol=0, err_msg=name
+        )
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref", "pallas"])
+def test_plan_matches_bruteforce_on_real_cluster(backend):
+    cluster = make_cluster(MIXED)
+    eng = PlacementEngine(cluster, backend=backend)
+    ids = np.arange(3000, dtype=np.uint32)
+    before = _oracle_nodes(ids, cluster.seg_lengths(), cluster.seg_to_node())
+    eng.artifact()
+    v_from = cluster.version
+    cluster.remove_node(2)
+    cluster.add_node(40, 1.1)
+    after = _oracle_nodes(ids, cluster.seg_lengths(), cluster.seg_to_node())
+    plan = MigrationPlanner(eng).plan(ids, v_from, cluster.version)
+    moved = np.nonzero(before != after)[0]
+    assert np.array_equal(plan.index, moved)
+    assert np.array_equal(plan.ids, ids[moved])
+    assert np.array_equal(plan.src, before[moved])
+    assert np.array_equal(plan.dst, after[moved])
+    assert plan.n_scanned == len(ids)
+
+
+def test_plan_chunking_is_invisible():
+    cluster = make_cluster(MIXED)
+    eng = PlacementEngine(cluster, backend="ref")
+    ids = np.arange(5000, dtype=np.uint32)
+    eng.artifact()
+    v_from = cluster.version
+    cluster.add_node(7, 0.8)
+    planner = MigrationPlanner(eng)
+    whole = planner.plan(ids, v_from, cluster.version)
+    chunked = planner.plan(ids, v_from, cluster.version, chunk=701)
+    assert np.array_equal(whole.ids, chunked.ids)
+    assert np.array_equal(whole.src, chunked.src)
+    assert np.array_equal(whole.dst, chunked.dst)
+    assert np.array_equal(whole.index, chunked.index)
+
+
+# ---------------------------------------------------------------------------
+# Zero host syncs in the streaming sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_plan_stream_zero_host_transfers(backend, monkeypatch):
+    """The chunked plan sweep must never touch the host: device-resident id
+    chunks in, device (moved, src, dst) out, under a transfer guard with an
+    np.asarray tripwire (the CPU-backend guard cannot see device->host
+    reads)."""
+    cluster = make_cluster(MIXED)
+    eng = PlacementEngine(cluster, backend=backend)
+    eng.artifact()
+    v_from = cluster.version
+    cluster.add_node(9, 1.2)
+    v_to = cluster.version
+    planner = MigrationPlanner(eng)
+    chunks = [jnp.arange(s, s + 1024, dtype=jnp.uint32) for s in (0, 1024, 2048)]
+    # warm-up: artifact device tables + jit compile
+    for _, m, s, d in planner.plan_stream(chunks, v_from, v_to):
+        m.block_until_ready()
+    uploads = eng.uploads
+
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        for _, moved, src, dst in planner.plan_stream(chunks, v_from, v_to):
+            moved.block_until_ready()
+            src.block_until_ready()
+            dst.block_until_ready()
+    monkeypatch.undo()
+    assert isinstance(src, jax.Array) and isinstance(dst, jax.Array)
+    assert not host_reads, f"plan sweep touched the host: {len(host_reads)} reads"
+    assert eng.uploads == uploads == 2  # one per version, ever
+
+
+# ---------------------------------------------------------------------------
+# Device ADDITION-NUMBER prefilter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_addition_numbers_device_exact_where_known(backend):
+    cluster = make_cluster(MIXED)
+    eng = PlacementEngine(cluster, backend=backend)
+    ids = np.arange(1500, dtype=np.uint32)
+    art = eng.artifact()
+    want = addition_numbers_batch(ids, cluster.seg_lengths(), art.node_of)
+    got = np.asarray(eng.addition_numbers_device(ids))
+    known = got >= 0
+    # the level-extended trace resolves the vast majority of lanes exactly
+    assert known.mean() > 0.9
+    assert np.array_equal(got[known], want[known])
+
+
+def test_prefilter_is_sound_and_plan_preserving():
+    cluster = make_uniform_cluster(8)
+    eng = PlacementEngine(cluster, backend="ref")
+    ids = np.arange(4000, dtype=np.uint32)
+    before = eng.place_nodes(ids)
+    v_from = cluster.version
+    new_segs = cluster.add_node(50, 1.0)
+    after = eng.place_nodes(ids)
+    planner = MigrationPlanner(eng)
+    full = planner.plan(ids, v_from, cluster.version)
+    pre = planner.plan(ids, v_from, cluster.version, max_new_seg=max(new_segs))
+    # bit-identical plan through the prefilter
+    assert np.array_equal(full.ids, pre.ids)
+    assert np.array_equal(full.src, pre.src)
+    assert np.array_equal(full.dst, pre.dst)
+    assert np.array_equal(full.index, pre.index)
+    # and the candidate mask really covered every mover
+    moved = before != after
+    an = np.asarray(eng.addition_numbers_device(ids, version=v_from))
+    cand = (an < 0) | (an <= max(new_segs))
+    assert np.all(cand[moved])
+
+
+# ---------------------------------------------------------------------------
+# Throttled mover
+# ---------------------------------------------------------------------------
+
+
+def _toy_plan(n=200, n_nodes=5, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n).astype(np.int64)
+    dst = (src + rng.integers(1, n_nodes, n)) % n_nodes
+    return MigrationPlan(
+        v_from=1,
+        v_to=2,
+        ids=np.arange(n, dtype=np.uint32),
+        src=src,
+        dst=dst.astype(np.int64),
+        index=np.arange(n, dtype=np.int64),
+        n_scanned=n,
+    )
+
+
+def test_group_ranks():
+    ranks = _group_ranks(np.array([7, 3, 7, 7, 3]))
+    assert ranks.tolist() == [0, 0, 1, 2, 1]
+    assert _group_ranks(np.array([], dtype=np.int64)).size == 0
+
+
+def test_mover_respects_budgets_and_drains():
+    plan = _toy_plan(n=300)
+    state = MigrationState(plan)
+    mover = ThrottledMover(state, egress=7, ingress=11)
+    total = 0
+    while not mover.done:
+        before = state.landed.copy()
+        matrix = mover.round()
+        rows = np.nonzero(state.landed & ~before)[0]
+        egress_used: dict[int, int] = {}
+        ingress_used: dict[int, int] = {}
+        for r in rows:
+            egress_used[int(plan.src[r])] = egress_used.get(int(plan.src[r]), 0) + 1
+            ingress_used[int(plan.dst[r])] = ingress_used.get(int(plan.dst[r]), 0) + 1
+        assert all(v <= 7 for v in egress_used.values())
+        assert all(v <= 11 for v in ingress_used.values())
+        assert sum(matrix.values()) == len(rows)
+        total += len(rows)
+        assert mover.rounds_done < 1000
+    assert total == plan.n_moves
+    assert sum(mover.movement_matrix().values()) == plan.n_moves
+
+
+def test_mover_per_node_budget_dict():
+    plan = _toy_plan(n=120, n_nodes=3)
+    state = MigrationState(plan)
+    mover = ThrottledMover(state, egress={0: 1, 1: 5}, ingress=None)
+    matrix = mover.round()
+    from_0 = sum(c for (s, _), c in matrix.items() if s == 0)
+    from_1 = sum(c for (s, _), c in matrix.items() if s == 1)
+    from_2 = sum(c for (s, _), c in matrix.items() if s == 2)
+    assert from_0 <= 1 and from_1 <= 5
+    assert from_2 == int((plan.src == 2).sum())  # unlisted nodes unlimited
+
+
+def test_mover_clock_pacing():
+    plan = _toy_plan(n=50)
+    state = MigrationState(plan)
+    t = {"now": 0.0}
+    mover = ThrottledMover(
+        state, egress=2, ingress=2, clock=lambda: t["now"], round_seconds=1.0
+    )
+    assert mover.pump() == []  # no time elapsed, no rounds due
+    t["now"] = 3.5
+    assert len(mover.pump()) == 3  # exactly the three whole periods
+    t["now"] = 3.9
+    assert mover.pump() == []
+
+
+def test_unthrottled_mover_drains_in_one_round():
+    state = MigrationState(_toy_plan(n=64))
+    matrices = ThrottledMover(state).run()
+    assert len(matrices) == 1 and state.done
+
+
+def test_mover_pump_unaffected_by_manual_rounds():
+    """An eager manual round must not consume a clock-earned period."""
+    state = MigrationState(_toy_plan(n=60))
+    t = {"now": 0.0}
+    mover = ThrottledMover(
+        state, egress=1, ingress=None, clock=lambda: t["now"], round_seconds=1.0
+    )
+    mover.round()  # eager kick-off at t=0
+    t["now"] = 1.0
+    assert len(mover.pump()) == 1  # the clock's period still runs
+
+
+# ---------------------------------------------------------------------------
+# Dual-version routing under version flap (add -> rollback mid-migration)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref"])
+def test_migration_window_routing_and_rollback(backend):
+    """Every read routes to a node that actually holds the datum, at every
+    round, through an add-node migration rolled back at half-drain; both
+    table artifacts come from the engine's LRU with no re-upload."""
+    cluster = make_uniform_cluster(6)
+    eng = PlacementEngine(cluster, backend=backend)
+    cluster._engine = eng  # route the coordinator through this backend
+    ids = np.arange(3000, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    owners_v = eng.place_nodes(ids)
+    holdings = dict(zip(ids.tolist(), owners_v.tolist()))
+
+    mig = coord.add_node_live(6, 1.0, egress=20, ingress=None)
+    plan = mig.state.plan
+    assert plan.n_moves > 60
+    uploads = eng.uploads
+    assert uploads == 2  # v and v+1, nothing else
+
+    def land_and_check(m):
+        before = m.state.landed.copy()
+        m.round()
+        for r in np.nonzero(m.state.landed & ~before)[0]:
+            holdings[int(m.state.plan.ids[r])] = int(m.state.plan.dst[r])
+        want = np.array([holdings[int(i)] for i in ids])
+        got = m.route(ids)
+        assert np.array_equal(got, want)
+        got_dev = np.array(m.route_device(jnp.asarray(ids)))
+        assert np.array_equal(got_dev, want)
+
+    # drain half, checking the invariant each round
+    while mig.state.n_pending > plan.n_moves // 2:
+        land_and_check(mig)
+    assert not mig.done
+
+    # flap: roll back mid-migration (through the coordinator, which also
+    # reverts its owner table AND the membership change itself)
+    rev = coord.rollback_live(mig)
+    assert 6 not in cluster.nodes  # the added node is gone again
+    with pytest.raises(RuntimeError):
+        mig.round()
+    assert rev.state.plan.n_moves == int(mig.state.landed.sum())
+    # budgets swapped roles with the flow direction
+    assert rev.mover.ingress == 20 and rev.mover.egress is None
+    while not rev.done:
+        land_and_check(rev)
+
+    # all data is back at its v owner, served from the same two artifacts
+    assert np.array_equal(
+        np.array([holdings[int(i)] for i in ids]), owners_v
+    )
+    assert np.array_equal(rev.route(ids), owners_v)
+    assert np.array_equal(coord.owners(), owners_v)  # side state reverted
+    assert eng.uploads == uploads  # the flap re-materialized NOTHING
+
+    # the reverted table places bit-identically to v (one new artifact)
+    assert np.array_equal(eng.place_nodes(ids), owners_v)
+    assert np.array_equal(coord.owners(), owners_v)
+
+
+def test_coordinator_rejects_overlapping_migrations():
+    """Dual-version read rules of overlapping migrations do not compose:
+    the coordinator allows one drain at a time (live or atomic)."""
+    cluster = make_uniform_cluster(6)
+    ids = np.arange(800, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    mig = coord.add_node_live(6, 1.0, egress=10)
+    for fn in (
+        lambda: coord.add_node(7, 1.0),
+        lambda: coord.remove_node(0),
+        lambda: coord.add_node_live(7, 1.0),
+        lambda: coord.remove_node_live(0),
+    ):
+        with pytest.raises(RuntimeError):
+            fn()
+    mig.run()
+    coord.add_node(7, 1.0)  # drained: events flow again
+
+
+def test_driver_serializes_double_failure():
+    """Two deaths in one window: repairs run one at a time, in death order,
+    and both complete."""
+    cluster = make_uniform_cluster(6)
+    ids = np.arange(900, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    t = {"now": 0.0}
+    tracker = HeartbeatTracker(timeout=1.0, clock=lambda: t["now"])
+    for nid in range(6):
+        tracker.beat(nid)
+    driver = MigrationDriver(
+        tracker,
+        lambda node: coord.remove_node_live(
+            node, ingress=30, clock=lambda: t["now"], round_seconds=1.0
+        ),
+    )
+    t["now"] = 5.0
+    for nid in range(4):  # nodes 0-3 stay alive; 4 and 5 died at t=0
+        tracker.beat(nid)
+    t["now"] = 5.5
+    dead = driver.poll()
+    assert set(dead) == {4, 5}
+    # only ONE repair is in flight; the other victim is queued
+    assert len(driver.active) == 1 and driver.queued == [5]
+    for _ in range(400):
+        t["now"] += 1.0
+        driver.pump()
+        assert len(driver.active) <= 1
+        if not driver.active and not driver.queued:
+            break
+    # every repair the cluster could still absorb ran to completion
+    assert all(m.done for m in driver.completed)
+    assert np.array_equal(coord.owners(), cluster.place_nodes(ids))
+
+
+def test_rollback_live_rejects_removals_and_reverses():
+    cluster = make_uniform_cluster(5)
+    ids = np.arange(600, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    rm = coord.remove_node_live(2, egress=50)
+    with pytest.raises(ValueError):
+        coord.rollback_live(rm)  # un-remove is a fresh add event
+    rm.run()
+    done_add = coord.add_node_live(9, 1.0)
+    done_add.run()
+    with pytest.raises(ValueError):
+        coord.rollback_live(done_add)  # fully drained: that's a remove event
+    add = coord.add_node_live(11, 1.0, egress=5)
+    add.round()
+    assert not add.done  # budget keeps it mid-flight
+    with pytest.raises(RuntimeError):
+        add.rollback()  # bare rollback would desync the coordinator
+    rev = coord.rollback_live(add)
+    with pytest.raises(ValueError):
+        coord.rollback_live(rev)  # rolling back a rollback: also a fresh add
+    rev.run()
+    assert np.array_equal(coord.owners(), cluster.place_nodes(ids))
+
+
+def test_live_plan_equals_atomic_moveplan():
+    ids = np.arange(2500, dtype=np.uint32)
+    atomic = ElasticCoordinator(make_uniform_cluster(5), ids).add_node(5, 1.0)
+    live = ElasticCoordinator(make_uniform_cluster(5), ids).add_node_live(5, 1.0)
+    assert live.state.plan.moves_dict() == atomic.moves
+    live.run()
+    assert live.done
+
+
+def test_remove_node_live_and_owner_tracking():
+    cluster = make_uniform_cluster(6)
+    ids = np.arange(2000, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    mig = coord.remove_node_live(3, egress=None, ingress=25)
+    assert set(np.unique(mig.state.plan.src)) == {3}
+    mig.run()
+    assert np.array_equal(coord.owners(), cluster.place_nodes(ids))
+
+
+def test_failure_detector_drives_throttled_repair():
+    cluster = make_uniform_cluster(5)
+    ids = np.arange(1200, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids)
+    t = {"now": 0.0}
+    tracker = HeartbeatTracker(timeout=2.0, clock=lambda: t["now"])
+    for nid in range(5):
+        tracker.beat(nid)
+    driver = MigrationDriver(
+        tracker,
+        lambda node: coord.remove_node_live(
+            node, ingress=40, clock=lambda: t["now"], round_seconds=1.0
+        ),
+    )
+    t["now"] = 2.0
+    for nid in (0, 1, 2, 4):
+        tracker.beat(nid)
+    t["now"] = 3.5  # node 3 last seen at 0 -> dead; others at 2.0 -> alive
+    assert driver.poll() == [3]
+    assert len(driver.active) == 1
+    mig = driver.active[0]
+    while driver.active:
+        t["now"] += 1.0
+        for matrix in driver.pump():
+            for (src, _), _count in matrix.items():
+                assert src == 3
+    assert driver.completed == [mig] and mig.done
+    assert np.array_equal(coord.owners(), cluster.place_nodes(ids))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store: live rebalance with read-through
+# ---------------------------------------------------------------------------
+
+
+def test_store_live_add_node_restores_at_every_round():
+    store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=2)
+    mgr = CheckpointManager(store)
+    rng = np.random.default_rng(11)
+    tree = {  # ~24 MiB -> ~25 chunks, enough for a multi-round drain
+        "w": rng.standard_normal((2048, 2048)).astype(np.float32),
+        "m": rng.standard_normal((2048, 1024)).astype(np.float32),
+        "b": rng.standard_normal((33,)).astype(np.float32),
+    }
+    mgr.save(4, tree)
+    sm = store.begin_add_node(20, capacity=2.0, egress=None, ingress=3)
+    assert store._migration is sm and sm.live.state.plan.n_moves > 0
+    rounds = 0
+    while not sm.done:
+        matrix = sm.round()
+        assert sum(c for (_, d), c in matrix.items() if d == 20) <= 3
+        out = mgr.restore(4, tree)  # read-through at EVERY round
+        assert np.array_equal(out["w"], tree["w"])
+        assert np.array_equal(out["m"], tree["m"])
+        assert np.array_equal(out["b"], tree["b"])
+        rounds += 1
+        assert rounds < 1000
+    assert rounds > 1  # the budget actually forced multiple rounds
+    assert store._migration is None  # detached once drained
+    # final copies match what the atomic path would have produced
+    keys = np.fromiter(
+        {k for n in store.nodes.values() for k in n.blobs}, dtype=np.uint32
+    )
+    want = store.replicas_for(keys)
+    for key, row in zip(keys, want):
+        for nid in row:
+            assert int(key) in store.nodes[int(nid)].blobs
+    out = mgr.restore(4, tree)
+    assert np.array_equal(out["w"], tree["w"])
+
+
+def test_store_overwrite_mid_migration_reads_fresh():
+    """A chunk overwritten while its move is still pending must read back
+    the NEW blob (writes go through the same window rule as reads), both
+    before and after its copy lands."""
+    store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=2)
+    mgr = CheckpointManager(store)
+    rng = np.random.default_rng(3)
+    tree = {"w": rng.standard_normal((2048, 2048)).astype(np.float32)}
+    mgr.save(1, tree)
+    sm = store.begin_add_node(20, capacity=2.0, ingress=2)
+    plan = sm.live.state.plan
+    assert plan.n_moves > 2
+    sm.round()  # leave some rows pending
+    assert not sm.done
+    tree2 = {"w": rng.standard_normal((2048, 2048)).astype(np.float32)}
+    mgr.save(1, tree2)  # overwrite EVERY chunk mid-migration
+    out = mgr.restore(1, tree2)
+    assert np.array_equal(out["w"], tree2["w"])  # fresh while pending
+    sm.run()
+    out = mgr.restore(1, tree2)
+    assert np.array_equal(out["w"], tree2["w"])  # fresh after landing
+
+
+def test_prefilter_respects_cluster_params():
+    """The host-path AN prefilter must use the cluster's AsuraParams (the
+    paper's S=16 family here), not DEFAULT_PARAMS."""
+    from repro.core import make_cluster
+    from repro.core.asura import AsuraParams
+
+    params = AsuraParams(s_log2=4)
+    cluster = make_cluster([1.0] * 8, params=params)
+    eng = cluster.engine  # numpy backend -> host prefilter path
+    ids = np.arange(4000, dtype=np.uint32)
+    eng.artifact()
+    v_from = cluster.version
+    new_segs = cluster.add_node(50, 1.0)
+    planner = MigrationPlanner(eng)
+    full = planner.plan(ids, v_from, cluster.version)
+    pre = planner.plan(ids, v_from, cluster.version, max_new_seg=max(new_segs))
+    assert full.n_moves > 0
+    assert np.array_equal(full.ids, pre.ids)
+    assert np.array_equal(full.dst, pre.dst)
+
+
+def test_store_land_never_gcs_past_a_dead_destination():
+    """A destination node dying mid-migration must not cost the surviving
+    v copies: landing skips the GC until the v+1 set fully holds the chunk,
+    so every chunk stays readable through the degraded window."""
+    store = AsuraCheckpointStore({i: 1.0 for i in range(6)}, n_replicas=2)
+    mgr = CheckpointManager(store)
+    rng = np.random.default_rng(5)
+    tree = {"w": rng.standard_normal((2048, 2048)).astype(np.float32)}
+    mgr.save(9, tree)
+    sm = store.begin_add_node(20, capacity=2.0, ingress=2)
+    sm.round()
+    store.fail_node(20)  # the migration TARGET dies mid-drain
+    while not sm.done:
+        sm.round()
+    out = mgr.restore(9, tree)  # old copies survived; reads fall back
+    assert np.array_equal(out["w"], tree["w"])
+
+
+def test_store_rejects_membership_events_mid_migration():
+    store = AsuraCheckpointStore({i: 1.0 for i in range(4)}, n_replicas=2)
+    mgr = CheckpointManager(store)
+    rng = np.random.default_rng(1)
+    mgr.save(1, {"x": rng.standard_normal((2048, 1024)).astype(np.float32)})
+    sm = store.begin_add_node(9, 1.0, ingress=1)
+    for fn in (
+        lambda: store.begin_add_node(10, 1.0),
+        lambda: store.add_node(10, 1.0),
+        lambda: store.remove_node_and_repair(0),
+    ):
+        with pytest.raises(RuntimeError):
+            fn()
+    sm.run()
+    assert store.add_node(10, 1.0) >= 0  # drained: events flow again
+
+
+# ---------------------------------------------------------------------------
+# Engine artifact pinning
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_for_evicted_version_raises():
+    cluster = make_uniform_cluster(3)
+    eng = PlacementEngine(cluster, backend="numpy", cache_versions=2)
+    eng.artifact()
+    v0 = cluster.version
+    for i in range(3):  # push v0 out of the 2-deep LRU
+        cluster.add_node(10 + i, 1.0)
+        eng.artifact()
+    with pytest.raises(KeyError):
+        eng.artifact_for(v0)
+
+
+def test_place_at_matches_historic_placement():
+    cluster = make_cluster(MIXED)
+    eng = PlacementEngine(cluster, backend="numpy")
+    ids = np.arange(1000, dtype=np.uint32)
+    v0 = cluster.version
+    want = eng.place_nodes(ids)
+    cluster.add_node(30, 1.0)
+    assert not np.array_equal(eng.place_nodes(ids), want)  # table moved on
+    assert np.array_equal(eng.place_nodes_at(ids, v0), want)

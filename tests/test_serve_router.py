@@ -55,3 +55,32 @@ def test_my_sessions_partition():
     parts = [router.my_sessions(r, sessions) for r in range(4)]
     merged = np.sort(np.concatenate(parts))
     assert np.array_equal(merged, sessions)
+
+
+def test_scale_migration_serves_warm_caches_throughout():
+    """Live scale-out: every session stays on the replica whose cache is
+    warm (v owner until its re-prefill lands, v+1 after), and the final
+    routing equals the plain post-event table."""
+    sessions = np.arange(6_000, dtype=np.uint32)
+    router = ReplicaRouter({i: 1.0 for i in range(5)})
+    before = router.route(sessions)
+    mig = router.begin_scale_migration(sessions, add=(9, 1.0), ingress=100)
+    warm = dict(zip(sessions.tolist(), before.tolist()))
+    assert mig.state.plan.n_moves > 0
+    while not mig.done:
+        pre = mig.state.landed.copy()
+        mig.round()
+        for r in np.nonzero(mig.state.landed & ~pre)[0]:
+            warm[int(mig.state.plan.ids[r])] = int(mig.state.plan.dst[r])
+        got = router.route_migrating(sessions, mig)
+        assert np.array_equal(got, np.array([warm[int(s)] for s in sessions]))
+    assert np.array_equal(router.route_migrating(sessions, mig), router.route(sessions))
+
+
+def test_scale_migration_remove_only_moves_victims():
+    sessions = np.arange(4_000, dtype=np.uint32)
+    router = ReplicaRouter({i: 1.0 for i in range(5)})
+    mig = router.begin_scale_migration(sessions, remove=2, egress=None)
+    assert set(np.unique(mig.state.plan.src)) == {2}
+    mig.run()
+    assert not (router.route(sessions) == 2).any()
