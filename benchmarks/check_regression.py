@@ -1,0 +1,186 @@
+"""CI perf-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+The fast CI job reruns the quick benchmark suites and then calls
+
+    python -m benchmarks.check_regression --fresh-dir . \
+        --baseline-dir benchmarks/baselines
+
+which compares every entry the fresh run SHARES with a committed baseline
+snapshot and fails (exit 1) if any shared timing entry regressed by more
+than ``--threshold`` (default 25%).  Policy, driven by the entry's unit so
+the gate never misreads a metric's direction:
+
+  * lower-is-better units (``us_per_id``, ``us_per_call``, ``..._s``,
+    ``bytes``): regression = fresh > baseline * threshold,
+  * higher-is-better units (``ids_per_s``, ``..._per_s``, ``x_faster``):
+    regression = fresh < baseline / threshold,
+  * anything else (quality/count metrics like ``maxvar_pct`` or
+    ``must_be_0`` counters) is informational -- correctness is the test
+    suite's job, not a noisy perf gate's.
+
+If both payloads carry a machine-speed CALIBRATION entry (unit ending in
+``_calibration``, e.g. ``h2h_calibration`` -- a fixed integer workload
+timed in the same run), every timing comparison is normalized by the
+fresh/baseline calibration ratio: a runner that is 2x slower across the
+board is not a regression, and a runner that is 2x faster must not mask
+one.  The ratio is clamped to [1/8, 8] so a corrupt calibration cannot
+swallow the gate.
+
+New entries (in fresh but not in the baseline) and retired entries (in the
+baseline but not fresh) are WARN-only, so adding a benchmark never blocks a
+PR; refreshing the committed snapshot is how an intentional perf change
+lands.
+
+Only suites with a committed snapshot under ``benchmarks/baselines/`` are
+gated at all.  The snapshot set is deliberately curated: the head-to-head
+timings are designed for gate stability (fixed shapes, warm jit, best-of-3
+-- benchmarks/head_to_head.py), while micro-benchmarks like the fig5
+scalar/per-call entries are single-shot and too noisy for a 25% bar; those
+suites still upload their JSON as ungated trajectory artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 1.25
+
+LOWER_BETTER_UNITS = ("us_per_id", "us_per_call", "s", "elapsed_s", "bytes")
+HIGHER_BETTER_SUFFIXES = ("_per_s", "x_faster")
+
+
+def direction(unit: str) -> str:
+    """'lower' | 'higher' | 'skip' for a BENCH entry unit string."""
+    if unit.endswith("_calibration"):
+        return "skip"  # the yardstick itself is never gated
+    if unit in LOWER_BETTER_UNITS:
+        return "lower"
+    if unit.endswith(HIGHER_BETTER_SUFFIXES) or unit == "ids_per_s":
+        return "higher"
+    return "skip"
+
+
+def calibration_ratio(base_entries: dict, fresh_entries: dict) -> float:
+    """fresh/baseline machine-speed ratio (1.0 when either side lacks the
+    calibration entry), clamped to [1/8, 8]."""
+    for name, entry in base_entries.items():
+        if not str(entry.get("unit", "")).endswith("_calibration"):
+            continue
+        other = fresh_entries.get(name)
+        if other is None:
+            continue
+        try:
+            b, f = float(entry["value"]), float(other["value"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if b > 0 and f > 0:
+            return min(max(f / b, 1 / 8), 8.0)
+    return 1.0
+
+
+def compare_entries(
+    baseline: dict, fresh: dict, *, threshold: float = DEFAULT_THRESHOLD
+) -> tuple[list[str], list[str]]:
+    """Compare two BENCH payloads' ``entries`` -> (failures, warnings)."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    base_entries = baseline.get("entries", {})
+    fresh_entries = fresh.get("entries", {})
+    cal = calibration_ratio(base_entries, fresh_entries)
+    for name in sorted(set(fresh_entries) - set(base_entries)):
+        warnings.append(f"new entry (no baseline, not gated): {name}")
+    for name in sorted(set(base_entries) - set(fresh_entries)):
+        warnings.append(f"baseline entry missing from fresh run: {name}")
+    for name in sorted(set(base_entries) & set(fresh_entries)):
+        base = base_entries[name]
+        new = fresh_entries[name]
+        sense = direction(str(base.get("unit", "")))
+        if sense == "skip":
+            continue
+        try:
+            b, f = float(base["value"]), float(new["value"])
+        except (KeyError, TypeError, ValueError):
+            warnings.append(f"unreadable value for {name}; skipped")
+            continue
+        if b <= 0:
+            warnings.append(f"non-positive baseline for {name}; skipped")
+            continue
+        # deterministic units (bytes) are compared raw; timed units are
+        # normalized by the machine-speed ratio.
+        scale = 1.0 if str(base.get("unit", "")) == "bytes" else cal
+        if sense == "lower" and f > b * threshold * scale:
+            failures.append(
+                f"{name}: {f:.4g} vs baseline {b:.4g} "
+                f"({f / (b * scale):.2f}x speed-adjusted, limit {threshold:.2f}x)"
+            )
+        elif sense == "higher" and f < b / (threshold * scale):
+            failures.append(
+                f"{name}: {f:.4g} vs baseline {b:.4g} "
+                f"({b / (f * scale):.2f}x slower speed-adjusted, "
+                f"limit {threshold:.2f}x)"
+            )
+    return failures, warnings
+
+
+def check_dirs(
+    baseline_dir: str, fresh_dir: str, *, threshold: float = DEFAULT_THRESHOLD
+) -> tuple[list[str], list[str]]:
+    """Gate every committed BENCH_*.json that the fresh run also produced."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    base_paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not base_paths:
+        warnings.append(f"no committed baselines under {baseline_dir}; nothing gated")
+    for base_path in base_paths:
+        name = os.path.basename(base_path)
+        fresh_path = os.path.join(fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            warnings.append(f"{name}: baseline exists but fresh run did not emit it")
+            continue
+        with open(base_path) as fh:
+            baseline = json.load(fh)
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        fails, warns = compare_entries(baseline, fresh, threshold=threshold)
+        failures += [f"{name}: {m}" for m in fails]
+        warnings += [f"{name}: {m}" for m in warns]
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline-dir",
+        default="benchmarks/baselines",
+        help="directory of committed BENCH_*.json snapshots",
+    )
+    ap.add_argument(
+        "--fresh-dir", default=".", help="directory the fresh run wrote to"
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=DEFAULT_THRESHOLD,
+        help="allowed slowdown ratio before failing (default 1.25 = +25%%)",
+    )
+    args = ap.parse_args(argv)
+    failures, warnings = check_dirs(
+        args.baseline_dir, args.fresh_dir, threshold=args.threshold
+    )
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if failures:
+        print(f"# perf gate: {len(failures)} regression(s) over threshold")
+        return 1
+    print(f"# perf gate: clean ({len(warnings)} warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,201 @@
+"""Head-to-head: the paper's full evaluation (sections 6.B-6.D) in one run.
+
+All four algorithms -- ASURA, Consistent Hashing ("ch"), capacity-weighted
+Rendezvous Hashing ("wrh") and Random Slicing ("rs") -- run through the SAME
+``PlacementEngine`` artifact interface at a COMMON scale, on the device-
+resident backends (jnp reference kernels off-TPU, Pallas on TPU), so the
+comparison measures the algorithms, not the plumbing.  Paper-figure mapping:
+
+  * ``h2h_calc_<alg>_n<N>``      -- Fig. 5: distribution-stage time per id
+    (engine cached-artifact path, batch placement, us/id),
+  * ``h2h_uniformity_<alg>_*``   -- Figs. 6-7: max variability (%), uniform
+    AND capacity-weighted clusters,
+  * ``h2h_move_{add,rm}_<alg>``  -- section 6.D / Table 3: moved fraction
+    on one node addition/removal vs the theoretical optimum, plus the
+    wrong-direction counters (must be 0 for the optimal-movement
+    algorithms),
+  * ``h2h_memory_<alg>_n<N>``    -- Table 2: lookup-table bytes at N nodes.
+
+``--quick`` shrinks every population for the CI smoke; the CI perf gate
+(``benchmarks/check_regression.py``) compares the timing entries of a fresh
+quick run against the committed ``benchmarks/baselines`` snapshots.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ALGORITHMS, PlacementEngine, make_cluster, make_uniform_cluster
+from repro.core.rng import draw_u32_np
+
+NODES = 128
+BATCH = 200_000
+DATA_PER_NODE = 2_000
+MOVE_DATA = 200_000
+
+QUICK_NODES = 32
+QUICK_BATCH = 20_000
+QUICK_DATA_PER_NODE = 500
+QUICK_MOVE_DATA = 20_000
+
+MEMORY_NODES = (100, 1000)
+
+
+def _engine(cluster, algorithm: str) -> PlacementEngine:
+    # backend="ref" keeps the numbers on the shipped device path (jnp
+    # kernels) on CPU hosts; on a TPU host "auto" would pick pallas, but a
+    # fixed backend keeps CI trajectory points comparable run to run.
+    return PlacementEngine(cluster, backend="ref", algorithm=algorithm)
+
+
+def _ids(n: int, rep: int = 0) -> np.ndarray:
+    base = np.arange(n, dtype=np.uint32)
+    return draw_u32_np(base, np.uint32(900 + rep), np.zeros_like(base))
+
+
+def bench_calc(csv_print, n_nodes: int, batch: int, repeats: int = 5) -> None:
+    """Fig. 5 at a common scale: one engine per algorithm, cached artifact,
+    batch place_nodes timed after a warm call (one upload asserted).
+
+    These entries are the CI-gated ones (check_regression.py), so the
+    measurement is built for stability: each repeat times enough back-to-
+    back calls to fill ~20 ms (sub-millisecond single calls are all
+    dispatch jitter), the entry is the best of ``repeats`` (the least-
+    preempted sample), and the gate further normalizes by the suite's
+    ``h2h_calibration`` machine-speed entry."""
+    ids = _ids(batch)
+    for alg in ALGORITHMS:
+        cluster = make_uniform_cluster(n_nodes)
+        engine = _engine(cluster, alg)
+        engine.place_nodes(ids)  # warm at the TIMED shape: artifact + jit
+        t0 = time.perf_counter()
+        engine.place_nodes(ids)
+        once = max(time.perf_counter() - t0, 1e-6)
+        inner = max(1, int(0.02 / once))  # ~20 ms of work per repeat
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _call in range(inner):
+                engine.place_nodes(ids)
+            best = min(best, (time.perf_counter() - t0) / inner)
+        assert engine.uploads == 1, "cached artifact must not re-upload"
+        csv_print(f"h2h_calc_{alg}_n{n_nodes}", best / batch * 1e6, "us_per_id")
+
+
+def _maxvar(counts: np.ndarray) -> float:
+    return float((counts.max() - counts.mean()) / counts.mean())
+
+
+def calibration_us(repeats: int = 5) -> float:
+    """Machine-speed yardstick: best-of-``repeats`` time (us) of a FIXED
+    integer workload (fmix32 over 2**21 lanes -- the same op family the
+    placement kernels are made of).
+
+    The perf gate divides every timing comparison by the fresh/baseline
+    calibration ratio (check_regression.py), so committed baselines stay
+    meaningful on a slower/faster runner and transient machine-wide
+    slowdowns do not read as algorithmic regressions."""
+    from repro.core.rng import fmix32_np
+
+    x = np.arange(1 << 21, dtype=np.uint32)
+    fmix32_np(x)  # warm the allocator
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fmix32_np(x)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_uniformity(csv_print, n_nodes: int, data_per_node: int) -> None:
+    """Figs. 6-7: max variability, uniform and capacity-weighted clusters."""
+    ids = _ids(n_nodes * data_per_node)
+    for alg in ALGORITHMS:
+        cluster = make_uniform_cluster(n_nodes)
+        owners = _engine(cluster, alg).place_nodes(ids)
+        counts = np.bincount(owners, minlength=n_nodes)
+        csv_print(
+            f"h2h_uniformity_{alg}_n{n_nodes}_dpn{data_per_node}",
+            100 * _maxvar(counts),
+            "maxvar_pct",
+        )
+    # capacity-weighted: nodes 0..N/2 hold twice the capacity.  CH ignores
+    # weights (the paper's unweighted ring); the others must track them.
+    caps = [2.0 if i < n_nodes // 2 else 1.0 for i in range(n_nodes)]
+    for alg in ("asura", "wrh", "rs"):
+        cluster = make_cluster(caps)
+        owners = _engine(cluster, alg).place_nodes(ids)
+        counts = np.bincount(owners, minlength=n_nodes).astype(np.float64)
+        # normalize per-capacity before the variability statistic
+        loads = counts / np.asarray(caps)
+        csv_print(
+            f"h2h_uniformity_weighted_{alg}_n{n_nodes}",
+            100 * _maxvar(loads),
+            "maxvar_pct_per_cap",
+        )
+
+
+def bench_movement(csv_print, n_nodes: int, n_data: int) -> None:
+    """Section 6.D: moved fraction on add/remove vs optimal, through the
+    engine's versioned artifacts (place_nodes_at pins the v table)."""
+    ids = _ids(n_data)
+    for alg in ALGORITHMS:
+        cluster = make_uniform_cluster(n_nodes)
+        engine = _engine(cluster, alg)
+        before = engine.place_nodes(ids)
+        v0 = cluster.version
+        cluster.add_node(n_nodes, 1.0)
+        after = engine.place_nodes(ids)
+        assert np.array_equal(engine.place_nodes_at(ids, v0), before)
+        moved = before != after
+        csv_print(
+            f"h2h_move_add_{alg}_pct",
+            100 * moved.mean(),
+            f"optimal {100 / (n_nodes + 1):.2f}",
+        )
+        csv_print(
+            f"h2h_move_add_{alg}_wrong_dest",
+            int((after[moved] != n_nodes).sum()),
+            "must_be_0_if_optimal",
+        )
+        before = after
+        cluster.remove_node(7)
+        after = engine.place_nodes(ids)
+        moved = before != after
+        csv_print(
+            f"h2h_move_rm_{alg}_pct",
+            100 * moved.mean(),
+            f"optimal {100 / (n_nodes + 1):.2f}",
+        )
+        csv_print(
+            f"h2h_move_rm_{alg}_wrong_src",
+            int((before[moved] != 7).sum()),
+            "must_be_0_if_optimal",
+        )
+
+
+def bench_memory(csv_print, node_counts) -> None:
+    """Table 2: lookup-state bytes per algorithm at N nodes."""
+    for n_nodes in node_counts:
+        cluster = make_uniform_cluster(n_nodes)
+        for alg in ALGORITHMS:
+            engine = _engine(cluster, alg)
+            art = engine.artifact(alg)
+            n_bytes = (
+                cluster.memory_bytes() if alg == "asura" else art.memory_bytes()
+            )
+            csv_print(f"h2h_memory_{alg}_n{n_nodes}", n_bytes, "bytes")
+
+
+def run(csv_print, quick: bool = False) -> None:
+    n_nodes = QUICK_NODES if quick else NODES
+    batch = QUICK_BATCH if quick else BATCH
+    dpn = QUICK_DATA_PER_NODE if quick else DATA_PER_NODE
+    move_data = QUICK_MOVE_DATA if quick else MOVE_DATA
+    csv_print("h2h_calibration", calibration_us(), "us_calibration")
+    bench_calc(csv_print, n_nodes, batch)
+    bench_uniformity(csv_print, n_nodes, dpn)
+    bench_movement(csv_print, n_nodes, move_data)
+    bench_memory(csv_print, MEMORY_NODES if not quick else (100,))

@@ -25,6 +25,7 @@ from . import (
     actual_usage,
     calc_time,
     capacity,
+    head_to_head,
     memory,
     migrate,
     movement,
@@ -40,6 +41,7 @@ SUITES = {
     "movement": movement,
     "migrate": migrate,
     "replicas": replicas,
+    "head_to_head": head_to_head,
     "table3_actual_usage": actual_usage,
     "capacity": capacity,
     "roofline": roofline,
@@ -93,6 +95,7 @@ def main(argv=None) -> int:
         "--out-dir", default=".", help="directory for the BENCH_*.json files"
     )
     args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
     picks = args.only.split(",") if args.only else None
     for name, mod in SUITES.items():
         if picks and not any(p in name for p in picks):

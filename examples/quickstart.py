@@ -4,7 +4,9 @@ Demonstrates the paper's core API end to end:
   1. build a capacity-weighted cluster (STEP 1),
   2. place data (STEP 2) -- scalar, vectorized, and the Pallas kernel path,
   3. add/remove nodes and observe optimal data movement,
-  4. replicate placements and use section-2.D metadata.
+  4. replicate placements and use section-2.D metadata,
+  5. route via the paper's comparison baselines through the same engine
+     (``Router(algorithm=...)`` -- "asura", "ch", "wrh" or "rs").
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -63,6 +65,19 @@ def main() -> None:
     clone = Cluster.from_json(blob)
     assert np.array_equal(clone.place_nodes(ids[:1000]), after[:1000])
     print("deserialized table places identically — no placement service needed")
+
+    # --- the same interface serves the paper's baselines --------------------
+    # Router(algorithm=...) swaps the placement algorithm behind the same
+    # engine/artifact machinery: "ch" (consistent hashing), "wrh"
+    # (capacity-weighted rendezvous) and "rs" (random slicing) all run on
+    # the device-resident kernel paths (DESIGN.md section 9).
+    from repro.serve import Router
+
+    caps = {0: 1.5, 1: 0.7, 2: 1.0}
+    for algorithm in ("asura", "ch", "wrh", "rs"):
+        router = Router(caps, algorithm=algorithm)
+        share = np.bincount(router.route(ids[:20_000]), minlength=3) / 20_000
+        print(f"  {algorithm:>5} routing shares: {share.round(3)}")
 
 
 if __name__ == "__main__":

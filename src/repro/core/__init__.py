@@ -16,21 +16,30 @@ from .asura import (
     tail_cumsum_halves,
 )
 from .cluster import Cluster, NodeInfo, make_cluster, make_uniform_cluster
-from .engine import PlacementEngine, TableArtifact
+from .engine import ALGORITHMS, BaselineArtifact, PlacementEngine, TableArtifact
 from .hierarchy import HierarchicalCluster
-from .consistent_hashing import ConsistentHashRing
+from .consistent_hashing import ConsistentHashRing, build_ring, ch_place_np
+from .random_slicing import RandomSlicingTable, rs_place_np
 from .straw import StrawBucket
+from .wrh import wrh_place_np
 
 __all__ = [
+    "ALGORITHMS",
     "AsuraParams",
+    "BaselineArtifact",
     "DEFAULT_PARAMS",
     "Cluster",
     "NodeInfo",
     "ConsistentHashRing",
     "HierarchicalCluster",
     "PlacementEngine",
+    "RandomSlicingTable",
     "StrawBucket",
     "TableArtifact",
+    "build_ring",
+    "ch_place_np",
+    "rs_place_np",
+    "wrh_place_np",
     "addition_number",
     "addition_numbers_batch",
     "make_cluster",

@@ -17,20 +17,45 @@ import numpy as np
 from .rng import draw_u32_np, fmix32_np
 
 
+def build_ring(node_ids, virtual_nodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """Initial stage as bare arrays: (sorted ring hashes u32, owners u32).
+
+    The canonical lookup state the ``PlacementEngine`` baseline backend
+    caches per cluster version (the ring analogue of the segment table).
+    """
+    nodes = np.asarray(list(node_ids), dtype=np.uint32)
+    if nodes.shape[0] == 0:
+        raise ValueError("need at least one node")
+    ids = np.repeat(nodes, int(virtual_nodes))
+    vidx = np.tile(np.arange(int(virtual_nodes), dtype=np.uint32), nodes.shape[0])
+    hashes = draw_u32_np(ids, np.uint32(0), vidx)
+    order = np.argsort(hashes, kind="stable")
+    return hashes[order], ids[order]
+
+
+def ch_place_np(datum_ids, ring_hashes: np.ndarray, ring_owners: np.ndarray) -> np.ndarray:
+    """NumPy oracle for the distribution stage: first ring point clockwise.
+
+    Bit-identical to the jnp twin / Pallas binary-search kernel in
+    ``repro.kernels.baselines`` (tested).
+    """
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    if ids.shape[0] == 0:
+        return np.zeros(0, dtype=np.int64)
+    h = fmix32_np(ids)
+    idx = np.searchsorted(ring_hashes, h, side="left")
+    idx = np.where(idx == ring_hashes.shape[0], 0, idx)  # wrap
+    return ring_owners[idx].astype(np.int64)
+
+
 class ConsistentHashRing:
     def __init__(self, node_ids, virtual_nodes: int = 100):
         self.virtual_nodes = int(virtual_nodes)
         self.node_ids = np.asarray(list(node_ids), dtype=np.uint32)
-        n = self.node_ids.shape[0]
-        if n == 0:
-            raise ValueError("need at least one node")
         # initial stage: NV hash numbers, sorted once.
-        ids = np.repeat(self.node_ids, self.virtual_nodes)
-        vidx = np.tile(np.arange(self.virtual_nodes, dtype=np.uint32), n)
-        hashes = draw_u32_np(ids, np.uint32(0), vidx)
-        order = np.argsort(hashes, kind="stable")
-        self.ring_hashes = hashes[order]
-        self.ring_owners = ids[order]
+        self.ring_hashes, self.ring_owners = build_ring(
+            self.node_ids, self.virtual_nodes
+        )
 
     def memory_bytes(self) -> int:
         """Table II accounting: 8NV bytes (4-byte hash + 4-byte owner)."""
@@ -38,7 +63,4 @@ class ConsistentHashRing:
 
     def place(self, datum_ids) -> np.ndarray:
         """Distribution stage: datum hash -> first ring point clockwise."""
-        h = fmix32_np(np.asarray(datum_ids, dtype=np.uint32))
-        idx = np.searchsorted(self.ring_hashes, h, side="left")
-        idx = np.where(idx == self.ring_hashes.shape[0], 0, idx)  # wrap
-        return self.ring_owners[idx]
+        return ch_place_np(datum_ids, self.ring_hashes, self.ring_owners)

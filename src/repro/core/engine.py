@@ -36,6 +36,18 @@ The non-converged tail (p < 2**-53 per lane) follows the single
 exact-integer spec (``resolve_tail_np`` on the host, ``resolve_tail_dev``
 on device -- bit-identical; DESIGN.md section 3.2), so results are
 bit-for-bit independent of the backend choice.
+
+The engine also serves the paper's COMPARISON BASELINES as first-class
+device backends (DESIGN.md section 9): ``algorithm`` selects ``"asura"``
+(default), ``"ch"`` (consistent hashing, virtual-node ring), ``"wrh"``
+(capacity-weighted rendezvous hashing) or ``"rs"`` (random slicing).  Each
+baseline gets a ``BaselineArtifact`` -- its canonical lookup table,
+materialized and uploaded once per cluster version, cached in a PER-
+ALGORITHM LRU keyed on ``(algorithm, version)`` so an ASURA upload can
+never evict or alias a same-version baseline artifact -- and the generic
+``place_nodes`` / ``place_nodes_device`` / ``*_at`` entry points dispatch
+on the algorithm (per-call override via ``algorithm=``).  Baseline device
+paths are bit-identical to their NumPy oracles, like ASURA's.
 """
 
 from __future__ import annotations
@@ -55,10 +67,19 @@ from .asura import (
     place_replicas_u32,
     resolve_tail_np,
 )
+from .consistent_hashing import build_ring, ch_place_np
+from .random_slicing import RandomSlicingTable, rs_place_np
+from .wrh import wrh_place_np
 
 BACKENDS = ("auto", "numpy", "ref", "pallas")
 
-CACHE_VERSIONS = 4  # most-recent table versions kept materialized
+ALGORITHMS = ("asura", "ch", "wrh", "rs")
+
+CACHE_VERSIONS = 4  # most-recent table versions kept materialized per algorithm
+
+DEFAULT_VIRTUAL_NODES = 100  # the paper's CH evaluation default
+
+_BASELINE_ORACLE = {"ch": ch_place_np, "rs": rs_place_np, "wrh": wrh_place_np}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +109,39 @@ class TableArtifact:
         return self.len32_dev is not None
 
 
+@dataclasses.dataclass(frozen=True)
+class BaselineArtifact:
+    """Immutable snapshot of one baseline algorithm's lookup table at one
+    cluster version (DESIGN.md section 9).
+
+    ``keys`` / ``vals`` are the host canonical arrays, with algorithm-
+    specific meaning:
+
+      * ``ch``  -- keys = sorted u32 ring hashes, vals = int32 owners,
+      * ``rs``  -- keys = u32 interval starts (first 0), vals = int32 owners,
+      * ``wrh`` -- keys = u32 node ids, vals = float32 capacity weights.
+
+    ``keys_dev`` / ``vals_dev`` are the lane-padded device copies (None
+    until a device path needs them, exactly like ``TableArtifact``).
+    """
+
+    algorithm: str
+    version: int
+    n_entries: int
+    keys: np.ndarray
+    vals: np.ndarray
+    keys_dev: Any = None
+    vals_dev: Any = None
+
+    @property
+    def has_device_tables(self) -> bool:
+        return self.keys_dev is not None
+
+    def memory_bytes(self) -> int:
+        """Table-II accounting: 8 bytes per lookup entry (key + value)."""
+        return 8 * self.n_entries
+
+
 class PlacementEngine:
     """Cached STEP-2 dispatcher bound to one mutable ``Cluster``.
 
@@ -100,23 +154,38 @@ class PlacementEngine:
         cluster,
         *,
         backend: str = "auto",
+        algorithm: str = "asura",
+        virtual_nodes: int = DEFAULT_VIRTUAL_NODES,
         interpret: bool | None = None,
         rows_per_block: int | None = None,
         cache_versions: int = CACHE_VERSIONS,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}"
+            )
         if cache_versions < 1:
             raise ValueError("cache_versions must be >= 1")
         self.cluster = cluster
         self.params: AsuraParams = getattr(cluster, "params", DEFAULT_PARAMS)
+        self.algorithm = algorithm
+        self._virtual_nodes = int(virtual_nodes)
         self._backend = backend
         self._interpret = interpret
         self._rows_per_block = rows_per_block
         self._cache_versions = cache_versions
-        # version -> TableArtifact, most-recently-used last.
-        self._artifacts: OrderedDict[int, TableArtifact] = OrderedDict()
-        self.uploads = 0  # table materializations (one per cluster version used)
+        # algorithm -> (version -> artifact, most-recently-used last).  One
+        # LRU per algorithm: placements under one algorithm can never evict
+        # (or alias) another algorithm's artifact of the same version.
+        self._artifacts: dict[str, OrderedDict[int, Any]] = {}
+        # shadow interval table mirroring cluster membership for "rs" --
+        # random slicing is HISTORY-dependent (incremental re-slicing), so
+        # the engine carries the table forward version to version instead of
+        # re-deriving it from a membership snapshot.
+        self._rs_shadow: RandomSlicingTable | None = None
+        self.uploads = 0  # table materializations (one per (algorithm, version))
 
     # -- artifact lifecycle --------------------------------------------------
 
@@ -145,14 +214,41 @@ class PlacementEngine:
             cum_lo_dev=cum_lo,
         )
 
-    def artifact(self) -> TableArtifact:
-        """The current version's table, rebuilding (and re-uploading) only
-        when ``cluster.version`` is not among the cached artifacts."""
+    def _resolve_algorithm(self, algorithm: str | None) -> str:
+        alg = self.algorithm if algorithm is None else algorithm
+        if alg not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {alg!r}")
+        return alg
+
+    def _cache(self, algorithm: str) -> OrderedDict[int, Any]:
+        return self._artifacts.setdefault(algorithm, OrderedDict())
+
+    def _store(self, algorithm: str, art) -> None:
+        cache = self._cache(algorithm)
+        cache[art.version] = art
+        while len(cache) > self._cache_versions:
+            cache.popitem(last=False)
+
+    def artifact(self, algorithm: str | None = None):
+        """The current version's lookup table under ``algorithm`` (default:
+        the engine's own), rebuilding (and re-uploading) only when
+        ``(algorithm, cluster.version)`` is not among the cached artifacts."""
+        alg = self._resolve_algorithm(algorithm)
         version = self.cluster.version
-        art = self._artifacts.get(version)
+        cache = self._cache(alg)
+        art = cache.get(version)
         if art is not None:
-            self._artifacts.move_to_end(version)
+            cache.move_to_end(version)
             return art
+        if alg == "asura":
+            art = self._build_asura_artifact(version)
+        else:
+            art = self._build_baseline_artifact(alg, version)
+        self._store(alg, art)
+        self.uploads += 1
+        return art
+
+    def _build_asura_artifact(self, version: int) -> TableArtifact:
         lengths = np.asarray(self.cluster.seg_lengths(), dtype=np.float64)
         len32 = lengths_to_u32(lengths)
         node_of = np.asarray(self.cluster.seg_to_node(), dtype=np.int64)
@@ -166,27 +262,79 @@ class PlacementEngine:
         )
         if self.backend != "numpy":
             art = self._build_device_tables(art)
-        self._artifacts[version] = art
-        while len(self._artifacts) > self._cache_versions:
-            self._artifacts.popitem(last=False)
-        self.uploads += 1
         return art
 
-    def _device_artifact(self) -> TableArtifact:
+    def _node_weights(self) -> dict[int, float]:
+        nodes = getattr(self.cluster, "nodes", None)
+        if nodes is None:
+            raise TypeError(
+                "baseline algorithms need a cluster exposing `.nodes` "
+                "(node_id -> NodeInfo); this cluster is table-only"
+            )
+        return {int(nid): float(info.capacity) for nid, info in nodes.items()}
+
+    def _build_baseline_artifact(self, alg: str, version: int) -> BaselineArtifact:
+        weights = self._node_weights()
+        node_ids = sorted(weights)
+        if alg == "ch":
+            # the paper's CH setup: V virtual nodes per node, unweighted.
+            keys, vals = build_ring(node_ids, self._virtual_nodes)
+            vals = vals.astype(np.int32)
+        elif alg == "wrh":
+            keys = np.asarray(node_ids, dtype=np.uint32)
+            vals = np.asarray([weights[n] for n in node_ids], dtype=np.float32)
+        else:  # rs
+            if self._rs_shadow is None:
+                self._rs_shadow = RandomSlicingTable()
+            self._rs_shadow.rebalance(weights)
+            keys, vals = self._rs_shadow.starts_owners()
+        art = BaselineArtifact(
+            algorithm=alg,
+            version=version,
+            n_entries=int(keys.shape[0]),
+            keys=keys,
+            vals=vals,
+        )
+        if self.backend != "numpy":
+            art = self._build_baseline_device_tables(art)
+        return art
+
+    def _build_baseline_device_tables(self, art: BaselineArtifact) -> BaselineArtifact:
+        """Fill the lane-padded device copies (one host->device upload)."""
+        from repro.kernels.baselines import (
+            ch_table_prep,
+            rs_table_prep,
+            wrh_table_prep,
+        )
+
+        prep = {"ch": ch_table_prep, "rs": rs_table_prep, "wrh": wrh_table_prep}
+        keys_dev, vals_dev = prep[art.algorithm](art.keys, art.vals)
+        return dataclasses.replace(art, keys_dev=keys_dev, vals_dev=vals_dev)
+
+    def _with_device_tables(self, alg: str, art):
+        """Ensure ``art`` carries device tables (same materialization --
+        the ``uploads`` counter does not tick again)."""
+        if not art.has_device_tables:
+            if alg == "asura":
+                art = self._build_device_tables(art)
+            else:
+                art = self._build_baseline_device_tables(art)
+            self._cache(alg)[art.version] = art
+        return art
+
+    def _device_artifact(self, algorithm: str | None = None):
         """Like ``artifact()`` but guaranteed to carry device tables.
 
         On the numpy backend the device tables are built lazily on the
         first ``*_device`` call (part of the same version's one
         materialization -- the ``uploads`` counter does not tick again).
         """
-        art = self.artifact()
-        if not art.has_device_tables:
-            art = self._build_device_tables(art)
-            self._artifacts[art.version] = art
-        return art
+        alg = self._resolve_algorithm(algorithm)
+        return self._with_device_tables(alg, self.artifact(alg))
 
-    def artifact_for(self, version: int) -> TableArtifact:
-        """The table artifact of a SPECIFIC version (migration dual-serving).
+    def artifact_for(self, version: int, algorithm: str | None = None):
+        """The table artifact of a SPECIFIC version (migration dual-serving,
+        baseline movement accounting).
 
         The current version is built on demand; any other version must
         still be in the LRU (a consumer that placed at that version keeps
@@ -194,28 +342,28 @@ class PlacementEngine:
         be rebuilt (the cluster has moved on), so this raises ``KeyError``
         rather than silently re-deriving the wrong table.
         """
+        alg = self._resolve_algorithm(algorithm)
         if version == self.cluster.version:
-            return self.artifact()
-        art = self._artifacts.get(version)
+            return self.artifact(alg)
+        cache = self._cache(alg)
+        art = cache.get(version)
         if art is None:
             raise KeyError(
-                f"table version {version} not cached (LRU holds "
-                f"{list(self._artifacts)}); place at that version before "
+                f"{alg} table version {version} not cached (LRU holds "
+                f"{list(cache)}); place at that version before "
                 "mutating, or raise cache_versions"
             )
-        self._artifacts.move_to_end(version)
+        cache.move_to_end(version)
         return art
 
-    def _device_artifact_for(self, version: int) -> TableArtifact:
+    def _device_artifact_for(self, version: int, algorithm: str | None = None):
         """``artifact_for`` with device tables (same materialization)."""
-        art = self.artifact_for(version)
-        if not art.has_device_tables:
-            art = self._build_device_tables(art)
-            self._artifacts[art.version] = art
-        return art
+        alg = self._resolve_algorithm(algorithm)
+        return self._with_device_tables(alg, self.artifact_for(version, alg))
 
     def invalidate(self) -> None:
-        """Drop every cached artifact (next placement rebuilds)."""
+        """Drop every cached artifact, all algorithms (next placement
+        rebuilds)."""
         self._artifacts.clear()
 
     # -- STEP 2 dispatch -----------------------------------------------------
@@ -230,24 +378,52 @@ class PlacementEngine:
             kw["rows_per_block"] = self._rows_per_block
         return kw
 
+    def _baseline_kwargs(self) -> dict:
+        kw = self._kernel_kwargs()
+        del kw["params"]  # baseline lookups have no generator ladder
+        return kw
+
+    def _require_asura(self, method: str) -> None:
+        if self.algorithm != "asura":
+            raise ValueError(
+                f"{method} is segment-table semantics, ASURA-only; this "
+                f"engine's algorithm is {self.algorithm!r} -- use "
+                "place_nodes/place_nodes_device (they dispatch per "
+                "algorithm)"
+            )
+
     def place(self, datum_ids) -> np.ndarray:
         """Batch placement -> int64 segment numbers (tail-resolved, total)."""
-        art = self.artifact()
+        self._require_asura("place")
+        art = self.artifact("asura")
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         if self.backend == "numpy":
             segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
             return resolve_tail_np(ids, segs, art.len32, art.top_level)
         return np.asarray(self.place_device(ids)).astype(np.int64)
 
-    def place_nodes(self, datum_ids) -> np.ndarray:
-        """Batch placement -> int64 node ids."""
-        art = self.artifact()
+    def place_nodes(self, datum_ids, algorithm: str | None = None) -> np.ndarray:
+        """Batch placement -> int64 node ids (dispatches on ``algorithm``)."""
+        alg = self._resolve_algorithm(algorithm)
+        art = self.artifact(alg)
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if alg != "asura":
+            if self.backend == "numpy":
+                return _BASELINE_ORACLE[alg](ids, art.keys, art.vals)
+            return np.asarray(
+                self.place_nodes_device(ids, algorithm=alg)
+            ).astype(np.int64)
         if self.backend == "numpy":
-            return art.node_of[self.place(datum_ids)]
-        return np.asarray(self.place_nodes_device(datum_ids)).astype(np.int64)
+            segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
+            segs = resolve_tail_np(ids, segs, art.len32, art.top_level)
+            return art.node_of[segs]
+        return np.asarray(
+            self.place_nodes_device(ids, algorithm="asura")
+        ).astype(np.int64)
 
     def place_replicas(self, datum_ids, n_replicas: int) -> np.ndarray:
         """(batch, R) segment numbers on R distinct nodes, primary first."""
+        self._require_asura("place_replicas")
         art = self.artifact()
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         if self.backend == "numpy":
@@ -268,6 +444,7 @@ class PlacementEngine:
 
     def place_replica_nodes(self, datum_ids, n_replicas: int) -> np.ndarray:
         """(batch, R) node ids, primary first."""
+        self._require_asura("place_replica_nodes")
         art = self.artifact()
         return art.node_of[self.place_replicas(datum_ids, n_replicas)]
 
@@ -278,6 +455,7 @@ class PlacementEngine:
         segments (tail-resolved, total).  Same results ``place`` gave while
         that version was current -- the dual-version read rule's building
         block (DESIGN.md section 8)."""
+        self._require_asura("place_at")
         art = self.artifact_for(version)
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         if self.backend == "numpy":
@@ -285,10 +463,28 @@ class PlacementEngine:
             return resolve_tail_np(ids, segs, art.len32, art.top_level)
         return np.asarray(self.place_device_at(ids, version)).astype(np.int64)
 
-    def place_nodes_at(self, datum_ids, version: int) -> np.ndarray:
-        """Batch placement under a specific version -> int64 node ids."""
-        art = self.artifact_for(version)
-        return art.node_of[self.place_at(datum_ids, version)]
+    def place_nodes_at(
+        self, datum_ids, version: int, algorithm: str | None = None
+    ) -> np.ndarray:
+        """Batch placement under a specific cached version -> int64 node ids
+        (dispatches on ``algorithm`` -- the baselines' movement-accounting
+        building block: diff owners across two cached versions)."""
+        alg = self._resolve_algorithm(algorithm)
+        art = self.artifact_for(version, alg)
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if alg != "asura":
+            if self.backend == "numpy":
+                return _BASELINE_ORACLE[alg](ids, art.keys, art.vals)
+            return np.asarray(
+                self.place_nodes_device_at(ids, version, algorithm=alg)
+            ).astype(np.int64)
+        if self.backend == "numpy":
+            segs = place_batch_u32(ids, art.len32, art.top_level, self.params)
+            segs = resolve_tail_np(ids, segs, art.len32, art.top_level)
+            return art.node_of[segs]
+        return np.asarray(
+            self.place_nodes_device_at(ids, version, algorithm="asura")
+        ).astype(np.int64)
 
     # -- device-resident variants (zero host syncs) --------------------------
 
@@ -301,7 +497,8 @@ class PlacementEngine:
         """
         from repro.kernels.ops import place_on_table_device
 
-        art = self._device_artifact()
+        self._require_asura("place_device")
+        art = self._device_artifact("asura")
         return place_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -312,12 +509,24 @@ class PlacementEngine:
             **self._device_kwargs(),
         )
 
-    def place_nodes_device(self, datum_ids):
-        """Batch placement -> (batch,) int32 node ids on device (fused
-        seg->node gather, on-device tail, zero host syncs)."""
+    def place_nodes_device(self, datum_ids, algorithm: str | None = None):
+        """Batch placement -> (batch,) int32 node ids on device, zero host
+        syncs (dispatches on ``algorithm``: ASURA's fused seg->node gather
+        with the on-device tail, or a baseline's lookup kernel)."""
         from repro.kernels.ops import place_nodes_on_table_device
 
-        art = self._device_artifact()
+        alg = self._resolve_algorithm(algorithm)
+        art = self._device_artifact(alg)
+        if alg != "asura":
+            from repro.kernels.baselines import baseline_place_on_table_device
+
+            return baseline_place_on_table_device(
+                alg,
+                datum_ids,
+                art.keys_dev,
+                art.vals_dev,
+                **self._baseline_device_kwargs(),
+            )
         return place_nodes_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -334,7 +543,8 @@ class PlacementEngine:
         sync); the host variant raises instead."""
         from repro.kernels.ops import place_replicas_on_table_device
 
-        art = self._device_artifact()
+        self._require_asura("place_replica_nodes_device")
+        art = self._device_artifact("asura")
         return place_replicas_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -349,7 +559,8 @@ class PlacementEngine:
         """``place_device`` under a specific cached version (zero syncs)."""
         from repro.kernels.ops import place_on_table_device
 
-        art = self._device_artifact_for(version)
+        self._require_asura("place_device_at")
+        art = self._device_artifact_for(version, "asura")
         return place_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -360,11 +571,24 @@ class PlacementEngine:
             **self._device_kwargs(),
         )
 
-    def place_nodes_device_at(self, datum_ids, version: int):
+    def place_nodes_device_at(
+        self, datum_ids, version: int, algorithm: str | None = None
+    ):
         """``place_nodes_device`` under a specific cached version."""
         from repro.kernels.ops import place_nodes_on_table_device
 
-        art = self._device_artifact_for(version)
+        alg = self._resolve_algorithm(algorithm)
+        art = self._device_artifact_for(version, alg)
+        if alg != "asura":
+            from repro.kernels.baselines import baseline_place_on_table_device
+
+            return baseline_place_on_table_device(
+                alg,
+                datum_ids,
+                art.keys_dev,
+                art.vals_dev,
+                **self._baseline_device_kwargs(),
+            )
         return place_nodes_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -389,8 +613,9 @@ class PlacementEngine:
         """
         from repro.kernels.ops import diff_nodes_on_tables_device
 
-        art_a = self._device_artifact_for(v_from)
-        art_b = self._device_artifact_for(v_to)
+        self._require_asura("diff_nodes_device")
+        art_a = self._device_artifact_for(v_from, "asura")
+        art_b = self._device_artifact_for(v_to, "asura")
         return diff_nodes_on_tables_device(
             datum_ids,
             art_a.len32_dev,
@@ -418,9 +643,10 @@ class PlacementEngine:
         ``addition_numbers_ref``)."""
         from repro.kernels.ops import addition_numbers_on_table_device
 
+        self._require_asura("addition_numbers_device")
         if version is None:
             version = self.cluster.version
-        art = self._device_artifact_for(version)
+        art = self._device_artifact_for(version, "asura")
         return addition_numbers_on_table_device(
             datum_ids,
             art.len32_dev,
@@ -433,5 +659,10 @@ class PlacementEngine:
     def _device_kwargs(self) -> dict:
         kw = self._kernel_kwargs()
         # numpy backend device calls run on the jnp reference kernels.
+        kw["use_pallas"] = self.backend == "pallas"
+        return kw
+
+    def _baseline_device_kwargs(self) -> dict:
+        kw = self._baseline_kwargs()
         kw["use_pallas"] = self.backend == "pallas"
         return kw

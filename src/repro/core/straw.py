@@ -6,6 +6,11 @@ datum -- the property that makes it unscalable in the paper's Fig. 5.
 Capacity weighting multiplies straws by CRUSH-style per-node factors so
 selection probability tracks capacity (section III.E "in limited case").
 Replication takes the R largest straws (section V.A).
+
+This float64 ``np.log`` formulation is host-only; the ``PlacementEngine``
+"wrh" backend uses the device-exact re-formulation in ``core/wrh.py``
+(fixed-point -log2, bit-identical across NumPy/jnp/Pallas -- DESIGN.md
+section 9), which implements the same weighted-rendezvous selection rule.
 """
 
 from __future__ import annotations

@@ -1,6 +1,13 @@
 """Pallas TPU kernels: batched ASURA placement and replication
-(asura_place) with jit wrappers (ops) and pure-jnp oracles (ref)."""
+(asura_place) with jit wrappers (ops) and pure-jnp oracles (ref), plus the
+baseline lookup kernels (baselines: ch/wrh/rs, DESIGN.md section 9)."""
 
+from .baselines import (
+    baseline_place_on_table_device,
+    ch_place_pallas,
+    rs_place_pallas,
+    wrh_place_pallas,
+)
 from .ops import (
     asura_place,
     asura_place_nodes,
@@ -17,6 +24,10 @@ from .ops import (
 
 __all__ = [
     "asura_place",
+    "baseline_place_on_table_device",
+    "ch_place_pallas",
+    "rs_place_pallas",
+    "wrh_place_pallas",
     "asura_place_nodes",
     "asura_place_replicas",
     "node_table_prep",

@@ -1,0 +1,366 @@
+"""Device-resident baseline placement kernels (DESIGN.md section 9).
+
+The paper's evaluation (sections 6.B-6.D) is a head-to-head of ASURA
+against Consistent Hashing, Rendezvous/Straw-weighted hashing and Random
+Slicing.  PRs 1-3 made ASURA fully device-resident; these kernels do the
+same for the baselines so the comparison runs at a common scale through the
+same ``PlacementEngine`` artifact interface:
+
+  * ``ch``  -- virtual-node ring lookup: ``fmix32(id)`` then a branchless
+    binary search (side='left') over the sorted u32 ring, wrap to the first
+    point; O(log NV) per id, the ring broadcast whole into VMEM,
+  * ``wrh`` -- weighted rendezvous: per-node keyed hash, fixed-point Q16
+    ``-log2(u)`` (pure u32 square-and-shift, see ``repro.core.wrh``), one
+    IEEE f32 division by the capacity weight, running argmin over the node
+    table; O(N) per id -- the unscalability the paper's Fig. 5 shows,
+  * ``rs``  -- random slicing: ``fmix32(id)`` then a branchless binary
+    search (side='right' - 1) over the u32 interval starts; O(log I).
+
+Every algorithm has a jnp ``*_lookup`` twin (shape-polymorphic, shared
+VERBATIM by the jitted reference path and the Pallas kernel bodies, the
+``next_asura`` pattern) and is bit-identical to its NumPy oracle
+(``ch_place_np`` / ``wrh_place_np`` / ``rs_place_np``) -- integer compares
+and searches only; WRH's single float op is a lone IEEE division, exact on
+every backend.  ``baseline_place_on_table_device`` is the engine's entry
+point: zero host syncs, device arrays in and out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wrh import Q16
+
+from .asura_place import DEFAULT_ROWS, LANE
+from .ref import draw_u32, fmix32
+
+__all__ = [
+    "ch_table_prep",
+    "rs_table_prep",
+    "wrh_table_prep",
+    "ch_lookup",
+    "rs_lookup",
+    "wrh_lookup",
+    "neg_log2_q16",
+    "ch_place_pallas",
+    "rs_place_pallas",
+    "wrh_place_pallas",
+    "baseline_place_on_table_device",
+]
+
+
+# ---------------------------------------------------------------------------
+# Host-side table prep (lane padding, one upload per artifact)
+# ---------------------------------------------------------------------------
+
+
+def _lane_pad(x: np.ndarray, fill) -> np.ndarray:
+    pad = (-x.shape[0]) % LANE
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+
+
+def ch_table_prep(ring_hashes: np.ndarray, ring_owners: np.ndarray):
+    """Lane-padded device ring.  Hash padding is 0xFFFFFFFF and owner
+    padding is the FIRST ring owner, so a datum hashing past every real
+    point lands on a pad and resolves to the wrap target -- the same owner
+    the oracle's explicit ``idx == n -> 0`` wrap picks."""
+    hashes = np.asarray(ring_hashes, dtype=np.uint32)
+    owners = np.asarray(ring_owners).astype(np.int32)
+    return (
+        jnp.asarray(_lane_pad(hashes, np.uint32(0xFFFFFFFF))),
+        jnp.asarray(_lane_pad(owners, np.int32(owners[0]))),
+    )
+
+
+def rs_table_prep(starts32: np.ndarray, owners: np.ndarray):
+    """Lane-padded device interval table.  Start padding is 0xFFFFFFFF and
+    owner padding the LAST real owner: the 'right'-side search maps a hash
+    at/above the last pad start to the final interval's owner, exactly as
+    the unpadded oracle does."""
+    starts = np.asarray(starts32, dtype=np.uint32)
+    owners = np.asarray(owners).astype(np.int32)
+    return (
+        jnp.asarray(_lane_pad(starts, np.uint32(0xFFFFFFFF))),
+        jnp.asarray(_lane_pad(owners, np.int32(owners[-1]))),
+    )
+
+
+def wrh_table_prep(node_ids: np.ndarray, weights: np.ndarray):
+    """Lane-padded device node/weight tables.  Weight padding is 0.0, which
+    the lookup masks out (a zero-capacity straw can never win)."""
+    nodes = np.asarray(node_ids, dtype=np.uint32)
+    w = np.asarray(weights, dtype=np.float32)
+    return (
+        jnp.asarray(_lane_pad(nodes, np.uint32(0))),
+        jnp.asarray(_lane_pad(w, np.float32(0.0))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shape-polymorphic jnp lookups (run in plain jit AND inside Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _bsearch(keys: jax.Array, h: jax.Array, *, side_left: bool) -> jax.Array:
+    """Branchless u32 binary search over an in-VMEM sorted table.
+
+    side_left=True  -> first index with keys[idx] >= h  (searchsorted 'left')
+    side_left=False -> first index with keys[idx] >  h  (searchsorted 'right')
+
+    Fixed trip count (bit_length of the padded table size), per-lane active
+    masks -- the ``resolve_tail_dev`` pattern, no host round trips.
+    """
+    n_pad = keys.shape[0]
+    shape = h.shape
+    lo = jnp.zeros(shape, dtype=jnp.int32)
+    hi = jnp.full(shape, n_pad, dtype=jnp.int32)
+    for _step in range(max(1, int(n_pad).bit_length())):
+        active = lo < hi
+        mid = jnp.minimum((lo + hi) >> 1, n_pad - 1)
+        k = jnp.take(keys, mid.reshape(-1), axis=0).reshape(shape)
+        below = (k < h) if side_left else (k <= h)
+        lo = jnp.where(active & below, mid + 1, lo)
+        hi = jnp.where(active & ~below, mid, hi)
+    return lo
+
+
+def ch_lookup(ids: jax.Array, ring: jax.Array, owners: jax.Array) -> jax.Array:
+    """Consistent-hashing distribution stage on one tile/batch -> int32."""
+    h = fmix32(ids.astype(jnp.uint32))
+    idx = _bsearch(ring, h, side_left=True)
+    idx = jnp.where(idx == ring.shape[0], 0, idx)  # wrap (exact-multiple pad)
+    return jnp.take(owners, idx.reshape(-1), axis=0).reshape(ids.shape)
+
+
+def rs_lookup(ids: jax.Array, starts: jax.Array, owners: jax.Array) -> jax.Array:
+    """Random-slicing lookup on one tile/batch -> int32 owners."""
+    h = fmix32(ids.astype(jnp.uint32))
+    idx = _bsearch(starts, h, side_left=False) - 1  # starts[0] == 0 -> idx >= 0
+    return jnp.take(owners, idx.reshape(-1), axis=0).reshape(ids.shape)
+
+
+def neg_log2_q16(h: jax.Array) -> jax.Array:
+    """jnp twin of ``repro.core.wrh.neg_log2_q16_np`` (bit-identical).
+
+    Pure u32 shifts/multiplies (the squaring through 16-bit limbs), so it
+    runs unchanged inside Pallas kernels.
+    """
+    h = h.astype(jnp.uint32)
+    v = ((h >> jnp.uint32(9)) << jnp.uint32(1)) | jnp.uint32(1)
+    x = v
+    e = jnp.zeros(v.shape, dtype=jnp.uint32)
+    for s in (16, 8, 4, 2, 1):
+        big = x >= (jnp.uint32(1) << jnp.uint32(s))
+        e = e + jnp.where(big, jnp.uint32(s), jnp.uint32(0))
+        x = jnp.where(big, x >> jnp.uint32(s), x)
+    m = v << (jnp.uint32(23) - e)
+    frac = jnp.zeros(v.shape, dtype=jnp.uint32)
+    m16 = jnp.uint32(0xFFFF)
+    for i in range(1, Q16 + 1):
+        a_lo, a_hi = m & m16, m >> jnp.uint32(16)
+        ll = a_lo * a_lo
+        lh = a_lo * a_hi
+        t = (ll >> jnp.uint32(16)) + (lh & m16) + (lh & m16)
+        lo = (t << jnp.uint32(16)) | (ll & m16)
+        hi = (
+            a_hi * a_hi
+            + (lh >> jnp.uint32(16))
+            + (lh >> jnp.uint32(16))
+            + (t >> jnp.uint32(16))
+        )
+        m = (hi << jnp.uint32(9)) | (lo >> jnp.uint32(23))
+        ge = m >= (jnp.uint32(1) << jnp.uint32(24))
+        frac = frac | jnp.where(ge, jnp.uint32(1) << jnp.uint32(Q16 - i), jnp.uint32(0))
+        m = jnp.where(ge, m >> jnp.uint32(1), m)
+    return (
+        ((jnp.uint32(24) - e).astype(jnp.int32) << jnp.int32(Q16))
+        - frac.astype(jnp.int32)
+    )
+
+
+def wrh_lookup(
+    ids: jax.Array, node_ids: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Weighted-rendezvous winner on one tile/batch -> int32 node ids.
+
+    Running argmin of ``neg_log2_q16(hash(id, node)) / weight`` over the
+    node table (``lax.fori_loop`` with dynamic scalar reads, the counter-
+    ladder pattern); strict ``<`` keeps the FIRST minimal node, matching
+    the NumPy oracle's ``argmin``.  Zero-weight (padding) entries never
+    win.
+    """
+    shape = ids.shape
+    n_pad = node_ids.shape[0]
+    ids_u32 = ids.astype(jnp.uint32)
+    zeros = jnp.zeros(shape, dtype=jnp.uint32)
+
+    def body(j, state):
+        best_key, best_node = state
+        nid = jax.lax.dynamic_index_in_dim(node_ids, j, 0, keepdims=False)
+        w = jax.lax.dynamic_index_in_dim(weights, j, 0, keepdims=False)
+        h = draw_u32(ids_u32, nid, zeros)
+        key = neg_log2_q16(h).astype(jnp.float32) / w  # one IEEE f32 div
+        valid = w > jnp.float32(0.0)
+        better = valid & (key < best_key)
+        best_key = jnp.where(better, key, best_key)
+        best_node = jnp.where(better, nid.astype(jnp.int32), best_node)
+        return best_key, best_node
+
+    best_key0 = jnp.full(shape, jnp.inf, dtype=jnp.float32)
+    best_node0 = jnp.full(shape, -1, dtype=jnp.int32)
+    _, best = jax.lax.fori_loop(0, n_pad, body, (best_key0, best_node0))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: one (rows, LANE) id tile per grid step, tables whole in VMEM
+# ---------------------------------------------------------------------------
+
+
+def _ch_kernel(ids_ref, ring_ref, owners_ref, out_ref):
+    out_ref[...] = ch_lookup(ids_ref[...], ring_ref[...], owners_ref[...])
+
+
+def _rs_kernel(ids_ref, starts_ref, owners_ref, out_ref):
+    out_ref[...] = rs_lookup(ids_ref[...], starts_ref[...], owners_ref[...])
+
+
+def _wrh_kernel(ids_ref, nodes_ref, weights_ref, out_ref):
+    out_ref[...] = wrh_lookup(ids_ref[...], nodes_ref[...], weights_ref[...])
+
+
+def _tiled_pallas_call(kernel, ids, tables, *, rows_per_block, interpret):
+    """Shared launch shape: (rows, LANE) id tiles, each table broadcast
+    whole per block (the segment-table pattern -- baseline tables are the
+    same kilobyte order as ASURA's, far under the VMEM budget)."""
+    from jax.experimental import pallas as pl
+
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "wrapper must pad ids to a block multiple"
+    for t in tables:
+        assert t.shape[0] % LANE == 0, "tables must be lane-padded"
+    ids2 = ids.reshape(total // LANE, LANE)
+    out = pl.pallas_call(
+        kernel,
+        grid=(total // block,),
+        in_specs=[pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0))]
+        + [pl.BlockSpec((t.shape[0],), lambda i: (0,)) for t in tables],
+        out_specs=pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ids2.shape, jnp.int32),
+        interpret=interpret,
+    )(ids2, *tables)
+    return out.reshape(total)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def ch_place_pallas(
+    ids: jax.Array,
+    ring: jax.Array,
+    owners: jax.Array,
+    *,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched CH ring lookup via pl.pallas_call -> (total,) int32 owners."""
+    return _tiled_pallas_call(
+        _ch_kernel, ids, (ring, owners.astype(jnp.int32)),
+        rows_per_block=rows_per_block, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def rs_place_pallas(
+    ids: jax.Array,
+    starts: jax.Array,
+    owners: jax.Array,
+    *,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched random-slicing lookup via pl.pallas_call -> int32 owners."""
+    return _tiled_pallas_call(
+        _rs_kernel, ids, (starts, owners.astype(jnp.int32)),
+        rows_per_block=rows_per_block, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def wrh_place_pallas(
+    ids: jax.Array,
+    node_ids: jax.Array,
+    weights: jax.Array,
+    *,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched weighted-rendezvous argmin via pl.pallas_call -> int32."""
+    return _tiled_pallas_call(
+        _wrh_kernel, ids, (node_ids, weights),
+        rows_per_block=rows_per_block, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jitted jnp reference wrappers (the non-Pallas device path)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _ch_ref(ids, ring, owners):
+    return ch_lookup(ids, ring, owners)
+
+
+@jax.jit
+def _rs_ref(ids, starts, owners):
+    return rs_lookup(ids, starts, owners)
+
+
+@jax.jit
+def _wrh_ref(ids, node_ids, weights):
+    return wrh_lookup(ids, node_ids, weights)
+
+
+_REF = {"ch": _ch_ref, "rs": _rs_ref, "wrh": _wrh_ref}
+_PALLAS = {"ch": ch_place_pallas, "rs": rs_place_pallas, "wrh": wrh_place_pallas}
+
+
+def baseline_place_on_table_device(
+    algorithm: str,
+    datum_ids,
+    table_a: jax.Array,
+    table_b: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Device-resident baseline placement -> (batch,) int32 node ids.
+
+    ``(table_a, table_b)`` are the algorithm's two prepped device tables:
+    (ring, owners) for ``ch``, (starts, owners) for ``rs``, (node_ids,
+    weights) for ``wrh``.  Sync-free like ``place_on_table_device``: device
+    ids stay on device, the output is a device array.
+    """
+    from .ops import _pad_ids, _default_interpret, _head
+
+    interpret = _default_interpret(interpret)
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), dtype=jnp.int32)
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_ids(ids, block)
+        out = _PALLAS[algorithm](
+            padded, table_a, table_b,
+            rows_per_block=rows_per_block, interpret=interpret,
+        )
+        return _head(out, n)
+    return _REF[algorithm](ids, table_a, table_b)

@@ -46,12 +46,15 @@ class MovePlan:
 
 
 class ElasticCoordinator:
-    def __init__(self, cluster: Cluster, tracked_ids: np.ndarray):
+    def __init__(
+        self, cluster: Cluster, tracked_ids: np.ndarray, *, algorithm: str = "asura"
+    ):
         self.cluster = cluster
         self.engine = cluster.engine  # shared versioned table artifact
+        self.algorithm = algorithm
         self.planner = MigrationPlanner(self.engine)
         self.tracked = np.asarray(tracked_ids, dtype=np.uint32)
-        self._owners = self.engine.place_nodes(self.tracked)
+        self._owners = self.engine.place_nodes(self.tracked, algorithm=algorithm)
         self._an: np.ndarray | None = None  # lazy ADDITION NUMBER cache
         self._live_migration: LiveMigration | None = None  # in-flight drain
 
@@ -109,17 +112,54 @@ class ElasticCoordinator:
         )
         return plan, rows
 
+    def _baseline_event(self, mutate) -> MovePlan:
+        """Movement accounting for a baseline algorithm: pin the current
+        artifact, apply the membership change, and diff the tracked set's
+        owners across the two cached versions -- the same before/after
+        accounting the paper's section 6.D comparison uses, vectorized
+        through the engine's versioned ``(algorithm, version)`` LRU."""
+        self.engine.artifact(self.algorithm)  # pin the v table in the LRU
+        v_from = self.cluster.version
+        mutate()
+        before = self.engine.place_nodes_at(
+            self.tracked, v_from, algorithm=self.algorithm
+        )
+        after = self.engine.place_nodes(self.tracked, algorithm=self.algorithm)
+        rows = np.nonzero(before != after)[0]
+        # vectorized dict build (the planner's moves_dict shape) -- no
+        # per-row numpy scalar indexing.
+        moved_ids = self.tracked[rows].tolist()
+        moves = dict(
+            zip(moved_ids, zip(before[rows].tolist(), after[rows].tolist()))
+        )
+        self._owners = after
+        return MovePlan(moves)
+
     def add_node(self, node_id: int, capacity: float) -> MovePlan:
         """Grow the cluster; move only data captured by the new segments."""
         self._check_no_live()
+        if self.algorithm != "asura":
+            return self._baseline_event(
+                lambda: self.cluster.add_node(node_id, capacity)
+            )
         return self._apply(*self._add_plan(node_id, capacity))
 
     def remove_node(self, node_id: int) -> MovePlan:
         """Shrink the cluster; move exactly the data the victim held."""
         self._check_no_live()
+        if self.algorithm != "asura":
+            return self._baseline_event(lambda: self.cluster.remove_node(node_id))
         return self._apply(*self._remove_plan(node_id))
 
     # -- live (throttled, dual-version-served) events -------------------------
+
+    def _require_asura_live(self) -> None:
+        if self.algorithm != "asura":
+            raise ValueError(
+                "live (dual-version-served) migrations ride on ASURA's "
+                f"table artifacts; this coordinator tracks {self.algorithm!r}"
+                " -- use add_node/remove_node for the instantaneous plan"
+            )
 
     def _check_no_live(self) -> None:
         """Dual-version read rules of OVERLAPPING migrations do not compose
@@ -165,6 +205,7 @@ class ElasticCoordinator:
         ``add_node``, drained under bandwidth budgets while reads are
         served through the dual-version rule (route via the returned
         migration until it is ``done``)."""
+        self._require_asura_live()
         self._check_no_live()
         plan, rows = self._add_plan(node_id, capacity)
         migration = self._live(plan, rows, egress, ingress, clock, round_seconds)
@@ -184,6 +225,7 @@ class ElasticCoordinator:
         for a crashed node the drain degenerates to repair traffic -- the
         source copies are gone, but the (src, dst) matrix still bounds the
         per-node repair ingress)."""
+        self._require_asura_live()
         self._check_no_live()
         plan, rows = self._remove_plan(node_id)
         migration = self._live(plan, rows, egress, ingress, clock, round_seconds)

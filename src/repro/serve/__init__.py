@@ -1,3 +1,3 @@
-from .router import ReplicaRouter
+from .router import ReplicaRouter, Router
 
-__all__ = ["ReplicaRouter"]
+__all__ = ["ReplicaRouter", "Router"]

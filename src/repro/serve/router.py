@@ -18,6 +18,13 @@ can schedule cache re-prefill for just those sessions.
 Routing goes through the cluster's ``PlacementEngine``: the segment table is
 canonicalized (and, on accelerator backends, uploaded) once per membership
 version, so the per-request hot path is pure placement -- no table prep.
+
+``Router(algorithm=...)`` swaps the placement algorithm under the SAME
+interface: ``"asura"`` (default), ``"ch"``, ``"wrh"`` or ``"rs"`` route
+through the engine's baseline device backends (DESIGN.md section 9), so the
+paper's head-to-head comparison runs on the serving path too.  ASURA-only
+capabilities (replica fan-out, live scale migrations) raise a clear error
+under a baseline algorithm.
 """
 
 from __future__ import annotations
@@ -26,7 +33,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import Cluster
+from repro.core import Cluster, PlacementEngine
+from repro.core.engine import DEFAULT_VIRTUAL_NODES
 
 
 @dataclasses.dataclass
@@ -39,11 +47,25 @@ class ScalePlan:
 
 
 class ReplicaRouter:
-    def __init__(self, replica_capacities: dict[int, float]):
+    def __init__(
+        self,
+        replica_capacities: dict[int, float],
+        *,
+        algorithm: str = "asura",
+        virtual_nodes: int = DEFAULT_VIRTUAL_NODES,
+    ):
         self.cluster = Cluster()
         for rid, cap in replica_capacities.items():
             self.cluster.add_node(rid, cap)
-        self.engine = self.cluster.engine
+        self.algorithm = algorithm
+        if algorithm == "asura":
+            self.engine = self.cluster.engine
+        else:
+            # dedicated engine whose DEFAULT algorithm is the baseline, so
+            # every route call dispatches to the baseline device backend.
+            self.engine = PlacementEngine(
+                self.cluster, algorithm=algorithm, virtual_nodes=virtual_nodes
+            )
         self._scale_migration = None  # at most one live window at a time
 
     def route(self, session_ids) -> np.ndarray:
@@ -120,6 +142,12 @@ class ReplicaRouter:
         """
         from repro.migrate import LiveMigration, MigrationPlanner
 
+        if self.algorithm != "asura":
+            raise ValueError(
+                "live scale migrations ride on ASURA's dual-version table "
+                f"artifacts; this router routes via {self.algorithm!r} -- "
+                "use plan_scale_event for the instantaneous-swap plan"
+            )
         live = self._scale_migration
         if live is not None and not (live.done or live.aborted):
             # overlapping windows' read rules do not compose (section 8.3)
@@ -162,5 +190,24 @@ class ReplicaRouter:
         return migration.route_device(session_ids)
 
     def table_blob(self) -> str:
-        """The only state frontends need to share (kilobytes)."""
+        """The only state frontends need to share (kilobytes).
+
+        Valid for "asura" (the blob IS the placement state), "ch" and
+        "wrh" (their tables derive deterministically from the blob's
+        membership).  Random slicing is HISTORY-dependent -- its interval
+        table lives in the engine shadow, not the cluster blob -- so a
+        frontend rebuilt from the blob would route differently; sharing it
+        would silently split ownership, so this raises instead.
+        """
+        if self.algorithm == "rs":
+            raise ValueError(
+                "random slicing's interval table is history-dependent and "
+                "not captured by the cluster blob; rs frontends must share "
+                "the router (or replay the same membership sequence), not "
+                "table_blob()"
+            )
         return self.cluster.to_json()
+
+
+# the name the quickstart / head-to-head docs use
+Router = ReplicaRouter

@@ -1,0 +1,326 @@
+"""Baseline device backends (DESIGN.md section 9): oracle bit-identity for
+the CH / WRH / RS kernels, the engine's (algorithm, version) LRU keying,
+zero-host-sync device paths, and the router/coordinator threading."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    PlacementEngine,
+    RandomSlicingTable,
+    build_ring,
+    ch_place_np,
+    make_cluster,
+    make_uniform_cluster,
+    rs_place_np,
+    wrh_place_np,
+)
+from repro.core.wrh import neg_log2_q16_np
+from repro.kernels.baselines import (
+    baseline_place_on_table_device,
+    ch_table_prep,
+    rs_table_prep,
+    wrh_table_prep,
+)
+
+MIXED = [1.0, 2.5, 0.5, 1.0, 3.0, 0.25, 1.75]
+
+
+def _scrambled(n: int) -> np.ndarray:
+    return (np.arange(n, dtype=np.uint64) * 2654435761 % (2**32)).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bit-identity vs the NumPy oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("batch", [0, 1, 7, 129, 515])
+def test_ch_kernel_bit_identical(use_pallas, batch):
+    ring, owners = build_ring(range(17), 37)
+    ids = _scrambled(batch)
+    got = np.asarray(
+        baseline_place_on_table_device(
+            "ch", ids, *ch_table_prep(ring, owners), use_pallas=use_pallas
+        )
+    )
+    assert got.shape == (batch,)
+    assert np.array_equal(got, ch_place_np(ids, ring, owners) if batch else got)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_ch_kernel_exact_lane_multiple_ring_wraps(use_pallas):
+    """A 128-entry ring gets no padding, so the explicit idx == n -> 0 wrap
+    must fire for ids hashing past the last ring point."""
+    ring, owners = build_ring(range(16), 8)  # 16 * 8 = 128 = LANE
+    assert ring.shape[0] % 128 == 0
+    ids = _scrambled(4096)
+    got = np.asarray(
+        baseline_place_on_table_device(
+            "ch", ids, *ch_table_prep(ring, owners), use_pallas=use_pallas
+        )
+    )
+    assert np.array_equal(got, ch_place_np(ids, ring, owners))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("batch", [0, 1, 7, 129, 515])
+def test_rs_kernel_bit_identical(use_pallas, batch):
+    table = RandomSlicingTable({i: c for i, c in enumerate(MIXED)})
+    table.rebalance({**table.weights, 99: 2.0})  # splits -> non-trivial table
+    starts, owners = table.starts_owners()
+    ids = _scrambled(batch)
+    got = np.asarray(
+        baseline_place_on_table_device(
+            "rs", ids, *rs_table_prep(starts, owners), use_pallas=use_pallas
+        )
+    )
+    assert got.shape == (batch,)
+    assert np.array_equal(got, rs_place_np(ids, starts, owners) if batch else got)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("batch", [0, 1, 7, 129, 515])
+def test_wrh_kernel_bit_identical_weighted(use_pallas, batch):
+    nodes = np.arange(len(MIXED), dtype=np.uint32)
+    weights = np.asarray(MIXED, dtype=np.float32)
+    ids = _scrambled(batch)
+    got = np.asarray(
+        baseline_place_on_table_device(
+            "wrh", ids, *wrh_table_prep(nodes, weights), use_pallas=use_pallas
+        )
+    )
+    assert got.shape == (batch,)
+    assert np.array_equal(got, wrh_place_np(ids, nodes, weights) if batch else got)
+
+
+def test_wrh_fixed_point_log_accuracy():
+    """The Q16 square-and-shift -log2 tracks the float log to ~2**-16."""
+    h = _scrambled(4096)
+    L = neg_log2_q16_np(h).astype(np.float64) / 2**16
+    u = (2 * (h.astype(np.uint64) >> 9) + 1).astype(np.float64) / 2**24
+    assert np.all(L > 0)
+    assert np.max(np.abs(L - (-np.log2(u)))) < 2**-15
+
+
+def test_wrh_capacity_weighting():
+    nodes = np.arange(4, dtype=np.uint32)
+    w = np.asarray([2.0, 1.0, 1.0, 1.0], dtype=np.float32)
+    placed = wrh_place_np(np.arange(100_000, dtype=np.uint32), nodes, w)
+    frac0 = (placed == 0).mean()
+    assert 0.37 < frac0 < 0.43  # 2 / (2+1+1+1)
+
+
+# ---------------------------------------------------------------------------
+# Random slicing table invariants
+# ---------------------------------------------------------------------------
+
+
+def test_rs_table_covers_circle_exactly():
+    t = RandomSlicingTable({i: c for i, c in enumerate(MIXED)})
+    starts, owners = t.starts_owners()
+    assert starts[0] == 0
+    assert np.all(np.diff(starts.astype(np.int64)) > 0)
+    assert owners.min() >= 0
+    lengths = [length for _, length, _ in t._intervals]
+    assert sum(lengths) == 2**32
+
+
+def test_rs_optimal_movement_add_remove():
+    ids = _scrambled(50_000)
+    t = RandomSlicingTable({i: 1.0 for i in range(20)})
+    before = t.place(ids)
+    t.rebalance({**t.weights, 20: 1.0})
+    after = t.place(ids)
+    moved = before != after
+    assert np.all(after[moved] == 20)  # moves only TO the new node
+    assert abs(moved.mean() - 1 / 21) < 0.005
+    before = after
+    t.rebalance({n: w for n, w in t.weights.items() if n != 5})
+    after = t.place(ids)
+    moved = before != after
+    assert np.all(before[moved] == 5)  # moves only OFF the removed node
+    assert abs(moved.mean() - 1 / 21) < 0.005
+
+
+def test_rs_rebalance_is_deterministic():
+    a = RandomSlicingTable({i: c for i, c in enumerate(MIXED)})
+    b = RandomSlicingTable({i: c for i, c in enumerate(MIXED)})
+    for table in (a, b):
+        table.rebalance({**table.weights, 50: 1.25})
+    sa, oa = a.starts_owners()
+    sb, ob = b.starts_owners()
+    assert np.array_equal(sa, sb) and np.array_equal(oa, ob)
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatch: every backend bit-identical to the numpy oracle path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["ch", "wrh", "rs"])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_engine_baseline_backend_matches_numpy(algorithm, backend):
+    ids = _scrambled(1000)
+    host = PlacementEngine(
+        make_cluster(MIXED), backend="numpy", algorithm=algorithm
+    ).place_nodes(ids)
+    dev = PlacementEngine(
+        make_cluster(MIXED), backend=backend, algorithm=algorithm
+    ).place_nodes(ids)
+    assert host.dtype == np.int64
+    assert np.array_equal(host, dev)
+
+
+def test_engine_baseline_pinned_version_accounting():
+    """place_nodes_at pins the v table: bit-equal to what place_nodes gave
+    while v was current, after the cluster moved on."""
+    ids = _scrambled(2000)
+    for algorithm in ("ch", "wrh", "rs"):
+        cluster = make_cluster(MIXED)
+        engine = PlacementEngine(cluster, backend="numpy", algorithm=algorithm)
+        before = engine.place_nodes(ids)
+        v0 = cluster.version
+        cluster.add_node(50, 1.5)
+        after = engine.place_nodes(ids)
+        assert np.array_equal(engine.place_nodes_at(ids, v0), before)
+        assert not np.array_equal(before, after)  # the event moved something
+
+
+# ---------------------------------------------------------------------------
+# (algorithm, version) LRU keying
+# ---------------------------------------------------------------------------
+
+
+def test_engine_lru_keyed_on_algorithm_and_version():
+    cluster = make_cluster(MIXED)
+    engine = PlacementEngine(cluster, backend="numpy")
+    ids = _scrambled(64)
+    engine.place_nodes(ids, algorithm="asura")
+    engine.place_nodes(ids, algorithm="ch")
+    assert engine.uploads == 2  # one artifact per (algorithm, version)
+    art_ch = engine.artifact("ch")
+    art_asura = engine.artifact("asura")
+    assert engine.uploads == 2  # both served from cache
+    assert art_ch is not art_asura
+    assert art_ch.version == art_asura.version  # same version, no aliasing
+    # repeated same-version placements re-materialize nothing
+    engine.place_nodes(ids, algorithm="ch")
+    engine.place_nodes(ids, algorithm="asura")
+    assert engine.uploads == 2
+
+
+def test_asura_uploads_do_not_evict_baseline_artifact():
+    """Churning MORE asura versions than the cache holds must leave the CH
+    artifact of the original version untouched (per-algorithm LRUs)."""
+    cluster = make_cluster(MIXED)
+    engine = PlacementEngine(cluster, backend="numpy", cache_versions=2)
+    ids = _scrambled(64)
+    v0 = cluster.version
+    ch_before = engine.place_nodes(ids, algorithm="ch")
+    art0 = engine.artifact("ch")
+    for i in range(4):  # 4 new asura versions through a 2-deep LRU
+        cluster.add_node(100 + i, 1.0)
+        engine.place_nodes(ids, algorithm="asura")
+    # the v0 CH artifact is still cached (same object), no rebuild
+    uploads = engine.uploads
+    assert engine.artifact_for(v0, "ch") is art0
+    assert engine.uploads == uploads
+    assert np.array_equal(engine.place_nodes_at(ids, v0, algorithm="ch"), ch_before)
+    # but asura's own v0 artifact was evicted by the churn
+    with pytest.raises(KeyError):
+        engine.artifact_for(v0, "asura")
+
+
+def test_asura_segment_methods_guarded_on_baseline_engine():
+    engine = PlacementEngine(make_cluster(MIXED), backend="numpy", algorithm="ch")
+    with pytest.raises(ValueError, match="ASURA-only"):
+        engine.place([1, 2, 3])
+    with pytest.raises(ValueError, match="ASURA-only"):
+        engine.place_replicas([1, 2, 3], 2)
+    with pytest.raises(ValueError, match="ASURA-only"):
+        engine.place_device(jnp.arange(4, dtype=jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Zero host syncs on the baseline device paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["ch", "wrh", "rs"])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_baseline_device_path_zero_host_transfers(algorithm, backend, monkeypatch):
+    """After warm-up, repeated ``place_nodes_device`` calls with device-
+    resident ids must not touch the host: ``jax.transfer_guard('disallow')``
+    rejects uploads, an ``np.asarray`` tripwire catches reads."""
+    engine = PlacementEngine(make_cluster(MIXED), backend=backend, algorithm=algorithm)
+    ids = jnp.arange(4096, dtype=jnp.uint32)
+    engine.place_nodes_device(ids).block_until_ready()  # warm + compile
+    assert engine.uploads == 1
+
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        for _ in range(3):
+            nodes = engine.place_nodes_device(ids)
+            nodes.block_until_ready()
+    monkeypatch.undo()
+    assert isinstance(nodes, jax.Array)
+    assert not host_reads, f"device path touched the host: {len(host_reads)} reads"
+    assert engine.uploads == 1
+
+
+# ---------------------------------------------------------------------------
+# Router / coordinator threading
+# ---------------------------------------------------------------------------
+
+
+def test_router_algorithm_threading():
+    from repro.serve import Router
+
+    caps = {0: 1.0, 1: 2.0, 2: 1.0}
+    ids = _scrambled(3000)
+    router = Router(caps, algorithm="ch", virtual_nodes=64)
+    ring, owners = build_ring(sorted(caps), 64)
+    assert np.array_equal(router.route(ids), ch_place_np(ids, ring, owners))
+    # ASURA-only surfaces raise cleanly under a baseline algorithm
+    with pytest.raises(ValueError):
+        router.route_replicas(ids[:8], 2)
+    with pytest.raises(ValueError):
+        router.begin_scale_migration(ids[:8], add=(9, 1.0))
+    # generic scale planning still works (before/after owner diff)
+    plan = router.plan_scale_event(ids, add=(3, 1.0))
+    assert plan.n_reprefills > 0
+    # ch/wrh blobs rebuild deterministic tables; rs is history-dependent
+    assert router.table_blob()
+    with pytest.raises(ValueError, match="history-dependent"):
+        Router(caps, algorithm="rs").table_blob()
+
+
+@pytest.mark.parametrize("algorithm", ["wrh", "rs"])
+def test_coordinator_baseline_movement_accounting(algorithm):
+    from repro.runtime.elastic import ElasticCoordinator
+
+    ids = _scrambled(20_000)
+    cluster = make_uniform_cluster(12)
+    coord = ElasticCoordinator(cluster, ids, algorithm=algorithm)
+    plan = coord.add_node(12, 1.0)
+    assert plan.n_moves > 0
+    assert all(dst == 12 for _, dst in plan.moves.values())
+    assert abs(plan.n_moves / len(ids) - 1 / 13) < 0.01  # ~optimal fraction
+    plan = coord.remove_node(3)
+    assert all(src == 3 for src, _ in plan.moves.values())
+    # owner table tracked the events: a no-change re-place matches it
+    assert np.array_equal(coord.owners(), coord.engine.place_nodes(ids, algorithm=algorithm))
+    with pytest.raises(ValueError, match="ASURA"):
+        coord.add_node_live(99, 1.0)

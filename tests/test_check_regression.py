@@ -1,0 +1,206 @@
+"""The CI perf-regression gate (benchmarks/check_regression.py): clean runs
+pass, an injected 2x slowdown fails, new entries warn only, and the
+direction policy follows the entry unit."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import (
+    calibration_ratio,
+    check_dirs,
+    compare_entries,
+    direction,
+    main,
+)
+
+
+def _payload(entries: dict) -> dict:
+    return {
+        "suite": "head_to_head",
+        "quick": True,
+        "elapsed_s": 1.0,
+        "entries": {
+            name: {"value": value, "unit": unit}
+            for name, (value, unit) in entries.items()
+        },
+    }
+
+
+BASE = _payload(
+    {
+        "h2h_calc_asura_n32": (10.0, "us_per_id"),
+        "h2h_calc_ch_n32": (20.0, "us_per_id"),
+        "migrate_stream_ids_per_s": (1_000_000, "ids_per_s"),
+        "h2h_uniformity_asura_n32_dpn500": (9.5, "maxvar_pct"),
+        "h2h_move_add_asura_wrong_dest": (0, "must_be_0_if_optimal"),
+    }
+)
+
+
+def test_direction_policy():
+    assert direction("us_per_id") == "lower"
+    assert direction("us_per_call") == "lower"
+    assert direction("bytes") == "lower"
+    assert direction("ids_per_s") == "higher"
+    assert direction("an_prefilter") == "skip"  # derived-note units skipped
+    assert direction("maxvar_pct") == "skip"
+    assert direction("must_be_0_if_optimal") == "skip"
+
+
+def test_clean_run_passes():
+    failures, warnings = compare_entries(BASE, BASE)
+    assert failures == [] and warnings == []
+
+
+def test_injected_2x_slowdown_fails():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["h2h_calc_asura_n32"]["value"] = 20.0  # 2x slower
+    failures, _ = compare_entries(BASE, fresh)
+    assert len(failures) == 1
+    assert "h2h_calc_asura_n32" in failures[0]
+
+
+def test_throughput_halving_fails():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["migrate_stream_ids_per_s"]["value"] = 400_000
+    failures, _ = compare_entries(BASE, fresh)
+    assert len(failures) == 1
+    assert "migrate_stream_ids_per_s" in failures[0]
+
+
+def test_within_threshold_noise_passes():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["h2h_calc_asura_n32"]["value"] = 12.0  # +20% < +25%
+    fresh["entries"]["migrate_stream_ids_per_s"]["value"] = 850_000
+    failures, _ = compare_entries(BASE, fresh)
+    assert failures == []
+
+
+def test_quality_metric_swings_are_not_gated():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["h2h_uniformity_asura_n32_dpn500"]["value"] = 50.0
+    failures, _ = compare_entries(BASE, fresh)
+    assert failures == []
+
+
+def test_new_and_retired_entries_warn_only():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["h2h_calc_rs_n32"] = {"value": 5.0, "unit": "us_per_id"}
+    del fresh["entries"]["h2h_calc_ch_n32"]
+    failures, warnings = compare_entries(BASE, fresh)
+    assert failures == []
+    assert any("new entry" in w for w in warnings)
+    assert any("missing from fresh" in w for w in warnings)
+
+
+CAL_BASE = _payload(
+    {
+        "h2h_calibration": (100.0, "us_calibration"),
+        "h2h_calc_asura_n32": (10.0, "us_per_id"),
+        "migrate_stream_ids_per_s": (1_000_000, "ids_per_s"),
+        "h2h_memory_ch_n100": (80_000, "bytes"),
+    }
+)
+
+
+def _with(payload, **values):
+    out = json.loads(json.dumps(payload))
+    for name, value in values.items():
+        out["entries"][name]["value"] = value
+    return out
+
+
+def test_calibration_entry_is_never_gated():
+    assert direction("us_calibration") == "skip"
+    fresh = _with(CAL_BASE, h2h_calibration=900.0)  # 9x, alone not a failure
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert failures == []
+
+
+def test_calibration_normalizes_slow_runner():
+    """A uniformly 2x-slower machine (calibration 2x) is NOT a regression."""
+    fresh = _with(
+        CAL_BASE,
+        h2h_calibration=200.0,
+        h2h_calc_asura_n32=20.0,
+        migrate_stream_ids_per_s=500_000,
+    )
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert failures == []
+    # ...but a 4x slowdown on a 2x-slower machine is a real 2x regression
+    fresh = _with(CAL_BASE, h2h_calibration=200.0, h2h_calc_asura_n32=40.0)
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert len(failures) == 1 and "h2h_calc_asura_n32" in failures[0]
+
+
+def test_faster_runner_cannot_mask_regression():
+    """Machine got 2x faster but the timing stayed flat -> the code is
+    2x slower speed-adjusted, and the gate says so."""
+    fresh = _with(CAL_BASE, h2h_calibration=50.0)  # timings unchanged
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert any("h2h_calc_asura_n32" in f for f in failures)
+
+
+def test_bytes_entries_compare_raw_despite_calibration():
+    """Deterministic size entries are machine-independent: a slower runner
+    must not excuse a genuinely bigger table."""
+    fresh = _with(CAL_BASE, h2h_calibration=200.0, h2h_memory_ch_n100=160_000)
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert any("h2h_memory_ch_n100" in f for f in failures)
+
+
+def test_calibration_ratio_clamped():
+    base = CAL_BASE["entries"]
+    fresh = _with(CAL_BASE, h2h_calibration=100_000.0)["entries"]
+    assert calibration_ratio(base, fresh) == 8.0
+    fresh = _with(CAL_BASE, h2h_calibration=0.001)["entries"]
+    assert calibration_ratio(base, fresh) == 1 / 8
+    assert calibration_ratio(BASE["entries"], BASE["entries"]) == 1.0
+
+
+def test_custom_threshold():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["entries"]["h2h_calc_asura_n32"]["value"] = 11.5  # +15%
+    assert compare_entries(BASE, fresh, threshold=1.10)[0]
+    assert not compare_entries(BASE, fresh, threshold=1.25)[0]
+
+
+def _write(path, payload):
+    path.write_text(json.dumps(payload))
+
+
+def test_check_dirs_and_main_exit_codes(tmp_path):
+    base_dir = tmp_path / "baselines"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    _write(base_dir / "BENCH_head_to_head.json", BASE)
+    _write(fresh_dir / "BENCH_head_to_head.json", BASE)
+    failures, warnings = check_dirs(str(base_dir), str(fresh_dir))
+    assert failures == []
+    assert main(["--baseline-dir", str(base_dir), "--fresh-dir", str(fresh_dir)]) == 0
+
+    slow = json.loads(json.dumps(BASE))
+    slow["entries"]["h2h_calc_ch_n32"]["value"] = 41.0  # > 2x
+    _write(fresh_dir / "BENCH_head_to_head.json", slow)
+    failures, _ = check_dirs(str(base_dir), str(fresh_dir))
+    assert len(failures) == 1
+    assert main(["--baseline-dir", str(base_dir), "--fresh-dir", str(fresh_dir)]) == 1
+
+
+def test_missing_fresh_file_warns_not_fails(tmp_path):
+    base_dir = tmp_path / "baselines"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    _write(base_dir / "BENCH_movement.json", BASE)
+    failures, warnings = check_dirs(str(base_dir), str(fresh_dir))
+    assert failures == []
+    assert any("did not emit" in w for w in warnings)
+
+
+def test_empty_baseline_dir_warns(tmp_path):
+    failures, warnings = check_dirs(str(tmp_path), str(tmp_path))
+    assert failures == []
+    assert any("nothing gated" in w for w in warnings)
