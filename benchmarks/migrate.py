@@ -1,9 +1,13 @@
-"""Migration subsystem benchmarks (DESIGN.md section 8).
+"""Migration subsystem benchmarks (DESIGN.md sections 8, 10).
 
 Covers the two layers ``movement.py`` does not: the throttled mover's
 drain (rounds + rows/s under per-node budgets) and the dual-version
 serving window (migration-window routing throughput and the landed
-fraction it exposes).  ``--quick`` shrinks populations for the CI smoke.
+fraction it exposes) -- plus the REPLICA-SET path: a node failure
+repaired as a throttled per-slot replica migration and the
+mixed-version ``route_replicas`` read rule.  A ``migrate_calibration``
+entry lets the CI perf gate normalize the timed entries by machine
+speed.  ``--quick`` shrinks populations for the CI smoke.
 """
 
 from __future__ import annotations
@@ -15,8 +19,64 @@ import numpy as np
 from repro.core import make_uniform_cluster
 from repro.runtime import ElasticCoordinator
 
+from .head_to_head import calibration_us
+
+
+def _replica_entries(csv_print, quick: bool) -> None:
+    n_nodes = 12 if quick else 48
+    n_ids = 30_000 if quick else 400_000
+    budget = 100 if quick else 1_500
+    R = 3
+
+    cluster = make_uniform_cluster(n_nodes)
+    ids = np.arange(n_ids, dtype=np.uint32)
+    coord = ElasticCoordinator(cluster, ids, n_replicas=R)
+
+    # node failure -> throttled replica repair (per-slot plan, src = victim)
+    t0 = time.perf_counter()
+    mig = coord.remove_node_live(1, ingress=budget)
+    csv_print(
+        "migrate_replica_repair_plan_s",
+        round(time.perf_counter() - t0, 4),
+        f"R{R}_remove_numbers",
+    )
+    plan = mig.state.plan
+    csv_print(
+        "migrate_replica_moved_pct",
+        100 * plan.n_moves / (R * n_ids),
+        f"optimal {100/n_nodes:.3f}",
+    )
+    sample = ids[:: max(1, n_ids // 5_000)]
+    t0 = time.perf_counter()
+    while not mig.done:
+        mig.round()
+        mig.route_replicas(sample)
+    dt = time.perf_counter() - t0
+    csv_print(
+        "migrate_replica_repair_rows_per_s", int(plan.n_moves / dt), "rows_per_s"
+    )
+    csv_print("migrate_replica_repair_rounds", mig.mover.rounds_done, f"ingress {budget}")
+
+    # mixed-version replica routing throughput at half-drain
+    mig2 = coord.add_node_live(n_nodes + 1, 1.0, egress=budget)
+    while not mig2.done and mig2.state.n_pending > mig2.state.plan.n_moves // 2:
+        mig2.round()
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        mig2.route_replicas(sample)
+    dt = time.perf_counter() - t0
+    csv_print(
+        "migrate_route_replicas_ids_per_s",
+        int(reps * len(sample) / dt),
+        "ids_per_s",
+    )
+    if not mig2.done:
+        mig2.run()
+
 
 def run(csv_print, quick: bool = False) -> None:
+    csv_print("migrate_calibration", calibration_us(), "us_calibration")
     n_nodes = 16 if quick else 64
     n_ids = 100_000 if quick else 2_000_000
     budget = 200 if quick else 2_000
@@ -65,3 +125,5 @@ def run(csv_print, quick: bool = False) -> None:
     csv_print("migrate_route_ids_per_s", int(reps * len(sample) / dt), "dual_version")
     if not mig2.done:
         mig2.run()
+
+    _replica_entries(csv_print, quick)

@@ -8,8 +8,16 @@ removal), and verifies the direction constraint (moves only to the new node
 Also benchmarks the migration subsystem's device streaming planner
 (DESIGN.md section 8) at scale: moved fraction vs optimal and planner
 throughput (ids/s) for the chunked dual-version diff sweep, with and
-without the ADDITION-NUMBER prefilter.  ``--quick`` shrinks every
-population for the CI smoke."""
+without the ADDITION-NUMBER prefilter.
+
+REPLICA movement (DESIGN.md section 10): the paper's characteristic 1
+claims minimal movement *even if data are replicated* -- the
+``move_*_replica_*`` entries measure the per-slot replica planner on
+add/remove events against the brute-force minimal set diff (excess must
+be 0) and the direction constraints (no wrong-direction replica moves),
+plus replica-planner throughput.  A ``movement_calibration`` entry lets
+the CI perf gate normalize the timed entries by machine speed.
+``--quick`` shrinks every population for the CI smoke."""
 
 from __future__ import annotations
 
@@ -25,6 +33,8 @@ from repro.core import (
 )
 from repro.migrate import MigrationPlanner
 
+from .head_to_head import calibration_us
+
 N_NODES = 50
 N_DATA = 200_000
 
@@ -32,6 +42,11 @@ N_DATA = 200_000
 PLANNER_NODES = 1024
 PLANNER_IDS = 10_000_000
 PLANNER_CHUNK = 1 << 20
+
+# Replica-movement scale point (ISSUE-5): R-way sets, host planner path.
+REPLICA_NODES = 40
+REPLICA_IDS = 100_000
+N_REPLICAS = 3
 
 
 def _classic_comparisons(csv_print, n_nodes: int, n_data: int) -> None:
@@ -111,10 +126,62 @@ def _streaming_planner(csv_print, n_nodes: int, n_ids: int, chunk: int) -> None:
     csv_print("migrate_prefilter_ids_per_s", int(n_ids / dt), "an_prefilter")
 
 
+def _replica_movement(csv_print, n_nodes: int, n_ids: int, n_replicas: int) -> None:
+    """Section-5 replica movement: per-slot plans vs the minimal set diff."""
+    ids = np.arange(n_ids, dtype=np.uint32)
+    cluster = make_uniform_cluster(n_nodes)
+    engine = cluster.engine
+    planner = MigrationPlanner(engine)
+    mass = n_replicas * n_ids
+
+    before = engine.place_replica_nodes(ids, n_replicas)
+    v0 = cluster.version
+    cluster.add_node(n_nodes, 1.0)
+    t0 = time.perf_counter()
+    plan = planner.plan_replicas(ids, v0, cluster.version, n_replicas)
+    dt = time.perf_counter() - t0
+    after = engine.place_replica_nodes(ids, n_replicas)
+    minimal = int((~(after[:, :, None] == before[:, None, :]).any(axis=2)).sum())
+    csv_print(
+        "move_add_replica_pct",
+        100 * plan.n_moves / mass,
+        f"R{n_replicas}_optimal {100/(n_nodes+1):.2f}",
+    )
+    csv_print("move_add_replica_excess", plan.n_moves - minimal, "must_be_0")
+    csv_print(
+        "move_add_replica_wrong_dest",
+        int((plan.dst != n_nodes).sum()),
+        "must_be_0",
+    )
+    csv_print("move_replica_plan_ids_per_s", int(n_ids / dt), "ids_per_s")
+
+    before = after
+    victim = 7
+    v1 = cluster.version
+    cluster.remove_node(victim)
+    plan = planner.plan_replicas(ids, v1, cluster.version, n_replicas)
+    after = engine.place_replica_nodes(ids, n_replicas)
+    minimal = int((~(after[:, :, None] == before[:, None, :]).any(axis=2)).sum())
+    csv_print(
+        "move_rm_replica_pct",
+        100 * plan.n_moves / mass,
+        f"R{n_replicas}_optimal {100/(n_nodes+1):.2f}",
+    )
+    csv_print("move_rm_replica_excess", plan.n_moves - minimal, "must_be_0")
+    csv_print(
+        "move_rm_replica_wrong_src",
+        int((plan.src != victim).sum()),
+        "must_be_0",
+    )
+
+
 def run(csv_print, quick: bool = False) -> None:
+    csv_print("movement_calibration", calibration_us(), "us_calibration")
     if quick:
         _classic_comparisons(csv_print, n_nodes=20, n_data=20_000)
         _streaming_planner(csv_print, n_nodes=128, n_ids=200_000, chunk=1 << 16)
+        _replica_movement(csv_print, n_nodes=16, n_ids=20_000, n_replicas=3)
     else:
         _classic_comparisons(csv_print, N_NODES, N_DATA)
         _streaming_planner(csv_print, PLANNER_NODES, PLANNER_IDS, PLANNER_CHUNK)
+        _replica_movement(csv_print, REPLICA_NODES, REPLICA_IDS, N_REPLICAS)

@@ -2,11 +2,17 @@
 
 Simulates the full fault-tolerance story on a 10-node storage cluster:
 save a model checkpoint with 3-way ASURA replication, kill nodes (crash =
-no drain), repair with provably-minimal movement, then grow the cluster as
-a THROTTLED LIVE MIGRATION (DESIGN.md section 8): the minimal chunk set
-drains under a per-node ingress budget, round by round on a simulated
-clock, while reads keep restoring bit-identical state through the
-dual-version read rule -- no atomic table swap, no serving gap.
+no drain), then repair and grow the cluster as THROTTLED LIVE MIGRATIONS
+(DESIGN.md sections 8, 10) whose unit of work is a REPLICA SLOT:
+
+  * a node FAILURE becomes a throttled replica repair -- exactly the dead
+    node's replica mass re-replicates, a bandwidth-budgeted batch of
+    copies per round (the per-round (src, dst) matrices print below),
+    while the surviving two replicas of every chunk keep serving reads,
+  * growing the cluster drains the minimal per-slot chunk set under an
+    ingress budget while reads keep restoring bit-identical state through
+    the mixed-version replica read rule -- no atomic table swap, no
+    serving gap.
 
 Run:  PYTHONPATH=src python examples/elastic_storage.py
 """
@@ -42,22 +48,48 @@ def main() -> None:
     assert all(np.array_equal(out[k], state[k]) for k in state)
     print("restored bit-identical with nodes 2 and 7 DOWN")
 
-    # repair: re-replicate exactly the dead nodes' chunks
-    for victim in (2, 7):
-        moved = store.remove_node_and_repair(victim)
-        print(f"repaired node {victim}: {moved} chunk copies re-replicated (minimal)")
+    # repair node 2 as a THROTTLED REPLICA MIGRATION: only its replica
+    # mass re-replicates (per-slot plan, every flow sourced at the victim),
+    # 6 copies per destination per round, readable the whole time
+    clock = {"now": 0.0}
+    repair = store.begin_remove_node(
+        2, ingress=6, clock=lambda: clock["now"], round_seconds=1.0
+    )
+    plan = repair.live.state.plan
+    print(
+        f"repairing node 2 live: {plan.n_moves} replica copies to rebuild "
+        f"(per-slot plan over {plan.n_scanned} affected chunks), ingress 6/round"
+    )
+    while not repair.done:
+        clock["now"] += 1.0
+        for matrix in repair.pump():
+            flows = " ".join(
+                f"n{s}->n{d}:{c}" for (s, d), c in sorted(matrix.items())
+            )
+            print(f"  t={clock['now']:>3.0f}s  repair moved {flows}")
+        # mid-repair reads fall back to the surviving replicas of the
+        # degraded slots -- restores stay bit-identical every round
+        out = mgr.restore(100, state)
+        assert all(np.array_equal(out[k], state[k]) for k in state)
+    print(f"node 2 repaired: {repair.copies_moved} copies (minimal replica mass)")
+
+    # the second victim repairs atomically (the instantaneous variant)
+    moved = store.remove_node_and_repair(7)
+    print(f"repaired node 7 atomically: {moved} chunk copies re-replicated")
     print("usage:", cluster_usage(store))
 
-    # grow the cluster LIVE: only the new node's share moves, throttled to
-    # an ingress budget of 8 chunk copies per round, served throughout
-    clock = {"now": 0.0}
+    # grow the cluster LIVE: only the new node's share moves (per replica
+    # slot), throttled to an ingress budget of 8 copies per round, served
+    # throughout
+    clock["now"] = 0.0
     migration = store.begin_add_node(
         20, capacity=2.0, ingress=8, clock=lambda: clock["now"], round_seconds=1.0
     )
     plan = migration.live.state.plan
     print(
         f"added node 20 (cap 2.0) as a live migration: "
-        f"{plan.n_moves}/{plan.n_scanned} chunks to move, ingress budget 8/round"
+        f"{plan.n_moves} replica copies over {plan.n_scanned} chunks to "
+        f"move, ingress budget 8/round"
     )
     while not migration.done:
         clock["now"] += 1.0

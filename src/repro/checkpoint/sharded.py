@@ -30,8 +30,8 @@ import jax
 import numpy as np
 
 from repro.core import Cluster
-from repro.core.asura import remove_numbers
 from repro.core.rng import fmix32_scalar
+from repro.migrate import DrainDriver
 
 CHUNK_BYTES = 1 << 20  # 1 MiB chunks, the paper's example datum unit
 
@@ -117,31 +117,37 @@ class AsuraCheckpointStore:
         for key, blob, nodes in zip(keys, blobs, placements):
             if self._migration is not None:
                 # Write through the migration window: a pending chunk must
-                # be overwritten where READERS are routed (its v replica
-                # set) -- the fresh blob then rides the landing copy to the
-                # v+1 set (``StoreMigration._land`` prefers the live copy,
-                # and the refreshed snapshot keeps even the all-sources-died
-                # fallback from resurrecting the stale bytes).
+                # be overwritten where READERS are routed (its mixed-version
+                # replica set) -- the fresh blob then rides the landing copy
+                # to the v+1 owners (``StoreMigration._land`` prefers the
+                # live copy, and the refreshed snapshot keeps even the
+                # all-sources-died fallback from resurrecting stale bytes).
                 row = self._migration.read_row(int(key))
                 if row is not None:
                     nodes = row
                     self._migration._blobs[int(key)] = blob
             for nid in nodes:
-                self.nodes[int(nid)].put(int(key), blob)
+                # a served set may still name a REMOVED node mid-repair
+                # (its pending slots); skip it -- the fresh blob rides the
+                # landing copy.  Dead-but-registered nodes still raise.
+                node = self.nodes.get(int(nid))
+                if node is not None:
+                    node.put(int(key), blob)
 
     def get_chunk(self, key: int) -> bytes:
         nodes = None
         if self._migration is not None:
-            # Migration-window read rule (DESIGN.md section 8): a moving
-            # chunk is read from its v replica set until its copy lands,
-            # from its v+1 set after -- the set that actually holds it.
+            # Migration-window read rule (DESIGN.md sections 8, 10): each
+            # replica SLOT of a moving chunk is read from its v-side source
+            # until its copy lands, from its v+1 owner after -- the set
+            # that actually holds it, mixed-version mid-drain.
             nodes = self._migration.read_row(int(key))
         if nodes is None:
             nodes = self.replicas_for(np.array([key], dtype=np.uint32))[0]
         errors = []
         for nid in nodes:  # primary first, replicas on failure
-            node = self.nodes[int(nid)]
-            if not node.alive:
+            node = self.nodes.get(int(nid))
+            if node is None or not node.alive:
                 errors.append(f"node {nid} down")
                 continue
             try:
@@ -165,42 +171,68 @@ class AsuraCheckpointStore:
                 "membership event"
             )
 
+    def _affected_by_removal(self, keys: np.ndarray, node_id: int) -> np.ndarray:
+        """Keys whose replica set includes the victim, via one vectorized
+        REMOVE-NUMBER sweep (section 2.D: a chunk is affected iff one of
+        its remove numbers names a victim segment) -- the engine-path
+        ``remove_numbers_batch``, not a per-key scalar trace."""
+        if keys.size == 0:
+            return keys
+        victim_segments = np.asarray(
+            sorted(self.cluster.nodes[node_id].segments), dtype=np.int64
+        )
+        rn = self.engine.remove_numbers_batch(keys, self.n_replicas)
+        return keys[np.isin(rn, victim_segments).any(axis=1)]
+
     def remove_node_and_repair(self, node_id: int) -> int:
         """Remove a node; re-replicate exactly the chunks it held.
 
-        Uses REMOVE NUMBERS (paper section 2.D): a chunk needs repair iff one
-        of its remove numbers is a segment of the removed node.  Returns the
-        number of chunk copies moved (provably minimal)."""
+        Uses REMOVE NUMBERS (paper section 2.D): a chunk needs repair iff
+        one of its remove numbers is a segment of the removed node --
+        computed for the whole key population in one vectorized
+        ``remove_numbers_batch`` sweep.  Returns the number of chunk copies
+        moved (provably minimal).  ``begin_remove_node`` is the THROTTLED
+        variant (repair as a live replica migration)."""
         self._check_no_migration()
-        victim_segments = set(self.cluster.nodes[node_id].segments)
-        lengths = self.cluster.seg_lengths()
-        node_of = self.cluster.seg_to_node()
         # collect every stored key (any surviving replica knows its blobs)
         all_keys: dict[int, bytes] = {}
         for node in self.nodes.values():
             if node.node_id != node_id and node.alive:
                 all_keys.update(node.blobs)
-        affected = [
-            key
-            for key in all_keys
-            if victim_segments
-            & set(remove_numbers(key, lengths, node_of, self.n_replicas))
-        ]
+        keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
+        affected = self._affected_by_removal(keys, node_id)
         self.cluster.remove_node(node_id)
         dead = self.nodes.pop(node_id)
         dead.alive = False
         moved = 0
-        for key in affected:
-            placements = self.replicas_for(np.array([key], dtype=np.uint32))[0]
-            blob = all_keys[key]
-            for nid in placements:
-                node = self.nodes[int(nid)]
-                # other down-but-not-yet-removed nodes get their copies when
-                # their own removal/repair runs
-                if node.alive and int(key) not in node.blobs:
-                    node.put(int(key), blob)
-                    moved += 1
+        if affected.size:
+            placements = self.replicas_for(affected)  # one vectorized sweep
+            for key, row in zip(affected, placements):
+                blob = all_keys[int(key)]
+                for nid in row:
+                    node = self.nodes[int(nid)]
+                    # other down-but-not-yet-removed nodes get their copies
+                    # when their own removal/repair runs
+                    if node.alive and int(key) not in node.blobs:
+                        node.put(int(key), blob)
+                        moved += 1
         return moved
+
+    def _begin_migration(
+        self, plan, all_keys, *, egress, ingress, clock, round_seconds
+    ) -> "StoreMigration":
+        from repro.migrate import LiveMigration
+
+        live = LiveMigration.from_plan(
+            self.engine,
+            plan,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
+        self._migration = StoreMigration(self, live, all_keys)
+        return self._migration
 
     def begin_add_node(
         self,
@@ -214,60 +246,82 @@ class AsuraCheckpointStore:
     ) -> "StoreMigration":
         """Add storage as a LIVE migration: the same minimal chunk set as
         ``add_node``, but blob copies drain in bandwidth-budgeted rounds
-        while ``get_chunk`` reads through the dual-version rule.  Drive the
-        returned ``StoreMigration`` (``round``/``pump``/``run``); the store
-        detaches it automatically once drained."""
-        from repro.migrate import LiveMigration, MigrationPlan
+        while ``get_chunk`` reads through the dual-version rule.
+
+        The plan is the PER-SLOT replica plan (``plan_replicas``, DESIGN.md
+        section 10): one row per replica copy that actually changes owner,
+        with the vacated v-side node as its source -- so ingress/egress
+        budgets bind on the nodes doing each transfer and the movement
+        matrices account every copy, not one flow per chunk.  The add-node
+        ADDITION-NUMBER prefilter (R-replica trace) shrinks the diff set.
+        Drive the returned ``StoreMigration`` (``round``/``pump``/``run``);
+        the store detaches it automatically once drained."""
+        from repro.migrate import MigrationPlanner
 
         self._check_no_migration()
         all_keys = self._all_blobs()
         keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
-        keys_dev = None
-        if self.engine.backend != "numpy" and keys.size:
-            import jax.numpy as jnp
-
-            keys_dev = jnp.asarray(keys)
         self.engine.artifact()  # pin the v table before mutating
         v_from = self.cluster.version
-        before = self._replica_rows(keys, keys_dev)
-        self.cluster.add_node(node_id, capacity)
+        new_segs = self.cluster.add_node(node_id, capacity)
         self.nodes[node_id] = StorageNode(node_id, capacity)
-        after = self._replica_rows(keys, keys_dev)
-        changed = np.any(np.sort(before, axis=1) != np.sort(after, axis=1), axis=1)
-        rows = np.nonzero(changed)[0]
-        # The throttle accounts each chunk as the copy flow it causes: the
-        # node LOSING a replica -> the node GAINING one (primaries as the
-        # degenerate fallback), so ingress/egress budgets bind on the nodes
-        # actually doing the transfer; the full replica sets drive the blob
-        # copies at land time.
-        src_nodes = np.empty(len(rows), dtype=np.int64)
-        dst_nodes = np.empty(len(rows), dtype=np.int64)
-        for i, row in enumerate(rows):
-            b, a = set(before[row].tolist()), set(after[row].tolist())
-            lost, gained = sorted(b - a), sorted(a - b)
-            src_nodes[i] = lost[0] if lost else int(before[row, 0])
-            dst_nodes[i] = gained[0] if gained else int(after[row, 0])
-        plan = MigrationPlan(
-            v_from=v_from,
-            v_to=self.cluster.version,
-            ids=keys[rows],
-            src=src_nodes,
-            dst=dst_nodes,
-            index=rows.astype(np.int64),
-            n_scanned=int(keys.size),
+        plan = MigrationPlanner(self.engine).plan_replicas(
+            keys,
+            v_from,
+            self.cluster.version,
+            self.n_replicas,
+            max_new_seg=max(new_segs) if new_segs else None,
         )
-        live = LiveMigration.from_plan(
-            self.engine,
+        return self._begin_migration(
             plan,
+            all_keys,
             egress=egress,
             ingress=ingress,
             clock=clock,
             round_seconds=round_seconds,
         )
-        self._migration = StoreMigration(
-            self, live, before[rows], after[rows], all_keys
+
+    def begin_remove_node(
+        self,
+        node_id: int,
+        *,
+        egress=None,
+        ingress=None,
+        clock=None,
+        round_seconds: float = 1.0,
+    ) -> "StoreMigration":
+        """Remove (or repair a failed) node as a LIVE migration.
+
+        The throttled variant of ``remove_node_and_repair``: exactly the
+        victim's replica mass re-replicates -- a per-slot replica plan over
+        the affected keys (one vectorized REMOVE-NUMBER sweep picks them)
+        whose every row sources at the victim -- in bandwidth-budgeted
+        rounds, while ``get_chunk`` keeps reading through the window: a
+        pending slot still names the victim, and the surviving R-1 replicas
+        serve it via the fall-back read, so restores stay bit-identical
+        throughout the degraded window (tested)."""
+        from repro.migrate import MigrationPlanner
+
+        self._check_no_migration()
+        all_keys = self._all_blobs()
+        keys = np.fromiter(all_keys, dtype=np.uint32, count=len(all_keys))
+        self.engine.artifact()  # pin the v table before mutating
+        v_from = self.cluster.version
+        affected = self._affected_by_removal(keys, node_id)
+        self.cluster.remove_node(node_id)
+        dead = self.nodes.pop(node_id)
+        dead.alive = False
+        plan = MigrationPlanner(self.engine).plan_replicas(
+            affected, v_from, self.cluster.version, self.n_replicas
         )
-        return self._migration
+        return self._begin_migration(
+            plan,
+            all_keys,
+            egress=egress,
+            ingress=ingress,
+            clock=clock,
+            round_seconds=round_seconds,
+        )
 
     def add_node(self, node_id: int, capacity: float) -> int:
         """Add storage; migrate exactly the chunks the new node wins."""
@@ -302,86 +356,99 @@ class AsuraCheckpointStore:
         return moved
 
 
-class StoreMigration:
-    """A live storage rebalance: throttled blob copies + read-through.
+class StoreMigration(DrainDriver):
+    """A live storage rebalance: throttled PER-SLOT blob copies +
+    read-through (DESIGN.md section 10).
 
-    Wraps a ``LiveMigration`` over the affected chunk keys.  Each round the
-    mover lands a budgeted batch of rows; for every newly landed row the
-    blob is copied to the v+1 replica nodes that lack it and the superseded
-    v copies are garbage-collected (capacity is reclaimed incrementally,
-    not at a final barrier).  ``read_row`` is ``get_chunk``'s window rule:
-    the v replica set while the row is pending, the v+1 set after, ``None``
-    for unaffected keys.
+    Wraps a ``LiveMigration`` over a per-slot replica plan: each row is one
+    replica copy ``(key, slot, src, dst)``.  Each round the mover lands a
+    budgeted batch of rows; every newly landed row copies its blob to the
+    row's destination and garbage-collects the vacated source copy once
+    the destination actually holds it (capacity is reclaimed
+    incrementally, and a destination that died mid-migration never costs
+    the surviving copies -- repair reconciles it later).  ``read_row`` is
+    ``get_chunk``'s window rule: the mixed-version replica set that holds
+    the key right now (``LiveMigration.route_replicas``), ``None`` for
+    unaffected keys.  round/pump/run come from the shared ``DrainDriver``
+    loop; the landing hook rides ``_advance`` so no verb can skip it.
     """
 
-    def __init__(self, store, live, before_rows, after_rows, blobs):
+    def __init__(self, store, live, blobs):
         self.store = store
         self.live = live
-        self._row_of = {int(k): i for i, k in enumerate(live.state.plan.ids)}
-        self._before = before_rows
-        self._after = after_rows
-        self._blobs = blobs  # key -> blob snapshot at plan time
+        self._window_ids = np.unique(live.state.plan.ids)  # sorted
+        self._served_rows = None  # per-round cache of the window's sets
+        self._blobs = blobs  # key -> blob snapshot, refreshed by put_chunks
         self.copies_moved = 0
 
     @property
     def done(self) -> bool:
         return self.live.done
 
+    def _pending_desc(self) -> str:
+        return f"{self.live.state.n_pending} rows pending"
+
     def read_row(self, key: int):
-        row = self._row_of.get(key)
-        if row is None:
+        pos = int(np.searchsorted(self._window_ids, np.uint32(key)))
+        if pos >= len(self._window_ids) or int(self._window_ids[pos]) != int(key):
             return None
-        if self.live.state.landed[row]:
-            return self._after[row]
-        return self._before[row]
+        if self._served_rows is None:
+            # One vectorized replica-route sweep per ROUND for the whole
+            # window (served sets only change when rows land, which
+            # invalidates this cache) -- per-key reads are then O(log n).
+            self._served_rows = self.live.route_replicas(self._window_ids)
+        return self._served_rows[pos]
 
     def _land(self, rows: np.ndarray) -> None:
+        plan = self.live.state.plan
         for row in rows:
-            key = int(self.live.state.plan.ids[row])
-            # Prefer the live copy (the chunk may have been overwritten
-            # mid-migration); the plan-time snapshot is the fallback.
-            blob = self._blobs[key]
-            for nid in self._before[row]:
-                node = self.store.nodes.get(int(nid))
-                if node is not None and node.alive and key in node.blobs:
-                    blob = node.blobs[key]
-                    break
-            new_set = {int(n) for n in self._after[row]}
-            for nid in sorted(new_set):
-                node = self.store.nodes.get(nid)  # tolerate removed nodes
-                if node is not None and node.alive and key not in node.blobs:
-                    node.put(key, blob)
-                    self.copies_moved += 1
-            # GC the superseded v copies ONLY once the v+1 set fully holds
-            # the chunk -- a destination that died or was removed
-            # mid-migration must not cost the surviving copies (repair
-            # reconciles it later).
-            if all(
-                nid in self.store.nodes and key in self.store.nodes[nid].blobs
-                for nid in new_set
+            key = int(plan.ids[row])
+            src = int(plan.src[row])
+            dst = int(plan.dst[row])
+            # Prefer the live copy at the vacated source (the chunk may
+            # have been overwritten mid-migration -- window writes land on
+            # the serving set, which includes the source while pending);
+            # the put_chunks-refreshed snapshot is the fallback.
+            blob = self._blobs.get(key)
+            snode = self.store.nodes.get(src)
+            if snode is not None and snode.alive and key in snode.blobs:
+                blob = snode.blobs[key]
+            dnode = self.store.nodes.get(dst)  # tolerate removed nodes
+            if (
+                blob is not None
+                and dnode is not None
+                and dnode.alive
+                and key not in dnode.blobs
             ):
-                for nid in {int(n) for n in self._before[row]} - new_set:
-                    node = self.store.nodes.get(nid)
-                    if node is not None:
-                        node.blobs.pop(key, None)
+                dnode.put(key, blob)
+                self.copies_moved += 1
+            # GC the vacated copy ONLY once a LIVE destination holds the
+            # chunk -- a dead destination's copy is unreadable and must not
+            # cost the surviving one.
+            if (
+                snode is not None
+                and dnode is not None
+                and dnode.alive
+                and key in dnode.blobs
+            ):
+                snode.blobs.pop(key, None)
 
     def _advance(self, fn) -> list[dict[tuple[int, int], int]]:
         pre = self.live.state.landed.copy()
         matrices = fn()
-        self._land(np.nonzero(self.live.state.landed & ~pre)[0])
+        newly = np.nonzero(self.live.state.landed & ~pre)[0]
+        if newly.size:
+            self._served_rows = None  # landed bits moved the read rule
+        self._land(newly)
         if self.done and self.store._migration is self:
             self.store._migration = None  # detach: table v+1 is now total
         return matrices
 
-    def round(self) -> dict[tuple[int, int], int]:
-        [matrix] = self._advance(lambda: [self.live.round()])
-        return matrix
+    def _round(self) -> dict[tuple[int, int], int]:
+        return self.live.round()
 
-    def pump(self) -> list[dict[tuple[int, int], int]]:
-        return self._advance(self.live.pump)
-
-    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
-        return self._advance(lambda: self.live.run(max_rounds))
+    def _pump_rounds(self) -> list[dict[tuple[int, int], int]]:
+        return self.live.pump()
 
 
 class CheckpointManager:

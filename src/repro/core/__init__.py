@@ -5,6 +5,7 @@ from .asura import (
     AsuraParams,
     addition_number,
     addition_numbers_batch,
+    align_replica_sets,
     place_batch,
     place_nodes_batch,
     place_replicas_batch,
@@ -12,6 +13,7 @@ from .asura import (
     place_scalar,
     placement_trace,
     remove_numbers,
+    remove_numbers_batch,
     resolve_tail_np,
     tail_cumsum_halves,
 )
@@ -42,6 +44,7 @@ __all__ = [
     "wrh_place_np",
     "addition_number",
     "addition_numbers_batch",
+    "align_replica_sets",
     "make_cluster",
     "make_uniform_cluster",
     "place_batch",
@@ -51,6 +54,7 @@ __all__ = [
     "place_scalar",
     "placement_trace",
     "remove_numbers",
+    "remove_numbers_batch",
     "resolve_tail_np",
     "tail_cumsum_halves",
 ]

@@ -648,3 +648,66 @@ def addition_numbers_batch(
     for i in np.nonzero(needs_scalar)[0]:
         an[i] = addition_number(int(ids[i]), lengths, node_of, n_replicas, params)
     return an
+
+
+def remove_numbers_batch(
+    datum_ids: np.ndarray,
+    seg_lengths: Sequence[float],
+    seg_to_node: Sequence[int],
+    n_replicas: int = 1,
+    params: AsuraParams = DEFAULT_PARAMS,
+) -> np.ndarray:
+    """Vectorized section 2.D REMOVE NUMBERS -> (batch, R) sorted segments.
+
+    A datum's remove numbers are the floors of its replica-SELECTING ASURA
+    numbers, and the floor of a selecting number IS the selected segment --
+    so the batch is one vectorized replica placement plus a row sort,
+    replacing the per-id scalar trace (``remove_numbers``).  Row-identical
+    to the scalar (tested).
+    """
+    segs = place_replicas_batch(
+        datum_ids, seg_lengths, seg_to_node, n_replicas, params
+    )
+    return np.sort(segs, axis=1)
+
+
+def align_replica_sets(
+    before: np.ndarray, after: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-slot minimal alignment of two replica-node sets (the host spec).
+
+    ``before`` / ``after`` are (batch, R) replica-node sets (each row
+    pairwise-distinct, primary first) of the same ids under versions v and
+    v+1.  Slots index the AFTER set.  Returns ``(moved, src, src_slot)``:
+
+      * ``moved[b, r]``    -- slot r's owner actually changed, i.e.
+        ``after[b, r]`` is not a member of ``before[b, :]`` (so exactly
+        ``|after \\ before|`` slots move -- the section-5 minimal replica
+        mass; common nodes that merely changed position move nothing),
+      * ``src[b, r]``      -- where slot r's bytes live under v: for a moved
+        slot the rank-matched VACATED node (the k-th new after-slot pairs
+        with the k-th lost before-slot, both in slot order -- the set
+        differences have equal size, so the match is total), else
+        ``after[b, r]`` itself (it holds the datum throughout),
+      * ``src_slot[b, r]`` -- the BEFORE-set position of ``src`` for moved
+        slots (rollback re-indexes the reverse plan with it), else r.
+
+    Pure exact integer ops, formulated identically to the jitted device
+    twin (``kernels.ops._align_replica_sets``) so the two are bit-identical.
+    """
+    before = np.asarray(before)
+    after = np.asarray(after)
+    n_replicas = after.shape[1]
+    new = ~(after[:, :, None] == before[:, None, :]).any(axis=2)
+    lost = ~(before[:, :, None] == after[:, None, :]).any(axis=2)
+    new_i = new.astype(np.int64)
+    lost_i = lost.astype(np.int64)
+    rank_new = np.cumsum(new_i, axis=1) - new_i
+    rank_lost = np.cumsum(lost_i, axis=1) - lost_i
+    match = lost[:, None, :] & (rank_lost[:, None, :] == rank_new[:, :, None])
+    picked_src = np.where(match, before[:, None, :], 0).sum(axis=2)
+    slots = np.arange(n_replicas, dtype=np.int64)
+    picked_slot = np.where(match, slots[None, None, :], 0).sum(axis=2)
+    src = np.where(new, picked_src, after)
+    src_slot = np.where(new, picked_slot, slots[None, :])
+    return new, src, src_slot

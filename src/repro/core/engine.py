@@ -448,6 +448,23 @@ class PlacementEngine:
         art = self.artifact()
         return art.node_of[self.place_replicas(datum_ids, n_replicas)]
 
+    def remove_numbers_batch(
+        self, datum_ids, n_replicas: int, version: int | None = None
+    ) -> np.ndarray:
+        """Vectorized section 2.D REMOVE NUMBERS -> (batch, R) sorted segs.
+
+        A datum's remove numbers are the floors of its replica-selecting
+        ASURA numbers = the segment numbers of its R replicas, so the batch
+        is one replica placement against the cached artifact plus a row
+        sort -- no per-id scalar trace, and on accelerator backends the
+        sweep runs on device.  Row-identical to the scalar
+        ``core.asura.remove_numbers`` (tested)."""
+        segs = self.place_replicas_at(
+            datum_ids, self.cluster.version if version is None else version,
+            n_replicas,
+        )
+        return np.sort(np.asarray(segs, dtype=np.int64), axis=1)
+
     # -- version-pinned placement (migration dual-version serving) -----------
 
     def place_at(self, datum_ids, version: int) -> np.ndarray:
@@ -485,6 +502,39 @@ class PlacementEngine:
         return np.asarray(
             self.place_nodes_device_at(ids, version, algorithm="asura")
         ).astype(np.int64)
+
+    def place_replicas_at(self, datum_ids, version: int, n_replicas: int) -> np.ndarray:
+        """(batch, R) segment numbers under a SPECIFIC cached version --
+        the replica twin of ``place_at`` (dual-version replica serving and
+        the vectorized REMOVE-NUMBER sweep build on it)."""
+        self._require_asura("place_replicas_at")
+        art = self.artifact_for(version)
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.backend == "numpy":
+            return place_replicas_u32(
+                ids, art.len32, art.node_of, n_replicas, art.top_level, self.params
+            )
+        from repro.kernels.ops import place_replicas_on_table
+
+        art = self._device_artifact_for(version)
+        return place_replicas_on_table(
+            ids,
+            art.len32_dev,
+            art.node_of_dev,
+            n_replicas,
+            top_level=art.top_level,
+            **self._kernel_kwargs(),
+        )
+
+    def place_replica_nodes_at(
+        self, datum_ids, version: int, n_replicas: int
+    ) -> np.ndarray:
+        """(batch, R) node ids under a specific cached version, primary
+        first -- the migration window's replica read rule places the v+1
+        sets through this (DESIGN.md section 10)."""
+        self._require_asura("place_replica_nodes_at")
+        art = self.artifact_for(version)
+        return art.node_of[self.place_replicas_at(datum_ids, version, n_replicas)]
 
     # -- device-resident variants (zero host syncs) --------------------------
 
@@ -599,6 +649,25 @@ class PlacementEngine:
             **self._device_kwargs(),
         )
 
+    def place_replica_nodes_device_at(
+        self, datum_ids, version: int, n_replicas: int
+    ):
+        """``place_replica_nodes_device`` under a specific cached version
+        (zero host syncs; -1 marks non-converged entries)."""
+        from repro.kernels.ops import place_replicas_on_table_device
+
+        self._require_asura("place_replica_nodes_device_at")
+        art = self._device_artifact_for(version, "asura")
+        return place_replicas_on_table_device(
+            datum_ids,
+            art.len32_dev,
+            art.node_of_dev,
+            n_replicas,
+            top_level=art.top_level,
+            emit_nodes=True,
+            **self._device_kwargs(),
+        )
+
     # -- migration planner primitives ----------------------------------------
 
     def diff_nodes_device(self, datum_ids, v_from: int, v_to: int):
@@ -629,6 +698,68 @@ class PlacementEngine:
             top_a=art_a.top_level,
             top_b=art_b.top_level,
             **self._device_kwargs(),
+        )
+
+    def diff_replicas_device(
+        self, datum_ids, v_from: int, v_to: int, n_replicas: int
+    ):
+        """Two-version REPLICA-SET diff -> ``(moved, src, dst, src_slot)``
+        DEVICE arrays, each (batch, R), zero host syncs.
+
+        Places every id's full R-replica set under the ``v_from`` and
+        ``v_to`` table artifacts (both must be in the LRU) in one device
+        pass -- the fused dual-table replica kernel -- and aligns the two
+        sets per slot: ``moved[b, r]`` iff slot r's owner actually changed
+        (``dst[b, r]`` not in the v set: the section-5 minimal replica
+        mass), ``src`` the vacated v-side node for moved slots (the common
+        owner otherwise), ``src_slot`` its v-set position (rollback
+        re-indexing).  DESIGN.md section 10.
+        """
+        from repro.kernels.ops import diff_replicas_on_tables_device
+
+        self._require_asura("diff_replicas_device")
+        art_a = self._device_artifact_for(v_from, "asura")
+        art_b = self._device_artifact_for(v_to, "asura")
+        return diff_replicas_on_tables_device(
+            datum_ids,
+            art_a.len32_dev,
+            art_a.node_of_dev,
+            art_b.len32_dev,
+            art_b.node_of_dev,
+            top_a=art_a.top_level,
+            top_b=art_b.top_level,
+            n_replicas=n_replicas,
+            **self._device_kwargs(),
+        )
+
+    def diff_replicas_at(
+        self, datum_ids, v_from: int, v_to: int, n_replicas: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Host-facing ``diff_replicas_device``: the same per-slot
+        ``(moved, src, dst, src_slot)`` as NumPy arrays (int64 nodes).
+
+        On the numpy backend both replica sweeps run on the vectorized host
+        path and the alignment uses the single host spec
+        (``core.asura.align_replica_sets``) -- bit-identical to the device
+        twin; on accelerator backends this is the device path plus one
+        final transfer.
+        """
+        from .asura import align_replica_sets
+
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.backend == "numpy":
+            before = self.place_replica_nodes_at(ids, v_from, n_replicas)
+            after = self.place_replica_nodes_at(ids, v_to, n_replicas)
+            moved, src, src_slot = align_replica_sets(before, after)
+            return moved, src, after, src_slot
+        moved, src, dst, src_slot = self.diff_replicas_device(
+            ids, v_from, v_to, n_replicas
+        )
+        return (
+            np.asarray(moved),
+            np.asarray(src).astype(np.int64),
+            np.asarray(dst).astype(np.int64),
+            np.asarray(src_slot),
         )
 
     def addition_numbers_device(

@@ -12,6 +12,8 @@ from .ops import (
     asura_place,
     asura_place_nodes,
     asura_place_replicas,
+    diff_nodes_on_tables_device,
+    diff_replicas_on_tables_device,
     node_table_prep,
     place_nodes_on_table_device,
     place_on_table,
@@ -30,6 +32,8 @@ __all__ = [
     "wrh_place_pallas",
     "asura_place_nodes",
     "asura_place_replicas",
+    "diff_nodes_on_tables_device",
+    "diff_replicas_on_tables_device",
     "node_table_prep",
     "place_nodes_on_table_device",
     "place_on_table",

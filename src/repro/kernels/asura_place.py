@@ -231,36 +231,30 @@ def _diff_kernel(
     out_ref[...] = jnp.stack([src, dst])
 
 
-def _place_replicas_kernel(
-    ids_ref,
-    table_ref,
-    node_ref,
-    out_ref,
+def _place_replicas_tile(
+    ids,
+    table,
+    node_of,
     *,
     top_level: int,
     s_log2: int,
     max_draws: int,
     n_segs: int,
     n_replicas: int,
-    emit_nodes: bool = False,
 ):
-    """Section 5.A replication: first R hits on distinct nodes, per lane.
+    """Section 5.A replication of one (rows, LANE) tile against one table.
 
-    Same bounded masked draw loop as ``_place_kernel``, with per-lane
-    ``(found, segs[R], nodes[R])`` state: ``nodes`` carries the node of each
-    already-picked replica in-register so the distinct-node dup test is R
-    compares instead of R extra VMEM gathers; the seg->node table is gathered
-    once per draw (alongside the length gather) to resolve the candidate's
-    node.  Draw order and hit tests are bit-identical to
-    ``place_replicas_scalar``; -1 marks non-converged entries (ops.py raises
-    on the host path).  ``emit_nodes=True`` writes the in-register ``nodes``
-    state instead of ``segs`` -- the fused seg->node gather for the
-    device-resident path (node ids are already resolved per pick, so fusion
-    costs nothing).
+    The shared body of ``_place_replicas_kernel`` and
+    ``_diff_replicas_kernel``: the bounded masked draw loop with per-lane
+    ``(found, segs[R], nodes[R])`` state -- ``nodes`` carries the node of
+    each already-picked replica in-register so the distinct-node dup test is
+    R compares instead of R extra VMEM gathers; the seg->node table is
+    gathered once per draw (alongside the length gather) to resolve the
+    candidate's node.  Draw order and hit tests are bit-identical to
+    ``place_replicas_scalar``; -1 marks non-converged entries.  Pure traced
+    jnp so it can run twice (once per table version) inside a single kernel
+    invocation; returns ``(segs, nodes)``, each (R, rows, LANE) int32.
     """
-    ids = ids_ref[...]  # (rows, LANE) uint32
-    table = table_ref[...]  # (n_pad,) uint32
-    node_of = node_ref[...]  # (n_pad,) int32, -1 on holes/padding
     shape = ids.shape
     R = n_replicas
 
@@ -298,7 +292,93 @@ def _place_replicas_kernel(
     _, _, segs, nodes, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), counters0, segs0, nodes0, found0)
     )
+    return segs, nodes
+
+
+def _place_replicas_kernel(
+    ids_ref,
+    table_ref,
+    node_ref,
+    out_ref,
+    *,
+    top_level: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs: int,
+    n_replicas: int,
+    emit_nodes: bool = False,
+):
+    """Section 5.A replication: first R hits on distinct nodes, per lane.
+
+    The draw loop lives in ``_place_replicas_tile`` (shared with the
+    replica-diff kernel).  ``emit_nodes=True`` writes the in-register
+    ``nodes`` state instead of ``segs`` -- the fused seg->node gather for
+    the device-resident path (node ids are already resolved per pick, so
+    fusion costs nothing); ops.py raises on -1 entries on the host path.
+    """
+    segs, nodes = _place_replicas_tile(
+        ids_ref[...],
+        table_ref[...],
+        node_ref[...],
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs,
+        n_replicas=n_replicas,
+    )
     out_ref[...] = nodes if emit_nodes else segs
+
+
+def _diff_replicas_kernel(
+    ids_ref,
+    table_a_ref,
+    node_a_ref,
+    table_b_ref,
+    node_b_ref,
+    out_ref,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs_a: int,
+    n_segs_b: int,
+    n_replicas: int,
+):
+    """Replica-set version-diff kernel (DESIGN.md section 10): place every
+    id's FULL R-replica set under two table versions in one kernel pass.
+
+    Both tables (lengths + seg->node maps; replication needs no tail
+    tables, non-convergence is a -1 marker) sit in VMEM side by side; each
+    (rows, LANE) id tile runs the full bounded replica draw loop against
+    table A, then -- with fresh counters, the ASURA stream restarts per
+    table -- against table B.  Output index 0 is the replica-node set under
+    A (v), index 1 under B (v+1), each (R, rows, LANE): the replica planner
+    derives the per-slot ``(moved, src, dst, src_slot)`` alignment outside.
+    One id upload, one kernel launch, zero host syncs.
+    """
+    ids = ids_ref[...]  # (rows, LANE) uint32
+    _, src = _place_replicas_tile(
+        ids,
+        table_a_ref[...],
+        node_a_ref[...],
+        top_level=top_a,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs_a,
+        n_replicas=n_replicas,
+    )
+    _, dst = _place_replicas_tile(
+        ids,
+        table_b_ref[...],
+        node_b_ref[...],
+        top_level=top_b,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs_b,
+        n_replicas=n_replicas,
+    )
+    out_ref[...] = jnp.stack([src, dst])
 
 
 @functools.partial(
@@ -572,3 +652,85 @@ def diff_nodes_pallas(
         node_b.astype(jnp.int32),
     )
     return out.reshape(2, total)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "top_a",
+        "top_b",
+        "s_log2",
+        "max_draws",
+        "n_replicas",
+        "rows_per_block",
+        "interpret",
+    ),
+)
+def diff_replicas_pallas(
+    ids: jax.Array,
+    len32_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int = 1,
+    max_draws: int = 128,
+    n_replicas: int = 1,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dual-version replica placement via pl.pallas_call -> (2, total, R).
+
+    Index 0 is each id's R-replica node set under table A (version v),
+    index 1 under table B (version v+1) -- the replica planner derives the
+    per-slot ``(moved, src, dst, src_slot)`` alignment from this
+    (``ops._align_replica_sets``).  Both tables must be lane-padded (ops.py
+    pads); ids must be a block multiple.  One kernel pass over the ids,
+    both tables resident in VMEM, zero host syncs.
+    """
+    n_segs_a = int(len32_a.shape[0])
+    n_segs_b = int(len32_b.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "ops.py must pad ids to a block multiple"
+    assert n_segs_a % LANE == 0 and n_segs_b % LANE == 0
+    assert node_a.shape[0] == n_segs_a and node_b.shape[0] == n_segs_b
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _diff_replicas_kernel,
+        top_a=top_a,
+        top_b=top_b,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs_a=n_segs_a,
+        n_segs_b=n_segs_b,
+        n_replicas=n_replicas,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_segs_a,), lambda i: (0,)),  # whole A table per block
+            pl.BlockSpec((n_segs_a,), lambda i: (0,)),
+            pl.BlockSpec((n_segs_b,), lambda i: (0,)),  # whole B table per block
+            pl.BlockSpec((n_segs_b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (2, n_replicas, rows_per_block, LANE), lambda i: (0, 0, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (2, n_replicas, total // LANE, LANE), jnp.int32
+        ),
+        interpret=interpret,
+    )(
+        ids2,
+        len32_a,
+        node_a.astype(jnp.int32),
+        len32_b,
+        node_b.astype(jnp.int32),
+    )
+    return out.reshape(2, n_replicas, total).transpose(0, 2, 1)

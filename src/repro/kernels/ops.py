@@ -41,6 +41,7 @@ from .asura_place import (
     DEFAULT_ROWS,
     LANE,
     diff_nodes_pallas,
+    diff_replicas_pallas,
     place_fused_pallas,
     place_pallas,
     place_replicas_pallas,
@@ -62,6 +63,7 @@ __all__ = [
     "place_replicas_on_table",
     "place_replicas_on_table_device",
     "diff_nodes_on_tables_device",
+    "diff_replicas_on_tables_device",
     "addition_numbers_on_table_device",
     "asura_place",
     "asura_place_nodes",
@@ -350,6 +352,144 @@ def diff_nodes_on_tables_device(
         top_b=top_b,
         s_log2=params.s_log2,
         max_draws=params.max_draws,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_replicas",))
+def _align_replica_sets(
+    before: jax.Array, after: jax.Array, *, n_replicas: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-slot minimal alignment of two (batch, R) replica-node sets.
+
+    The jitted device twin of ``core.asura.align_replica_sets`` (same exact
+    integer formulation, bit-identical -- tested): slots index the AFTER
+    set; ``moved[b, r]`` iff ``after[b, r]`` is not in ``before[b, :]``
+    (exactly the section-5 minimal replica mass), ``src`` is the
+    rank-matched vacated node for moved slots (``after[b, r]`` itself
+    otherwise), ``src_slot`` its before-set position (rollback re-indexing).
+    Returns ``(moved, src, dst, src_slot)``, all (batch, R); ``dst`` is
+    ``after`` cast to int32.
+    """
+    before = before.astype(jnp.int32)
+    after = after.astype(jnp.int32)
+    new = ~jnp.any(after[:, :, None] == before[:, None, :], axis=2)
+    lost = ~jnp.any(before[:, :, None] == after[:, None, :], axis=2)
+    new_i = new.astype(jnp.int32)
+    lost_i = lost.astype(jnp.int32)
+    rank_new = jnp.cumsum(new_i, axis=1) - new_i
+    rank_lost = jnp.cumsum(lost_i, axis=1) - lost_i
+    match = lost[:, None, :] & (rank_lost[:, None, :] == rank_new[:, :, None])
+    picked_src = jnp.sum(jnp.where(match, before[:, None, :], 0), axis=2)
+    slots = jnp.arange(n_replicas, dtype=jnp.int32)
+    picked_slot = jnp.sum(jnp.where(match, slots[None, None, :], 0), axis=2)
+    src = jnp.where(new, picked_src, after)
+    src_slot = jnp.where(new, picked_slot, slots[None, :])
+    return new, src, after, src_slot
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("top_a", "top_b", "s_log2", "max_draws", "n_replicas"),
+)
+def _diff_replicas_fused_ref(
+    ids: jax.Array,
+    len32_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    s_log2: int,
+    max_draws: int,
+    n_replicas: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """jnp-reference replica-set version diff: both R-replica placements +
+    the per-slot alignment in ONE jit (no eager scalar ops escape to the
+    host between the two sweeps)."""
+    before = _place_replicas_fused_ref(
+        ids, len32_a, node_a,
+        top_level=top_a, s_log2=s_log2, max_draws=max_draws,
+        n_replicas=n_replicas, emit_nodes=True,
+    )
+    after = _place_replicas_fused_ref(
+        ids, len32_b, node_b,
+        top_level=top_b, s_log2=s_log2, max_draws=max_draws,
+        n_replicas=n_replicas, emit_nodes=True,
+    )
+    return _align_replica_sets(before, after, n_replicas=n_replicas)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _split_diff_sets(out: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """(2, padded, R) kernel output -> (before[:n], after[:n]) ON DEVICE."""
+    return out[0, :n], out[1, :n]
+
+
+def diff_replicas_on_tables_device(
+    datum_ids,
+    len32_a: jax.Array,
+    node_a: jax.Array,
+    len32_b: jax.Array,
+    node_b: jax.Array,
+    *,
+    top_a: int,
+    top_b: int,
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Replica-set version diff against two prebuilt tables
+    -> ``(moved, src, dst, src_slot)``, each a (batch, R) DEVICE array.
+
+    Places every id's FULL R-replica set under table A (version v) and
+    table B (version v+1) in one device pass (``diff_replicas_pallas`` /
+    the fused jnp reference) and aligns the two sets per slot
+    (``_align_replica_sets``): ``moved[b, r]`` iff slot r's owner actually
+    changed, ``src`` the vacated v-side node for moved slots, ``dst`` the
+    v+1 set, ``src_slot`` the before-set position for rollback.  Nothing
+    round-trips through the host -- the replica planner's
+    ``plan_replicas_stream`` chains chunks of this with zero syncs
+    (DESIGN.md section 10).
+    """
+    interpret = _default_interpret(interpret)
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if n == 0:
+        empty = jnp.zeros((0, n_replicas), dtype=jnp.int32)
+        return jnp.zeros((0, n_replicas), dtype=bool), empty, empty, empty
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_ids(ids, block)
+        sets = diff_replicas_pallas(
+            padded,
+            len32_a,
+            node_a,
+            len32_b,
+            node_b,
+            top_a=top_a,
+            top_b=top_b,
+            s_log2=params.s_log2,
+            max_draws=params.max_draws,
+            n_replicas=n_replicas,
+            rows_per_block=rows_per_block,
+            interpret=interpret,
+        )
+        before, after = _split_diff_sets(sets, n)
+        return _align_replica_sets(before, after, n_replicas=n_replicas)
+    return _diff_replicas_fused_ref(
+        ids,
+        len32_a,
+        node_a,
+        len32_b,
+        node_b,
+        top_a=top_a,
+        top_b=top_b,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+        n_replicas=n_replicas,
     )
 
 

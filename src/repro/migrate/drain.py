@@ -1,0 +1,72 @@
+"""The shared drain-driver loop (DESIGN.md sections 8.2, 10).
+
+Every layer that advances a migration exposes the same three verbs --
+``round()`` (one primitive round -> its movement matrix), ``pump()`` (the
+rounds an injected clock says are due) and ``run(max_rounds)`` (drain to
+completion, raising if the budget can never finish).  The loop used to be
+copy-pasted across ``ThrottledMover``, ``LiveMigration``, ``StoreMigration``
+and ``runtime.failures.MigrationDriver``; ``DrainDriver`` hosts it once.
+
+Subclasses implement:
+
+  * ``done``            -- is the drain complete?
+  * ``_round()``        -- one primitive round -> its (src, dst) matrix,
+  * ``_pump_rounds()``  -- the clock-paced batch of rounds (the default is
+                          clockless: one round when not done; the mover
+                          overrides it with the injected-clock pacing, and
+                          wrappers delegate to the wrapped object so clock
+                          accounting lives in exactly one place),
+  * ``_advance(fn)``    -- optional wrapper applied uniformly around every
+                          public verb (liveness guards, blob landing,
+                          detach-on-done) so a hook can never be skipped by
+                          calling one verb instead of another.
+"""
+
+from __future__ import annotations
+
+
+class DrainDriver:
+    """Mixin: the round()/pump()/run() drain loop over one primitive."""
+
+    @property
+    def done(self) -> bool:
+        raise NotImplementedError
+
+    def _round(self) -> dict:
+        raise NotImplementedError
+
+    def _advance(self, fn):
+        return fn()
+
+    def _pump_rounds(self) -> list:
+        return [] if self.done else [self._round()]
+
+    def _pending_desc(self) -> str:
+        return "work still pending"
+
+    def round(self) -> dict:
+        """One round; returns its per-(src, dst) movement matrix."""
+        [matrix] = self._advance(lambda: [self._round()])
+        return matrix
+
+    def pump(self) -> list:
+        """Run the rounds the injected clock says are due (0 if none)."""
+        return self._advance(self._pump_rounds)
+
+    def run(self, max_rounds: int = 100_000) -> list:
+        """Drain to completion; returns the per-round matrices."""
+
+        def drain():
+            out = []
+            for _ in range(max_rounds):
+                if self.done:
+                    break
+                out.append(self._round())
+            if not self.done:
+                raise RuntimeError(
+                    f"drain did not complete within {max_rounds} rounds "
+                    f"({self._pending_desc()}) -- zero budget?"
+                )
+            return out
+
+        return self._advance(drain)

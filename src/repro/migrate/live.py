@@ -15,12 +15,26 @@ rows of the original never moved, so under the reversed rule they fall
 into the "not in plan -> v_to(reverse) = v(original) owner" case, which
 is exactly where they physically are.
 
+``route_replicas[_device]`` is the per-slot REPLICA generalization
+(DESIGN.md section 10): each slot of an id's R-replica set is
+independently v or v+1 by its own landed bit --
+
+    route_replicas(id)[r] = plan.src of (id, r)  while that slot's copy
+                            is pending (the vacated v-side node still
+                            holding the bytes),
+                            v+1 set's slot r     otherwise
+
+-- so every served set is R pairwise-distinct nodes that all physically
+hold the datum at every round.  Rollback stays free: the reverse plan
+swaps src/dst AND slot/src_slot, re-indexing slots into the reverse
+destination (= original v) set.
+
 Both versions' placements come from the engine's artifact LRU (no table
 re-upload during the window, no matter how often the router flaps) and
-``route_device`` keeps the whole rule on device: the fused dual-table
-diff kernel supplies both owners, a sorted-membership probe against the
-pending set supplies the landed bit, and one ``where`` merges them --
-zero host syncs after the per-round control-path update.
+the device paths keep the whole rule on device: the fused dual-table
+diff kernels supply the owners, sorted-membership probes against the
+(per-slot) pending sets supply the landed bits, and one ``where`` merges
+them -- zero host syncs after the per-round control-path update.
 """
 
 from __future__ import annotations
@@ -29,6 +43,7 @@ import functools
 
 import numpy as np
 
+from .drain import DrainDriver
 from .mover import MigrationState, ThrottledMover
 
 
@@ -47,7 +62,30 @@ def _member_fn():
     return member
 
 
-class LiveMigration:
+@functools.cache
+def _replica_member_fn():
+    """Jitted per-slot membership + aligned-source gather: one vmapped
+    sorted probe over the static R slots of the pending view."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def member(ids, ids_pad, src_pad, counts):
+        u = ids.astype(jnp.uint32)
+
+        def per_slot(sorted_pad, src_vals, n):
+            pos = jnp.searchsorted(sorted_pad, u, side="left")
+            pos_c = jnp.minimum(pos, sorted_pad.shape[0] - 1)
+            hit = (pos < n) & (sorted_pad[pos_c] == u)
+            return hit, src_vals[pos_c]
+
+        hit, src = jax.vmap(per_slot)(ids_pad, src_pad, counts)
+        return hit.T, src.T  # (batch, R)
+
+    return member
+
+
+class LiveMigration(DrainDriver):
     """One membership change served THROUGH its throttled drain.
 
     Wraps the three layers: the assembled plan (in ``state.plan``), the
@@ -138,21 +176,60 @@ class LiveMigration:
         pending = _member_fn()(jnp.asarray(datum_ids), sorted_pad, n)
         return jnp.where(pending, src, dst)
 
-    # -- drain control --------------------------------------------------------
+    # -- per-slot replica read rule (DESIGN.md section 10) --------------------
 
-    def round(self) -> dict[tuple[int, int], int]:
-        """One throttled round; returns its (src, dst) movement matrix."""
+    @property
+    def n_replicas(self) -> int:
+        return self.state.plan.n_replicas
+
+    def route_replicas(self, datum_ids) -> np.ndarray:
+        """ids -> the (batch, R) replica sets that HOLD each datum now.
+
+        Slot r serves its vacated v-side source while its copy is pending
+        and the v+1 owner after; non-moving slots hold the datum
+        throughout.  Every returned set is pairwise-distinct: pending
+        sources are vacated (lost) nodes, which by construction are not
+        members of the v+1 set, and distinct slots pair with distinct
+        sources (the rank-matched alignment).
+        """
         self._check_live()
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        owner = self.engine.place_replica_nodes_at(ids, self.v_to, self.n_replicas)
+        pending, src = self.state.pending_replicas(ids)
+        return np.where(pending, src, owner)
+
+    def route_replicas_device(self, datum_ids):
+        """Device-resident ``route_replicas``: (batch, R) int32, zero host
+        syncs after the per-round control-path refresh (the per-slot
+        pending view uploads once per round, like ``route_device``)."""
+        self._check_live()
+        import jax.numpy as jnp
+
+        dst = self.engine.place_replica_nodes_device_at(
+            datum_ids, self.v_to, self.n_replicas
+        )
+        ids_pad, src_pad, counts = self.state.pending_replicas_device()
+        pending, src = _replica_member_fn()(
+            jnp.asarray(datum_ids), ids_pad, src_pad, counts
+        )
+        return jnp.where(pending, src, dst)
+
+    # -- drain control (round/pump/run from the shared DrainDriver loop) ------
+
+    def _advance(self, fn):
+        self._check_live()
+        return fn()
+
+    def _round(self) -> dict[tuple[int, int], int]:
         return self.mover.round()
 
-    def pump(self) -> list[dict[tuple[int, int], int]]:
-        """Clock-driven advance (see ``ThrottledMover.pump``)."""
-        self._check_live()
+    def _pump_rounds(self) -> list[dict[tuple[int, int], int]]:
+        # delegate so clock accounting lives in the mover alone (mixing
+        # mover.pump() and migration.pump() must not double-run periods)
         return self.mover.pump()
 
-    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
-        self._check_live()
-        return self.mover.run(max_rounds)
+    def _pending_desc(self) -> str:
+        return f"{self.state.n_pending} rows pending"
 
     # -- rollback -------------------------------------------------------------
 
@@ -195,6 +272,12 @@ class LiveMigration:
             dst=plan.src[landed],
             index=plan.index[landed],
             n_scanned=plan.n_scanned,
+            n_replicas=plan.n_replicas,
+            # slots index the plan's DESTINATION set; the reverse drains
+            # back into the original v set, so slot/src_slot swap along
+            # with src/dst (DESIGN.md section 10).
+            slot=plan.src_slot[landed],
+            src_slot=plan.slot[landed],
         )
         self.aborted = True
         mover = self.mover

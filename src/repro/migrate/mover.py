@@ -29,6 +29,7 @@ from typing import Callable
 
 import numpy as np
 
+from .drain import DrainDriver
 from .planner import MigrationPlan
 
 
@@ -98,12 +99,17 @@ class MigrationState:
     """A plan plus its landed bitmap -- the single source of truth for the
     dual-version read rule.
 
-    ``landed[i]`` flips True when row i's datum has physically arrived at
-    ``dst[i]`` (and left ``src[i]``); until then readers must be routed to
-    the v owner.  ``pending_device()`` exposes the still-pending id set as
-    a sorted, sentinel-padded device array so the serving hot path tests
-    membership with zero host syncs (padding to the next power of two
-    bounds recompiles at O(log n) distinct shapes).
+    Rows are per (id, replica_slot) -- the PER-SLOT LANDED BITMAP of
+    DESIGN.md section 10; single-owner plans are the R=1 case.
+    ``landed[i]`` flips True when row i's replica has physically arrived at
+    ``dst[i]`` (and left ``src[i]``); until then readers of that slot must
+    be routed to its v-side source.  ``pending_device()`` exposes the
+    still-pending id set as a sorted, sentinel-padded device array so the
+    single-owner serving hot path tests membership with zero host syncs
+    (padding to the next power of two bounds recompiles at O(log n)
+    distinct shapes); ``pending_replicas_device()`` is the per-slot twin:
+    one sorted (ids, src) pair per replica slot, stacked (R, P), so the
+    replica read rule probes all R slots in one jitted vmap.
     """
 
     _SENTINEL = np.uint32(0xFFFFFFFF)
@@ -113,6 +119,8 @@ class MigrationState:
         self.landed = np.zeros(plan.n_moves, dtype=bool)
         self._sorted_pending = None  # host cache for the serving hot path
         self._dev_view = None  # (padded sorted pending ids, count) device pair
+        self._slot_host = None  # per-slot (sorted ids, src) host cache
+        self._slot_dev = None  # per-slot device view (ids, src, counts)
 
     # -- host views ----------------------------------------------------------
 
@@ -150,6 +158,79 @@ class MigrationState:
         self.landed[rows] = True
         self._sorted_pending = None  # host and device views are stale
         self._dev_view = None
+        self._slot_host = None
+        self._slot_dev = None
+
+    # -- per-slot views (replica read rule) ------------------------------------
+
+    def _slot_tables(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-slot sorted pending ``(ids, src)`` pairs, cached per round.
+
+        Within one slot each id appears at most once (a plan row is a
+        unique (id, slot)), so a sorted array per slot supports the same
+        O(batch log pending) probe ``is_pending`` uses."""
+        if self._slot_host is None:
+            plan = self.plan
+            tables = []
+            for r in range(plan.n_replicas):
+                mask = ~self.landed & (plan.slot == r)
+                ids = plan.ids[mask]
+                src = plan.src[mask]
+                order = np.argsort(ids, kind="stable")
+                tables.append((ids[order], src[order]))
+            self._slot_host = tables
+        return self._slot_host
+
+    def pending_replicas(self, datum_ids) -> tuple[np.ndarray, np.ndarray]:
+        """(batch, R) pending mask + aligned v-side sources (host path).
+
+        ``pending[b, r]`` says slot r of id b still awaits its copy;
+        ``src[b, r]`` is then the node that holds that replica's bytes
+        right now (meaningful only where pending)."""
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        R = self.plan.n_replicas
+        pending = np.zeros((len(ids), R), dtype=bool)
+        src = np.zeros((len(ids), R), dtype=np.int64)
+        for r, (p_ids, p_src) in enumerate(self._slot_tables()):
+            if p_ids.size == 0:
+                continue
+            pos = np.searchsorted(p_ids, ids)
+            pos_c = np.minimum(pos, p_ids.size - 1)
+            hit = (pos < p_ids.size) & (p_ids[pos_c] == ids)
+            pending[:, r] = hit
+            src[hit, r] = p_src[pos_c[hit]]
+        return pending, src
+
+    def pending_replicas_device(self):
+        """Per-slot device view: ``(ids_pad, src_pad, counts)``.
+
+        ``ids_pad`` (R, P) sorted sentinel-padded pending ids per slot,
+        ``src_pad`` (R, P) their aligned v-side sources, ``counts`` (R,)
+        live lengths.  P is the shared next power of two, so recompiles
+        stay O(log n) and the replica read rule vmaps one probe over the
+        static R slots.  Rebuilt lazily after ``mark_landed`` -- one upload
+        per round on the control path; call outside any transfer guard.
+        """
+        if self._slot_dev is None:
+            import jax.numpy as jnp
+
+            tables = self._slot_tables()
+            n_max = max((len(t[0]) for t in tables), default=0)
+            padded_len = max(1, 1 << (n_max - 1).bit_length()) if n_max else 1
+            R = self.plan.n_replicas
+            ids_pad = np.full((R, padded_len), self._SENTINEL, dtype=np.uint32)
+            src_pad = np.full((R, padded_len), -1, dtype=np.int32)
+            counts = np.zeros(R, dtype=np.int32)
+            for r, (p_ids, p_src) in enumerate(tables):
+                ids_pad[r, : len(p_ids)] = p_ids
+                src_pad[r, : len(p_ids)] = p_src
+                counts[r] = len(p_ids)
+            self._slot_dev = (
+                jnp.asarray(ids_pad),
+                jnp.asarray(src_pad),
+                jnp.asarray(counts),
+            )
+        return self._slot_dev
 
     # -- device view ----------------------------------------------------------
 
@@ -172,16 +253,18 @@ class MigrationState:
         return self._dev_view
 
 
-class ThrottledMover:
+class ThrottledMover(DrainDriver):
     """Drains a ``MigrationState`` in budgeted rounds.
 
-    ``egress`` / ``ingress``: max rows a node may send / receive per round
-    -- ``None`` (unlimited), a scalar applied to every node, or a
-    ``{node_id: limit}`` dict (missing nodes unlimited).  ``clock`` is an
-    injected time source; ``pump()`` runs however many whole
-    ``round_seconds`` periods have elapsed since the last call, so a
-    simulated clock drives deterministic tests and a real clock drives a
-    real drain loop.
+    ``egress`` / ``ingress``: max rows (replica copies) a node may send /
+    receive per round -- ``None`` (unlimited), a scalar applied to every
+    node, or a ``{node_id: limit}`` dict (missing nodes unlimited).  Rows
+    are per (id, replica_slot), so budgets and movement matrices account
+    every replica copy individually.  ``clock`` is an injected time
+    source; ``pump()`` runs however many whole ``round_seconds`` periods
+    have elapsed since the last call, so a simulated clock drives
+    deterministic tests and a real clock drives a real drain loop.  The
+    round/pump/run verbs come from the shared ``DrainDriver`` loop.
     """
 
     def __init__(
@@ -213,7 +296,10 @@ class ThrottledMover:
     def done(self) -> bool:
         return self.state.done
 
-    def round(self) -> dict[tuple[int, int], int]:
+    def _pending_desc(self) -> str:
+        return f"{self.state.n_pending} rows pending"
+
+    def _round(self) -> dict[tuple[int, int], int]:
         """One throttled round -> the per-(src, dst) movement matrix."""
         state = self.state
         pending = ~state.landed
@@ -238,32 +324,18 @@ class ThrottledMover:
         self.history.append(matrix)
         return matrix
 
-    def run(self, max_rounds: int = 100_000) -> list[dict[tuple[int, int], int]]:
-        """Drain to completion; returns the per-round matrices."""
-        out = []
-        for _ in range(max_rounds):
-            if self.done:
-                break
-            out.append(self.round())
-        if not self.done:
-            raise RuntimeError(
-                f"mover did not drain within {max_rounds} rounds "
-                f"({self.state.n_pending} rows pending) -- zero budget?"
-            )
-        return out
-
-    def pump(self) -> list[dict[tuple[int, int], int]]:
-        """Run the rounds the injected clock says are due (0 if none).
+    def _pump_rounds(self) -> list[dict[tuple[int, int], int]]:
+        """The injected-clock pacing (0 rounds if none are due).
 
         Clock-paced rounds are accounted separately from manual ``round()``
         calls, so mixing an eager kick-off round with ``pump()`` never
         skips periods the clock has earned."""
         if self.clock is None:
-            return [] if self.done else [self.round()]
+            return [] if self.done else [self._round()]
         due = int(math.floor((self.clock() - self._t0) / self.round_seconds))
         out = []
         while self._pumped < due and not self.done:
-            out.append(self.round())
+            out.append(self._round())
             self._pumped += 1
         return out
 

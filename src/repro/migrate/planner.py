@@ -20,6 +20,13 @@ DESIGN.md section 6) and diffing the owners:
                          2.D): a cheap metadata sweep marks the candidate
                          set and only candidates pay the full dual diff.
 
+The unit of work generalizes from a node to an R-way REPLICA SET
+(DESIGN.md section 10): ``diff_replicas_device`` / ``plan_replicas_stream``
+/ ``plan_replicas`` are the per-slot twins -- each id's full replica set is
+placed under both versions in one pass and aligned slot by slot, so only
+replicas whose owner actually changed produce a row (the paper's
+section-5 minimal replica movement, even under replication).
+
 ASURA's optimality theorems make the diff minimal by construction; the
 oracle tests re-verify against brute force (tests/test_migrate.py).
 """
@@ -37,19 +44,41 @@ DEFAULT_CHUNK = 1 << 20  # ids per streaming chunk (fixed device memory)
 class MigrationPlan:
     """The moved rows of a two-version placement diff.
 
-    ``ids[i]`` must move from node ``src[i]`` (its v owner) to node
-    ``dst[i]`` (its v+1 owner); ``index[i]`` is the row's position in the
-    scanned id array (so callers can update per-id side tables without a
-    search).  Rows keep scan order.
+    The unit of work is a REPLICA SLOT, not a node: row i says replica
+    slot ``slot[i]`` of datum ``ids[i]`` must move from node ``src[i]``
+    (where its bytes live under v) to node ``dst[i]`` (its v+1 owner);
+    ``index[i]`` is the row's position in the scanned id array (so callers
+    can update per-id side tables without a search).  Single-owner plans
+    are the R=1 degenerate case (``slot``/``src_slot`` all zero; one row
+    per moved id).  For replica plans, ``slot`` indexes the id's v+1
+    replica set and ``src_slot`` the position of ``src`` in its v set --
+    rollback swaps the two so the reverse plan's slots index the reverse
+    destination set (DESIGN.md section 10).  Rows keep scan order (id
+    major, slot minor).
     """
 
     v_from: int
     v_to: int
-    ids: np.ndarray  # uint32, moved ids
-    src: np.ndarray  # int64, owner under v_from
+    ids: np.ndarray  # uint32, moved ids (one row per moved (id, slot))
+    src: np.ndarray  # int64, vacated owner under v_from
     dst: np.ndarray  # int64, owner under v_to
     index: np.ndarray  # int64, positions in the scanned id array
     n_scanned: int
+    n_replicas: int = 1
+    slot: np.ndarray | None = None  # int32, position in the v_to replica set
+    src_slot: np.ndarray | None = None  # int32, position of src in the v set
+
+    def __post_init__(self):
+        # Single-owner construction sites predate replica plans; normalize
+        # so every consumer can rely on the per-slot arrays existing.
+        if self.slot is None:
+            object.__setattr__(
+                self, "slot", np.zeros(len(self.ids), dtype=np.int32)
+            )
+        if self.src_slot is None:
+            object.__setattr__(
+                self, "src_slot", np.zeros(len(self.ids), dtype=np.int32)
+            )
 
     @property
     def n_moves(self) -> int:
@@ -57,11 +86,15 @@ class MigrationPlan:
 
     @property
     def moved_fraction(self) -> float:
-        return self.n_moves / max(1, self.n_scanned)
+        """Moved fraction of the scanned REPLICA mass (R * n_scanned)."""
+        return self.n_moves / max(1, self.n_scanned * self.n_replicas)
 
     def moves_dict(self) -> dict[int, tuple[int, int]]:
         """datum id -> (src, dst), built from the vectorized arrays (no
-        per-candidate Python compare loop)."""
+        per-candidate Python compare loop).  For replica plans an id with
+        several moved slots keeps its LAST row -- add/remove events move at
+        most one slot per id, so the dict is total there; slot-accurate
+        consumers read the arrays directly."""
         return dict(
             zip(
                 self.ids.tolist(),
@@ -86,6 +119,16 @@ class MigrationPlanner:
         """One chunk -> (moved, src, dst) device arrays, zero host syncs."""
         return self.engine.diff_nodes_device(datum_ids, v_from, v_to)
 
+    def diff_replicas_device(
+        self, datum_ids, v_from: int, v_to: int, n_replicas: int
+    ):
+        """One chunk -> per-slot (moved, src, dst, src_slot) device arrays,
+        each (chunk, R), zero host syncs (the fused dual-table replica
+        kernel + on-device set alignment)."""
+        return self.engine.diff_replicas_device(
+            datum_ids, v_from, v_to, n_replicas
+        )
+
     def plan_stream(self, id_chunks, v_from: int, v_to: int):
         """Streaming sweep: yield ``(ids, moved, src, dst)`` per chunk.
 
@@ -97,6 +140,18 @@ class MigrationPlanner:
         for chunk in id_chunks:
             moved, src, dst = self.diff_device(chunk, v_from, v_to)
             yield chunk, moved, src, dst
+
+    def plan_replicas_stream(
+        self, id_chunks, v_from: int, v_to: int, n_replicas: int
+    ):
+        """Replica streaming sweep: yield ``(ids, moved, src, dst,
+        src_slot)`` device tuples per chunk -- the R-way twin of
+        ``plan_stream``, same fixed device memory and zero host syncs."""
+        for chunk in id_chunks:
+            moved, src, dst, src_slot = self.diff_replicas_device(
+                chunk, v_from, v_to, n_replicas
+            )
+            yield chunk, moved, src, dst, src_slot
 
     @staticmethod
     def chunked(ids: np.ndarray, chunk: int = DEFAULT_CHUNK):
@@ -185,18 +240,121 @@ class MigrationPlanner:
             n_scanned=len(ids),
         )
 
+    def plan_replicas(
+        self,
+        datum_ids,
+        v_from: int,
+        v_to: int,
+        n_replicas: int,
+        *,
+        chunk: int = DEFAULT_CHUNK,
+        max_new_seg: int | None = None,
+        known_before=None,
+    ) -> MigrationPlan:
+        """Assemble the per-slot REPLICA ``MigrationPlan`` for an id set.
+
+        The R-way generalization of ``plan``: every id's full R-replica set
+        is placed under both cached versions (the fused dual-table replica
+        kernel on device backends; the vectorized host path on numpy) and
+        the two sets are aligned per slot, so a row exists exactly for the
+        replicas whose owner actually changed -- ``|after \\ before|`` rows
+        per id, the paper's section-5 minimal replica mass; common nodes
+        that merely changed position inside the set move nothing.
+
+        ``max_new_seg`` enables the R-aware ADDITION-NUMBER prefilter (the
+        replica trace's AN; sound, plan-preserving).  ``known_before``
+        (aligned (len(ids), R) v replica sets a caller already maintains,
+        e.g. the coordinator's owner table) saves the host path one of the
+        two placement sweeps.
+        """
+        ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        host = self.engine.backend == "numpy"
+        if known_before is not None:
+            known_before = np.asarray(known_before, dtype=np.int64)
+        out: dict[str, list[np.ndarray]] = {
+            k: [] for k in ("ids", "src", "dst", "idx", "slot", "src_slot")
+        }
+        for start in range(0, len(ids), chunk):
+            c = ids[start : start + chunk]
+            base = np.arange(start, start + len(c), dtype=np.int64)
+            if max_new_seg is not None:
+                keep = self._candidates(
+                    c, v_from, max_new_seg, host, n_replicas=n_replicas
+                )
+                c, base = c[keep], base[keep]
+            if c.size == 0:
+                continue
+            if host:
+                from repro.core.asura import align_replica_sets
+
+                before = (
+                    known_before[base]
+                    if known_before is not None
+                    else self.engine.place_replica_nodes_at(c, v_from, n_replicas)
+                )
+                dst = self.engine.place_replica_nodes_at(c, v_to, n_replicas)
+                moved, src, src_slot = align_replica_sets(before, dst)
+            else:
+                # pow2-bucketed ragged chunks, as in ``plan``
+                n_c = len(c)
+                target = 1 << max(0, n_c - 1).bit_length()
+                cp = np.pad(c, (0, target - n_c)) if target != n_c else c
+                moved_d, src_d, dst_d, slot_d = self.diff_replicas_device(
+                    cp, v_from, v_to, n_replicas
+                )
+                moved = np.asarray(moved_d)[:n_c]
+                src = np.asarray(src_d)[:n_c].astype(np.int64)
+                dst = np.asarray(dst_d)[:n_c].astype(np.int64)
+                src_slot = np.asarray(slot_d)[:n_c]
+            b_idx, r_idx = np.nonzero(moved)  # id-major, slot-minor
+            out["ids"].append(c[b_idx])
+            out["src"].append(src[b_idx, r_idx])
+            out["dst"].append(dst[b_idx, r_idx])
+            out["idx"].append(base[b_idx])
+            out["slot"].append(r_idx.astype(np.int32))
+            out["src_slot"].append(src_slot[b_idx, r_idx].astype(np.int32))
+        cat = lambda parts, dtype: (  # noqa: E731
+            np.concatenate(parts) if parts else np.zeros(0, dtype=dtype)
+        )
+        return MigrationPlan(
+            v_from=v_from,
+            v_to=v_to,
+            ids=cat(out["ids"], np.uint32),
+            src=cat(out["src"], np.int64),
+            dst=cat(out["dst"], np.int64),
+            index=cat(out["idx"], np.int64),
+            n_scanned=len(ids),
+            n_replicas=n_replicas,
+            slot=cat(out["slot"], np.int32),
+            src_slot=cat(out["src_slot"], np.int32),
+        )
+
     def _candidates(
-        self, chunk: np.ndarray, v_from: int, max_new_seg: int, host: bool
+        self,
+        chunk: np.ndarray,
+        v_from: int,
+        max_new_seg: int,
+        host: bool,
+        n_replicas: int = 1,
     ) -> np.ndarray:
-        """AN <= max_new_seg prefilter mask (sound: unknown -> candidate)."""
+        """AN <= max_new_seg prefilter mask (sound: unknown -> candidate);
+        the ADDITION NUMBER is computed for the R-replica trace."""
         if host:
             from repro.core.asura import addition_numbers_batch
 
             art = self.engine.artifact_for(v_from)
             lengths = art.len32.astype(np.float64) / 2.0**32  # exact round-trip
             an = addition_numbers_batch(
-                chunk, lengths, art.node_of, params=self.engine.params
+                chunk,
+                lengths,
+                art.node_of,
+                n_replicas,
+                params=self.engine.params,
             )
             return an <= max_new_seg
-        an = np.asarray(self.engine.addition_numbers_device(chunk, version=v_from))
+        an = np.asarray(
+            self.engine.addition_numbers_device(
+                chunk, version=v_from, n_replicas=n_replicas
+            )
+        )
         return (an < 0) | (an <= max_new_seg)

@@ -21,6 +21,14 @@ vectorized sweep -- the ``MovePlan`` dict is built from the plan's moved
 arrays, not a per-candidate Python loop.  ``add_node_live`` /
 ``remove_node_live`` return the same change as a ``LiveMigration``: a
 throttled, dual-version-served drain instead of an instantaneous swap.
+
+With ``n_replicas > 1`` the coordinator tracks full R-way replica SETS
+(section 5.A) and every event plans through the per-slot replica planner
+(DESIGN.md section 10): only replicas whose owner actually changed move,
+live drains serve mixed-version replica sets via
+``LiveMigration.route_replicas``, and a failed node repairs as a
+throttled replica migration (exactly its replica mass) instead of full
+re-replication.
 """
 
 from __future__ import annotations
@@ -30,7 +38,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import Cluster
-from repro.core.asura import addition_numbers_batch, remove_numbers
+from repro.core.asura import DEFAULT_PARAMS, addition_numbers_batch
 from repro.migrate import LiveMigration, MigrationPlan, MigrationPlanner
 
 
@@ -47,26 +55,49 @@ class MovePlan:
 
 class ElasticCoordinator:
     def __init__(
-        self, cluster: Cluster, tracked_ids: np.ndarray, *, algorithm: str = "asura"
+        self,
+        cluster: Cluster,
+        tracked_ids: np.ndarray,
+        *,
+        algorithm: str = "asura",
+        n_replicas: int = 1,
     ):
         self.cluster = cluster
         self.engine = cluster.engine  # shared versioned table artifact
         self.algorithm = algorithm
+        self.n_replicas = int(n_replicas)
+        if self.n_replicas > 1 and algorithm != "asura":
+            raise ValueError(
+                "replica-set tracking rides on ASURA's section 5.A "
+                f"replication; got algorithm={algorithm!r}"
+            )
         self.planner = MigrationPlanner(self.engine)
         self.tracked = np.asarray(tracked_ids, dtype=np.uint32)
-        self._owners = self.engine.place_nodes(self.tracked, algorithm=algorithm)
+        if self.n_replicas > 1:
+            # (n, R) replica-node sets, primary first
+            self._owners = self.engine.place_replica_nodes(
+                self.tracked, self.n_replicas
+            )
+        else:
+            self._owners = self.engine.place_nodes(self.tracked, algorithm=algorithm)
         self._an: np.ndarray | None = None  # lazy ADDITION NUMBER cache
         self._live_migration: LiveMigration | None = None  # in-flight drain
+        self._last_revert = None  # (rows, before-sets) of the last replica apply
 
     # -- metadata ------------------------------------------------------------
 
     def _addition_numbers(self) -> np.ndarray:
         if self._an is None:
             # Vectorized 2.D metadata: one batched trace over every tracked
-            # id (addition_numbers_batch), not a per-id Python loop.
+            # id (addition_numbers_batch), not a per-id Python loop -- for
+            # replica sets, the R-replica trace's AN.
             art = self.engine.artifact()
             self._an = addition_numbers_batch(
-                self.tracked, self.cluster.seg_lengths(), art.node_of
+                self.tracked,
+                self.cluster.seg_lengths(),
+                art.node_of,
+                self.n_replicas,
+                params=getattr(self.cluster, "params", DEFAULT_PARAMS),
             )
         return self._an
 
@@ -74,43 +105,73 @@ class ElasticCoordinator:
 
     def _apply(self, plan: MigrationPlan, rows: np.ndarray) -> MovePlan:
         """Fold a planner diff over ``rows`` of the tracked set into the
-        owner table and a ``MovePlan`` (vectorized dict build)."""
-        self._owners[rows[plan.index]] = plan.dst
+        owner table and a ``MovePlan`` (vectorized dict build).
+
+        Replica mode re-places the CHANGED ids' full sets rather than
+        patching moved slots: common nodes can permute positions inside a
+        set across versions, so only the fresh v+1 sets are positionally
+        authoritative.  The pre-event sets are remembered for
+        ``rollback_live``."""
+        if self.n_replicas > 1:
+            changed = (
+                rows[np.unique(plan.index)]
+                if plan.n_moves
+                else np.zeros(0, dtype=np.int64)
+            )
+            self._last_revert = (changed, self._owners[changed].copy())
+            if len(changed):
+                self._owners[changed] = self.engine.place_replica_nodes(
+                    self.tracked[changed], self.n_replicas
+                )
+        else:
+            self._owners[rows[plan.index]] = plan.dst
         self._an = None  # ANs shift once their segment is taken; recompute lazily
         return MovePlan(plan.moves_dict())
+
+    def _plan_candidates(self, rows: np.ndarray, v_from: int) -> MigrationPlan:
+        """One planner sweep over candidate rows, with the cached owner
+        table supplying the v side (one placement per candidate, not two)."""
+        if self.n_replicas > 1:
+            return self.planner.plan_replicas(
+                self.tracked[rows],
+                v_from,
+                self.cluster.version,
+                self.n_replicas,
+                known_before=self._owners[rows],
+            )
+        return self.planner.plan(
+            self.tracked[rows],
+            v_from,
+            self.cluster.version,
+            known_src=self._owners[rows],
+        )
 
     def _add_plan(self, node_id: int, capacity: float):
         """Mutate the cluster; diff the AN-candidate rows -> (plan, rows).
 
         The AN <= f prefilter shrinks the recompute set; the candidates
-        are then diffed in one planner sweep, with the cached owner table
-        supplying the v owners (one placement per candidate, not two)."""
+        are then diffed in one planner sweep."""
         an = self._addition_numbers()
         self.engine.artifact()  # pin the v table in the LRU before mutating
         v_from = self.cluster.version
         new_segs = self.cluster.add_node(node_id, capacity)
         rows = np.nonzero(an <= max(new_segs))[0]
-        plan = self.planner.plan(
-            self.tracked[rows],
-            v_from,
-            self.cluster.version,
-            known_src=self._owners[rows],
-        )
-        return plan, rows
+        return self._plan_candidates(rows, v_from), rows
 
     def _remove_plan(self, node_id: int):
-        """Mutate the cluster; diff the victim's rows -> (plan, rows)."""
+        """Mutate the cluster; diff the victim's rows -> (plan, rows).
+
+        Replica mode: a datum is affected iff the victim is IN its replica
+        set -- the vectorized REMOVE-NUMBER test (a remove number names a
+        victim segment exactly when the victim owns a replica)."""
         self.engine.artifact()
         v_from = self.cluster.version
-        rows = np.nonzero(self._owners == node_id)[0]
+        if self.n_replicas > 1:
+            rows = np.nonzero((self._owners == node_id).any(axis=1))[0]
+        else:
+            rows = np.nonzero(self._owners == node_id)[0]
         self.cluster.remove_node(node_id)
-        plan = self.planner.plan(
-            self.tracked[rows],
-            v_from,
-            self.cluster.version,
-            known_src=self._owners[rows],
-        )
-        return plan, rows
+        return self._plan_candidates(rows, v_from), rows
 
     def _baseline_event(self, mutate) -> MovePlan:
         """Movement accounting for a baseline algorithm: pin the current
@@ -188,6 +249,8 @@ class ElasticCoordinator:
         )
         # remembered so rollback_live can revert the owner table rows
         migration.tracked_rows = rows[plan.index]
+        if self.n_replicas > 1:
+            migration.replica_revert = self._last_revert
         self._live_migration = migration
         return migration
 
@@ -262,7 +325,13 @@ class ElasticCoordinator:
                 "only add-node migrations roll back exactly; undo a removal "
                 "by re-adding the node (a regular add event)"
             )
-        self._owners[migration.tracked_rows] = migration.state.plan.src
+        if self.n_replicas > 1:
+            # whole pre-event sets were remembered (slot patches cannot
+            # reconstruct them: common nodes may have permuted positions)
+            revert_rows, before_sets = migration.replica_revert
+            self._owners[revert_rows] = before_sets
+        else:
+            self._owners[migration.tracked_rows] = migration.state.plan.src
         self._an = None
         self.cluster.remove_node(event[1])
         migration._coordinator_rollback = True  # bare rollback() is refused
@@ -270,13 +339,18 @@ class ElasticCoordinator:
         self._live_migration = reverse  # the drain in flight is now the reverse
         return reverse
 
+    def remove_numbers_batch(self, datum_ids, n_replicas: int) -> np.ndarray:
+        """Vectorized section 2.D REMOVE NUMBERS -> (batch, R) sorted segs.
+
+        One replica-placement sweep on the engine path (cached artifact,
+        device backends stay on device) instead of the historical per-id
+        scalar trace."""
+        return self.engine.remove_numbers_batch(datum_ids, n_replicas)
+
     def remove_numbers_for(self, datum_id: int, n_replicas: int) -> list[int]:
-        return remove_numbers(
-            datum_id,
-            self.cluster.seg_lengths(),
-            self.cluster.seg_to_node(),
-            n_replicas,
-        )
+        return [int(x) for x in self.remove_numbers_batch([datum_id], n_replicas)[0]]
 
     def owners(self) -> np.ndarray:
+        """The tracked owner table: (n,) node ids, or (n, R) replica sets
+        when the coordinator tracks replicas."""
         return self._owners.copy()

@@ -5,18 +5,24 @@ A node that misses ``timeout`` of heartbeats is declared dead; the caller
 ElasticCoordinator.remove_node -> checkpoint restore -> resume.  The clock is
 injected so tests are deterministic.
 
-``MigrationDriver`` is the live-migration wiring (DESIGN.md section 8): a
-detected failure starts a throttled repair ``LiveMigration`` instead of an
-instantaneous table swap, and the same injected clock that declared the
-node dead paces the repair rounds -- repair bandwidth is the scarce
-resource (arXiv:1701.00335), so recovery traffic is budgeted exactly like
-planned scale events.
+``MigrationDriver`` is the live-migration wiring (DESIGN.md sections 8,
+10): a detected failure starts a throttled repair ``LiveMigration``
+instead of an instantaneous table swap, and the same injected clock that
+declared the node dead paces the repair rounds -- repair bandwidth is the
+scarce resource (arXiv:1701.00335), so recovery traffic is budgeted
+exactly like planned scale events.  With a replica-tracking coordinator
+(``ElasticCoordinator(n_replicas=R)``) the repair is a REPLICA repair:
+exactly the victim's replica mass re-replicates, per slot, instead of
+whole-datum re-replication -- the surviving R-1 copies keep serving
+throughout.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
+
+from repro.migrate import DrainDriver
 
 
 @dataclasses.dataclass
@@ -50,18 +56,22 @@ class FailureDetector:
         return newly_dead
 
 
-class MigrationDriver:
+class MigrationDriver(DrainDriver):
     """Failure -> throttled repair migration (no instantaneous swap).
 
     ``start_repair(node_id)`` must produce a ``LiveMigration`` (typically
-    ``ElasticCoordinator.remove_node_live`` with the same injected clock).
-    ``poll()`` detects deaths and queues their repairs; ``pump()`` advances
-    the in-flight repair by the rounds its clock says are due and retires
-    it when drained.  Repairs run ONE AT A TIME in death order -- the
-    dual-version read rules of overlapping migrations do not compose
-    (a second plan would source ids from mid-flight locations), and the
-    coordinator enforces the same single-drain rule.  While a repair is in
-    flight, readers route through its rule (``active`` exposes it).
+    ``ElasticCoordinator.remove_node_live`` with the same injected clock;
+    on a replica-tracking coordinator that is a per-slot REPLICA repair --
+    only the victim's replica mass moves).  ``poll()`` detects deaths and
+    queues their repairs; ``pump()`` advances the in-flight repair by the
+    rounds its clock says are due and retires it when drained, and
+    ``round()``/``run()`` (the shared ``DrainDriver`` loop) drive the
+    queue clocklessly -- ``run()`` drains every queued repair.  Repairs
+    run ONE AT A TIME in death order -- the dual-version read rules of
+    overlapping migrations do not compose (a second plan would source ids
+    from mid-flight locations), and the coordinator enforces the same
+    single-drain rule.  While a repair is in flight, readers route through
+    its rule (``active`` exposes it).
     """
 
     def __init__(self, tracker: HeartbeatTracker, start_repair: Callable[[int], "object"]):
@@ -83,13 +93,35 @@ class MigrationDriver:
         """Detect new deaths; queue one repair migration per victim."""
         return self._detector.poll()
 
-    def pump(self) -> list[dict[tuple[int, int], int]]:
-        """Advance the in-flight repair; returns the rounds' matrices."""
-        matrices: list[dict[tuple[int, int], int]] = []
+    @property
+    def done(self) -> bool:
+        return not self.active and not self.queued
+
+    def _pending_desc(self) -> str:
+        return f"{len(self.active)} active + {len(self.queued)} queued repairs"
+
+    def _retire(self) -> None:
         for migration in list(self.active):
-            matrices.extend(migration.pump())
             if migration.done:
                 self.active.remove(migration)
                 self.completed.append(migration)
         self._start_next()
+
+    def _round(self) -> dict[tuple[int, int], int]:
+        """One clockless round of the in-flight repair (starting the next
+        queued one if needed); an idle driver's round is an empty matrix,
+        like the mover's."""
+        self._start_next()
+        if not self.active:
+            return {}
+        matrix = self.active[0].round()
+        self._retire()
+        return matrix
+
+    def _pump_rounds(self) -> list[dict[tuple[int, int], int]]:
+        """Advance the in-flight repair; returns the rounds' matrices."""
+        matrices: list[dict[tuple[int, int], int]] = []
+        for migration in list(self.active):
+            matrices.extend(migration.pump())
+        self._retire()
         return matrices

@@ -125,6 +125,7 @@ class ReplicaRouter:
         *,
         add=None,
         remove=None,
+        n_replicas: int = 1,
         egress=None,
         ingress=None,
         clock=None,
@@ -138,7 +139,11 @@ class ReplicaRouter:
         whose cache is actually warm: the v owner until the session's
         re-prefill lands, the v+1 owner after.  The add-node case uses the
         ADDITION-NUMBER device prefilter, so only AN-candidates pay the
-        dual-version diff.  Returns a ``LiveMigration``.
+        dual-version diff.  With ``n_replicas > 1`` the plan is the
+        per-slot REPLICA plan (DESIGN.md section 10) -- warm-standby
+        session caches (section 5.A fan-out) migrate replica by replica,
+        and ``route_replicas_migrating`` serves the mixed-version sets.
+        Returns a ``LiveMigration``.
         """
         from repro.migrate import LiveMigration, MigrationPlanner
 
@@ -165,9 +170,19 @@ class ReplicaRouter:
             new_segs = self.cluster.add_node(rid, cap)
             if remove is None:
                 max_new_seg = max(new_segs)
-        plan = MigrationPlanner(self.engine).plan(
-            ids, v_from, self.cluster.version, max_new_seg=max_new_seg
-        )
+        planner = MigrationPlanner(self.engine)
+        if n_replicas > 1:
+            plan = planner.plan_replicas(
+                ids,
+                v_from,
+                self.cluster.version,
+                n_replicas,
+                max_new_seg=max_new_seg,
+            )
+        else:
+            plan = planner.plan(
+                ids, v_from, self.cluster.version, max_new_seg=max_new_seg
+            )
         self._scale_migration = LiveMigration.from_plan(
             self.engine,
             plan,
@@ -188,6 +203,18 @@ class ReplicaRouter:
         """Device-resident migration-window routing (zero host syncs after
         the per-round pending-set refresh)."""
         return migration.route_device(session_ids)
+
+    def route_replicas_migrating(self, session_ids, migration) -> np.ndarray:
+        """Migration-window REPLICA routing: (sessions, R) replica sets,
+        each slot independently on whichever side of the version window
+        holds its warm cache (pending -> v-side source, landed -> v+1
+        owner).  Sets stay pairwise-distinct every round."""
+        return migration.route_replicas(np.asarray(session_ids, dtype=np.uint32))
+
+    def route_replicas_migrating_device(self, session_ids, migration):
+        """Device-resident ``route_replicas_migrating`` (zero host syncs
+        after the per-round per-slot pending refresh)."""
+        return migration.route_replicas_device(session_ids)
 
     def table_blob(self) -> str:
         """The only state frontends need to share (kilobytes).
