@@ -12,8 +12,9 @@ the gate never misreads a metric's direction:
 
   * lower-is-better units (``us_per_id``, ``us_per_call``, ``..._s``,
     ``bytes``): regression = fresh > baseline * threshold,
-  * higher-is-better units (``ids_per_s``, ``..._per_s``, ``x_faster``):
-    regression = fresh < baseline / threshold,
+  * higher-is-better units (``ids_per_s``, ``..._per_s``, ``x_faster``,
+    ``x_speedup``): regression = fresh < baseline / threshold; the
+    dimensionless ratio units are compared raw (machine speed cancels),
   * anything else (quality/count metrics like ``maxvar_pct`` or
     ``must_be_0`` counters) is informational -- correctness is the test
     suite's job, not a noisy perf gate's.
@@ -50,7 +51,12 @@ import sys
 DEFAULT_THRESHOLD = 1.25
 
 LOWER_BETTER_UNITS = ("us_per_id", "us_per_call", "s", "elapsed_s", "bytes")
-HIGHER_BETTER_SUFFIXES = ("_per_s", "x_faster")
+HIGHER_BETTER_SUFFIXES = ("_per_s", "x_faster", "x_speedup")
+
+# Units the machine-speed calibration must NOT rescale: deterministic
+# byte counts, and dimensionless ratios (e.g. the scaling suite's
+# ``x_speedup`` entries -- machine speed cancels in the ratio).
+RAW_COMPARE_UNITS = ("bytes", "x_faster", "x_speedup")
 
 
 def direction(unit: str) -> str:
@@ -109,9 +115,10 @@ def compare_entries(
         if b <= 0:
             warnings.append(f"non-positive baseline for {name}; skipped")
             continue
-        # deterministic units (bytes) are compared raw; timed units are
-        # normalized by the machine-speed ratio.
-        scale = 1.0 if str(base.get("unit", "")) == "bytes" else cal
+        # deterministic units (bytes) and dimensionless ratios are compared
+        # raw; timed units are normalized by the machine-speed ratio.
+        unit = str(base.get("unit", ""))
+        scale = 1.0 if unit.endswith(RAW_COMPARE_UNITS) else cal
         if sense == "lower" and f > b * threshold * scale:
             failures.append(
                 f"{name}: {f:.4g} vs baseline {b:.4g} "

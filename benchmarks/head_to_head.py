@@ -189,6 +189,16 @@ def bench_memory(csv_print, node_counts) -> None:
             csv_print(f"h2h_memory_{alg}_n{n_nodes}", n_bytes, "bytes")
 
 
+def bench_scaling(csv_print, quick: bool) -> None:
+    """DESIGN.md section 11: the mesh-sharded uniformity sweep's weak and
+    strong scaling over 1/2/4(/8) forced host devices (one subprocess per
+    device count; results shared with the movement/migrate suites'
+    scaling entries via benchmarks/scaling.py's cache)."""
+    from .scaling import emit
+
+    emit(csv_print, quick, "h2h_sharded_uniformity", "uniformity")
+
+
 def run(csv_print, quick: bool = False) -> None:
     n_nodes = QUICK_NODES if quick else NODES
     batch = QUICK_BATCH if quick else BATCH
@@ -199,3 +209,4 @@ def run(csv_print, quick: bool = False) -> None:
     bench_uniformity(csv_print, n_nodes, dpn)
     bench_movement(csv_print, n_nodes, move_data)
     bench_memory(csv_print, MEMORY_NODES if not quick else (100,))
+    bench_scaling(csv_print, quick)

@@ -127,3 +127,9 @@ def run(csv_print, quick: bool = False) -> None:
         mig2.run()
 
     _replica_entries(csv_print, quick)
+
+    # DESIGN.md section 11: R=3 replica-planner scaling over forced host
+    # devices (subprocess workers, shared with head_to_head/movement).
+    from .scaling import emit
+
+    emit(csv_print, quick, "migrate_replica_plan_sharded", "replica_planner")

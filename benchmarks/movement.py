@@ -175,6 +175,15 @@ def _replica_movement(csv_print, n_nodes: int, n_ids: int, n_replicas: int) -> N
     )
 
 
+def _sharded_planner_scaling(csv_print, quick: bool) -> None:
+    """DESIGN.md section 11: the mesh-sharded streaming planner's weak and
+    strong scaling over 1/2/4(/8) forced host devices (subprocess workers,
+    shared with the head_to_head/migrate scaling entries)."""
+    from .scaling import emit
+
+    emit(csv_print, quick, "migrate_stream_sharded", "planner")
+
+
 def run(csv_print, quick: bool = False) -> None:
     csv_print("movement_calibration", calibration_us(), "us_calibration")
     if quick:
@@ -185,3 +194,4 @@ def run(csv_print, quick: bool = False) -> None:
         _classic_comparisons(csv_print, N_NODES, N_DATA)
         _streaming_planner(csv_print, PLANNER_NODES, PLANNER_IDS, PLANNER_CHUNK)
         _replica_movement(csv_print, REPLICA_NODES, REPLICA_IDS, N_REPLICAS)
+    _sharded_planner_scaling(csv_print, quick)

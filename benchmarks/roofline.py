@@ -1,4 +1,6 @@
-"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md section Roofline).
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md section Roofline),
+plus the PLACEMENT-KERNEL roofline: a bytes-per-id / hashes-per-id model
+ceiling for the sharded sweep throughputs (``placement_roofline`` below).
 
 Reads the JSON emitted by ``repro.launch.dryrun --all --out`` and derives,
 per (arch x shape) cell on the single-pod 16x16 mesh:
@@ -94,9 +96,101 @@ def format_table(rows: list[dict[str, Any]]) -> str:
     return "\n".join(lines)
 
 
-def run(csv_print, path: str = "dryrun_single_pod.json") -> None:
+# ---------------------------------------------------------------------------
+# Placement-kernel roofline (DESIGN.md section 11)
+#
+# The scaling entries (benchmarks/scaling.py) need a ceiling that is NOT
+# just their own committed baseline, so the sweep throughput is checked
+# against a first-order model built from two independently measured
+# machine primitives:
+#
+#   * memory ceiling   -- the sweep streams BYTES_PER_ID per id (4B id
+#     read + 4B owner write for placement; + moved/src/dst = 13B for the
+#     dual diff; the kilobyte table artifacts live in cache and are free),
+#     so ids/s <= stream_bw / bytes_per_id with stream_bw measured by a
+#     large-array copy,
+#   * compute ceiling  -- one ASURA descent draws a geometric number of
+#     u32 hashes with hit rate >= 1/2 (alpha = 2, section 2.C), so
+#     E[draws/id] <= alpha/(alpha-1) = 2 fmix-equivalents (4 for the
+#     dual-version diff); the fmix32 rate comes from the same
+#     ``calibration_us`` workload the perf gate normalizes with.
+#
+# The achieved fraction is informational (unit skipped by the gate): on
+# CPU the jnp while_loop ladder runs well below both ceilings; on TPU the
+# Pallas path should approach the memory line.
+# ---------------------------------------------------------------------------
+
+PLACE_BYTES_PER_ID = 8  # 4B id in + 4B owner out
+DIFF_BYTES_PER_ID = 13  # 4B id in + 1B moved + 4B src + 4B dst out
+PLACE_HASHES_PER_ID = 2.0  # E[draws] <= alpha/(alpha-1), alpha = 2
+DIFF_HASHES_PER_ID = 4.0  # two placement sweeps per id
+
+
+def _stream_bw_bytes_per_s(repeats: int = 5) -> float:
+    """Measured host stream bandwidth: best-of-``repeats`` 64 MiB copy
+    (read + write counted)."""
+    import time
+
+    import numpy as np
+
+    x = np.arange(1 << 23, dtype=np.float64)  # 64 MiB
+    y = np.empty_like(x)
+    np.copyto(y, x)  # warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.copyto(y, x)
+        best = min(best, time.perf_counter() - t0)
+    return 2 * x.nbytes / best
+
+
+def placement_roofline(csv_print, quick: bool) -> None:
+    """Placement/diff sweep ids/s vs the bytes-per-id and hashes-per-id
+    ceilings; measured points come from the scaling workers (cached in
+    ``benchmarks.scaling`` when head_to_head/movement ran in this
+    process, spawned fresh otherwise)."""
+    from .head_to_head import calibration_us
+    from .scaling import measure
+
+    bw = _stream_bw_bytes_per_s()
+    fmix_rate = (1 << 21) / (calibration_us() * 1e-6)  # hashes/s
+    res = measure(quick)
+    one = res[min(res)]
+
+    for kind, bytes_per_id, hashes_per_id, measured in (
+        ("place", PLACE_BYTES_PER_ID, PLACE_HASHES_PER_ID,
+         one["uniformity_strong_ids_per_s"]),
+        ("diff", DIFF_BYTES_PER_ID, DIFF_HASHES_PER_ID,
+         one["planner_strong_ids_per_s"]),
+    ):
+        mem_ceiling = bw / bytes_per_id
+        compute_ceiling = fmix_rate / hashes_per_id
+        ceiling = min(mem_ceiling, compute_ceiling)
+        csv_print(
+            f"roofline_{kind}_bytes_per_id", bytes_per_id, "bytes_per_id_model"
+        )
+        csv_print(
+            f"roofline_{kind}_mem_ceiling_ids_per_s",
+            int(mem_ceiling),
+            f"stream_bw {bw/1e9:.1f}GBps",
+        )
+        csv_print(
+            f"roofline_{kind}_compute_ceiling_ids_per_s",
+            int(compute_ceiling),
+            f"fmix {fmix_rate/1e6:.0f}M_per_s",
+        )
+        bound = "memory" if mem_ceiling < compute_ceiling else "compute"
+        csv_print(
+            f"roofline_{kind}_ceiling_fraction",
+            measured / ceiling,
+            f"{bound}_bound_model",
+        )
+
+
+def run(csv_print, path: str = "dryrun_single_pod.json", quick: bool = False) -> None:
     import os
 
+    placement_roofline(csv_print, quick)
     if not os.path.exists(path):
         csv_print("roofline_skipped", 0, f"no {path}; run dryrun --all --out first")
         return

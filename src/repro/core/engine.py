@@ -185,6 +185,7 @@ class PlacementEngine:
         # the engine carries the table forward version to version instead of
         # re-deriving it from a membership snapshot.
         self._rs_shadow: RandomSlicingTable | None = None
+        self._default_sweep = None  # lazily-built all-device ShardedSweep
         self.uploads = 0  # table materializations (one per (algorithm, version))
 
     # -- artifact lifecycle --------------------------------------------------
@@ -786,6 +787,24 @@ class PlacementEngine:
             n_replicas=n_replicas,
             params=self.params,
         )
+
+    def sharded(self, mesh=None):
+        """A ``ShardedSweep`` running this engine's bulk sweeps across a
+        device mesh (DESIGN.md section 11): id streams partitioned over the
+        data axis, table artifacts replicated, histograms / movement
+        matrices / moved counts reduced with one ``psum`` -- bit-identical
+        to the single-device ``*_device`` methods.
+
+        ``mesh=None`` spans all visible devices; sweeps on the default mesh
+        are cached so repeat calls share the compiled shard_map callables.
+        """
+        from repro.launch.placement_mesh import ShardedSweep
+
+        if mesh is not None:
+            return ShardedSweep(self, mesh)
+        if self._default_sweep is None:
+            self._default_sweep = ShardedSweep(self)
+        return self._default_sweep
 
     def _device_kwargs(self) -> dict:
         kw = self._kernel_kwargs()

@@ -39,6 +39,30 @@ import numpy as np
 
 DEFAULT_CHUNK = 1 << 20  # ids per streaming chunk (fixed device memory)
 
+_MASK_CACHE: dict = {}
+
+
+def _mask_tail(moved, n_valid: int):
+    """``moved`` with rows >= ``n_valid`` forced False, on device.
+
+    ``n_valid`` is a TRACED argument, so every ragged tail that lands in
+    the same pow2 bucket shares one compile -- the whole point of the
+    bucketing (a static tail length would compile once per distinct
+    raggedness, the bug this fixes)."""
+    import jax
+    import jax.numpy as jnp
+
+    fn = _MASK_CACHE.get(moved.ndim)
+    if fn is None:
+
+        @jax.jit
+        def fn(m, n):
+            idx = jnp.arange(m.shape[0]).reshape((-1,) + (1,) * (m.ndim - 1))
+            return m & (idx < n)
+
+        _MASK_CACHE[moved.ndim] = fn
+    return fn(moved, n_valid)
+
 
 @dataclasses.dataclass(frozen=True)
 class MigrationPlan:
@@ -113,6 +137,18 @@ class MigrationPlanner:
     def __init__(self, engine):
         self.engine = engine
 
+    def _sweep(self, mesh):
+        """Resolve ``mesh=`` (a Mesh, a ``ShardedSweep``, or None) into a
+        sweep bound to this planner's engine -- the multi-chip diff path
+        (DESIGN.md section 11)."""
+        if mesh is None:
+            return None
+        from repro.launch.placement_mesh import ShardedSweep
+
+        if isinstance(mesh, ShardedSweep):
+            return mesh
+        return ShardedSweep(self.engine, mesh)
+
     # -- device streaming sweep ---------------------------------------------
 
     def diff_device(self, datum_ids, v_from: int, v_to: int):
@@ -129,35 +165,85 @@ class MigrationPlanner:
             datum_ids, v_from, v_to, n_replicas
         )
 
-    def plan_stream(self, id_chunks, v_from: int, v_to: int):
+    def plan_stream(self, id_chunks, v_from: int, v_to: int, *, mesh=None):
         """Streaming sweep: yield ``(ids, moved, src, dst)`` per chunk.
 
         ``id_chunks`` is any iterable of id arrays (device arrays keep the
         whole sweep sync-free; NumPy chunks pay one upload each -- the
         host-feeding pattern).  Device memory is bounded by the largest
         chunk, not the id population.
+
+        A ragged final chunk is padded into its pow2 bucket (the same
+        buckets the prefilter path uses) so the jitted diff sees O(log
+        chunk) distinct shapes instead of one extra compile per sweep; the
+        yielded arrays are bucket-length with the pad lanes' ``moved``
+        forced False on device, so counts and selections over the stream
+        see no phantom moves.  Full chunks take the unpadded zero-sync path
+        untouched.
+
+        ``mesh=`` (a Mesh or a ``ShardedSweep``) runs each chunk's diff
+        across the mesh's data axis instead of one device -- same yielded
+        contract, bit-identical outputs, host-fed chunks (DESIGN.md
+        section 11).
         """
+        sweep = self._sweep(mesh)
+        mult = 1 if sweep is None else sweep.n_devices
         for chunk in id_chunks:
-            moved, src, dst = self.diff_device(chunk, v_from, v_to)
-            yield chunk, moved, src, dst
+            padded, n_valid = self._pad_pow2(chunk, mult)
+            if sweep is None:
+                moved, src, dst = self.diff_device(padded, v_from, v_to)
+            else:
+                moved, src, dst = sweep.diff_nodes_device(padded, v_from, v_to)
+            if padded is not chunk:
+                moved = _mask_tail(moved, n_valid)
+            yield padded, moved, src, dst
 
     def plan_replicas_stream(
-        self, id_chunks, v_from: int, v_to: int, n_replicas: int
+        self, id_chunks, v_from: int, v_to: int, n_replicas: int, *, mesh=None
     ):
         """Replica streaming sweep: yield ``(ids, moved, src, dst,
         src_slot)`` device tuples per chunk -- the R-way twin of
-        ``plan_stream``, same fixed device memory and zero host syncs."""
+        ``plan_stream``, same fixed device memory, zero host syncs, pow2
+        tail bucketing (pad rows' ``moved`` all False) and optional
+        ``mesh=`` scale-out."""
+        sweep = self._sweep(mesh)
+        mult = 1 if sweep is None else sweep.n_devices
         for chunk in id_chunks:
-            moved, src, dst, src_slot = self.diff_replicas_device(
-                chunk, v_from, v_to, n_replicas
-            )
-            yield chunk, moved, src, dst, src_slot
+            padded, n_valid = self._pad_pow2(chunk, mult)
+            if sweep is None:
+                moved, src, dst, src_slot = self.diff_replicas_device(
+                    padded, v_from, v_to, n_replicas
+                )
+            else:
+                moved, src, dst, src_slot = sweep.diff_replicas_device(
+                    padded, v_from, v_to, n_replicas
+                )
+            if padded is not chunk:
+                moved = _mask_tail(moved, n_valid)
+            yield padded, moved, src, dst, src_slot
 
     @staticmethod
     def chunked(ids: np.ndarray, chunk: int = DEFAULT_CHUNK):
         """Host-side chunking helper for ``plan_stream``."""
         for start in range(0, len(ids), chunk):
             yield ids[start : start + chunk]
+
+    @staticmethod
+    def _pad_pow2(chunk, multiple: int = 1):
+        """(padded, n_valid): zero-pad a chunk into its pow2 bucket (and up
+        to a device multiple for mesh sweeps).  Full pow2 chunks pass
+        through untouched (``padded is chunk`` -- the zero-sync fast path);
+        device-array tails pad ON DEVICE (``kernels.ops._pad_ids``)."""
+        n = int(chunk.shape[0])
+        target = 1 << max(0, n - 1).bit_length()
+        target += (-target) % max(1, multiple)
+        if target == n:
+            return chunk, n
+        if isinstance(chunk, np.ndarray):
+            return np.pad(chunk, (0, target - n)), n
+        from repro.kernels.ops import _pad_ids
+
+        return _pad_ids(chunk, target), n
 
     # -- host-facing plan assembly ------------------------------------------
 
@@ -170,6 +256,7 @@ class MigrationPlanner:
         chunk: int = DEFAULT_CHUNK,
         max_new_seg: int | None = None,
         known_src=None,
+        mesh=None,
     ) -> MigrationPlan:
         """Assemble the full ``MigrationPlan`` for a tracked id set.
 
@@ -187,9 +274,15 @@ class MigrationPlanner:
         On the numpy backend the diff runs on the vectorized host path
         (same bit-identical placements, no jit warm-up) -- the engine's
         usual backend contract.
+
+        ``mesh=`` (a Mesh or ``ShardedSweep``) runs every chunk's dual
+        diff across the mesh's data axis -- the assembled plan is
+        bit-identical (DESIGN.md section 11); it forces the device path
+        regardless of backend.
         """
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
-        host = self.engine.backend == "numpy"
+        sweep = self._sweep(mesh)
+        host = self.engine.backend == "numpy" and sweep is None
         if known_src is not None:
             known_src = np.asarray(known_src, dtype=np.int64)
         out_ids: list[np.ndarray] = []
@@ -217,9 +310,15 @@ class MigrationPlanner:
                 # so the jitted diff sees O(log chunk) distinct shapes, not
                 # one compile per candidate count.
                 n_c = len(c)
-                target = 1 << max(0, n_c - 1).bit_length()
-                cp = np.pad(c, (0, target - n_c)) if target != n_c else c
-                moved_d, src_d, dst_d = self.diff_device(cp, v_from, v_to)
+                cp, _ = self._pad_pow2(
+                    c, 1 if sweep is None else sweep.n_devices
+                )
+                if sweep is None:
+                    moved_d, src_d, dst_d = self.diff_device(cp, v_from, v_to)
+                else:
+                    moved_d, src_d, dst_d = sweep.diff_nodes_device(
+                        cp, v_from, v_to
+                    )
                 moved = np.asarray(moved_d)[:n_c]
                 src = np.asarray(src_d)[:n_c].astype(np.int64)
                 dst = np.asarray(dst_d)[:n_c].astype(np.int64)
@@ -250,6 +349,7 @@ class MigrationPlanner:
         chunk: int = DEFAULT_CHUNK,
         max_new_seg: int | None = None,
         known_before=None,
+        mesh=None,
     ) -> MigrationPlan:
         """Assemble the per-slot REPLICA ``MigrationPlan`` for an id set.
 
@@ -265,10 +365,12 @@ class MigrationPlanner:
         replica trace's AN; sound, plan-preserving).  ``known_before``
         (aligned (len(ids), R) v replica sets a caller already maintains,
         e.g. the coordinator's owner table) saves the host path one of the
-        two placement sweeps.
+        two placement sweeps.  ``mesh=`` scales the dual replica diff over
+        the mesh's data axis, bit-identically, as in ``plan``.
         """
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
-        host = self.engine.backend == "numpy"
+        sweep = self._sweep(mesh)
+        host = self.engine.backend == "numpy" and sweep is None
         if known_before is not None:
             known_before = np.asarray(known_before, dtype=np.int64)
         out: dict[str, list[np.ndarray]] = {
@@ -297,11 +399,17 @@ class MigrationPlanner:
             else:
                 # pow2-bucketed ragged chunks, as in ``plan``
                 n_c = len(c)
-                target = 1 << max(0, n_c - 1).bit_length()
-                cp = np.pad(c, (0, target - n_c)) if target != n_c else c
-                moved_d, src_d, dst_d, slot_d = self.diff_replicas_device(
-                    cp, v_from, v_to, n_replicas
+                cp, _ = self._pad_pow2(
+                    c, 1 if sweep is None else sweep.n_devices
                 )
+                if sweep is None:
+                    moved_d, src_d, dst_d, slot_d = self.diff_replicas_device(
+                        cp, v_from, v_to, n_replicas
+                    )
+                else:
+                    moved_d, src_d, dst_d, slot_d = sweep.diff_replicas_device(
+                        cp, v_from, v_to, n_replicas
+                    )
                 moved = np.asarray(moved_d)[:n_c]
                 src = np.asarray(src_d)[:n_c].astype(np.int64)
                 dst = np.asarray(dst_d)[:n_c].astype(np.int64)

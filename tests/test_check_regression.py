@@ -43,6 +43,7 @@ def test_direction_policy():
     assert direction("us_per_call") == "lower"
     assert direction("bytes") == "lower"
     assert direction("ids_per_s") == "higher"
+    assert direction("x_speedup") == "higher"  # the scaling-suite ratios
     assert direction("an_prefilter") == "skip"  # derived-note units skipped
     assert direction("maxvar_pct") == "skip"
     assert direction("must_be_0_if_optimal") == "skip"
@@ -100,6 +101,7 @@ CAL_BASE = _payload(
         "h2h_calc_asura_n32": (10.0, "us_per_id"),
         "migrate_stream_ids_per_s": (1_000_000, "ids_per_s"),
         "h2h_memory_ch_n100": (80_000, "bytes"),
+        "migrate_stream_sharded_strong_4dev_x_speedup": (2.5, "x_speedup"),
     }
 )
 
@@ -148,6 +150,20 @@ def test_bytes_entries_compare_raw_despite_calibration():
     fresh = _with(CAL_BASE, h2h_calibration=200.0, h2h_memory_ch_n100=160_000)
     failures, _ = compare_entries(CAL_BASE, fresh)
     assert any("h2h_memory_ch_n100" in f for f in failures)
+
+
+def test_speedup_ratios_compare_raw_despite_calibration():
+    """Scaling speedups are dimensionless -- machine speed cancels in the
+    ratio, so a slower runner must not excuse a lost speedup (and a lost
+    speedup IS a regression)."""
+    name = "migrate_stream_sharded_strong_4dev_x_speedup"
+    fresh = _with(CAL_BASE, **{"h2h_calibration": 200.0, name: 1.1})
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert any(name in f for f in failures)
+    # within threshold: fine, regardless of calibration swing
+    fresh = _with(CAL_BASE, **{"h2h_calibration": 200.0, name: 2.2})
+    failures, _ = compare_entries(CAL_BASE, fresh)
+    assert not any(name in f for f in failures)
 
 
 def test_calibration_ratio_clamped():
