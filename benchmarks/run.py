@@ -31,6 +31,7 @@ from . import (
     movement,
     replicas,
     roofline,
+    serve,
     uniformity,
 )
 
@@ -42,6 +43,7 @@ SUITES = {
     "migrate": migrate,
     "replicas": replicas,
     "head_to_head": head_to_head,
+    "serve": serve,
     "table3_actual_usage": actual_usage,
     "capacity": capacity,
     "roofline": roofline,

@@ -443,10 +443,33 @@ class PlacementEngine:
             **self._kernel_kwargs(),
         )
 
-    def place_replica_nodes(self, datum_ids, n_replicas: int) -> np.ndarray:
-        """(batch, R) node ids, primary first."""
-        self._require_asura("place_replica_nodes")
-        art = self.artifact()
+    def place_replica_nodes(
+        self, datum_ids, n_replicas: int, algorithm: str | None = None
+    ) -> np.ndarray:
+        """(batch, R) node ids, primary first (dispatches on ``algorithm``:
+        ASURA's section-5.A distinct-node draw, or the baselines' salted
+        rejection fan-out -- DESIGN.md section 12)."""
+        alg = self._resolve_algorithm(algorithm)
+        if alg != "asura":
+            from repro.kernels.baselines import baseline_place_replicas_np
+
+            art = self.artifact(alg)
+            ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+            if self.backend == "numpy":
+                out = baseline_place_replicas_np(
+                    alg, ids, art.keys, art.vals, n_replicas
+                )
+            else:
+                out = np.asarray(
+                    self.place_replica_nodes_device(ids, n_replicas, algorithm=alg)
+                ).astype(np.int64)
+            if n_replicas > 1 and (out < 0).any():
+                raise ValueError(
+                    f"{alg} replica fan-out found no {n_replicas} distinct "
+                    "nodes within the try budget (R exceeds live nodes?)"
+                )
+            return out
+        art = self.artifact("asura")
         return art.node_of[self.place_replicas(datum_ids, n_replicas)]
 
     def remove_numbers_batch(
@@ -588,13 +611,29 @@ class PlacementEngine:
             **self._device_kwargs(),
         )
 
-    def place_replica_nodes_device(self, datum_ids, n_replicas: int):
+    def place_replica_nodes_device(
+        self, datum_ids, n_replicas: int, algorithm: str | None = None
+    ):
         """(batch, R) int32 node ids on device, primary first, zero host
-        syncs.  Non-converged entries stay -1 (checking would force a
-        sync); the host variant raises instead."""
+        syncs (dispatches on ``algorithm``).  Non-converged entries stay -1
+        (checking would force a sync); the host variant raises instead."""
         from repro.kernels.ops import place_replicas_on_table_device
 
-        self._require_asura("place_replica_nodes_device")
+        alg = self._resolve_algorithm(algorithm)
+        if alg != "asura":
+            from repro.kernels.baselines import (
+                baseline_place_replicas_on_table_device,
+            )
+
+            art = self._device_artifact(alg)
+            return baseline_place_replicas_on_table_device(
+                alg,
+                datum_ids,
+                art.keys_dev,
+                art.vals_dev,
+                n_replicas=n_replicas,
+                **self._baseline_device_kwargs(),
+            )
         art = self._device_artifact("asura")
         return place_replicas_on_table_device(
             datum_ids,

@@ -50,7 +50,18 @@ __all__ = [
     "rs_place_pallas",
     "wrh_place_pallas",
     "baseline_place_on_table_device",
+    "baseline_replicas_lookup",
+    "baseline_place_replicas_np",
+    "baseline_place_replicas_on_table_device",
+    "REPLICA_FANOUT_LEVEL",
+    "REPLICA_MAX_TRIES",
 ]
+
+# R-way fan-out rejection stream: the r-th re-probe hashes the datum id
+# through the shared counter-based generator at a reserved level far above
+# any ASURA ladder level, so fan-out draws can never alias placement draws.
+REPLICA_FANOUT_LEVEL = 0x52455031  # "REP1"
+REPLICA_MAX_TRIES = 64  # collision odds ~ (R/N)**tries: negligible at 64
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +340,134 @@ def _wrh_ref(ids, node_ids, weights):
 
 _REF = {"ch": _ch_ref, "rs": _rs_ref, "wrh": _wrh_ref}
 _PALLAS = {"ch": ch_place_pallas, "rs": rs_place_pallas, "wrh": wrh_place_pallas}
+_LOOKUP = {"ch": ch_lookup, "rs": rs_lookup, "wrh": wrh_lookup}
+
+
+# ---------------------------------------------------------------------------
+# R-way replica fan-out (serving read fan-out for the baselines)
+# ---------------------------------------------------------------------------
+#
+# The baselines have no segment semantics, so ASURA's section-5.A distinct-
+# node replica draw does not apply.  The standard construction is a salted
+# rejection re-probe: slot 0 is the primary lookup; each further slot
+# re-places a fresh counter-based hash of the id (``draw_u32`` at the
+# reserved fan-out level) and accepts the first candidate distinct from the
+# already-accepted set.  Same bounded-tries / -1 sentinel contract as the
+# ASURA replica kernel, and the jnp body is bit-identical to the NumPy
+# oracle (integer lookups on both sides).
+
+
+def baseline_replicas_lookup(
+    lookup,
+    ids: jax.Array,
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    n_replicas: int,
+    max_tries: int = REPLICA_MAX_TRIES,
+) -> jax.Array:
+    """Shape-polymorphic jnp R-way fan-out -> (*ids.shape, R) int32 nodes.
+
+    ``lookup`` is one of the ``*_lookup`` bodies; slots that fail to find a
+    distinct node within ``max_tries`` stay -1 (only possible when
+    R > live nodes, or with astronomically bad luck)."""
+    shape = ids.shape
+    u = ids.astype(jnp.uint32)
+    prim = lookup(ids, keys, vals)
+    if n_replicas == 1:
+        return prim[..., None]
+    slots = jnp.full((n_replicas,) + shape, -1, dtype=jnp.int32)
+    slots = slots.at[0].set(prim)
+    found = jnp.ones(shape, dtype=jnp.int32)
+    row = jnp.arange(n_replicas, dtype=jnp.int32).reshape(
+        (n_replicas,) + (1,) * len(shape)
+    )
+
+    def body(k, state):
+        slots, found = state
+        ctr = jnp.broadcast_to(jnp.asarray(k).astype(jnp.uint32), shape)
+        h = draw_u32(u, REPLICA_FANOUT_LEVEL, ctr)
+        cand = lookup(h, keys, vals)
+        dup = jnp.any(slots == cand[None], axis=0)
+        take = (~dup) & (found < n_replicas)
+        put = take[None] & (row == found[None])
+        slots = jnp.where(put, cand[None], slots)
+        found = found + take.astype(jnp.int32)
+        return slots, found
+
+    slots, _ = jax.lax.fori_loop(1, max_tries + 1, body, (slots, found))
+    return jnp.moveaxis(slots, 0, -1)
+
+
+def baseline_place_replicas_np(
+    algorithm: str,
+    datum_ids,
+    keys: np.ndarray,
+    vals: np.ndarray,
+    n_replicas: int,
+    *,
+    max_tries: int = REPLICA_MAX_TRIES,
+) -> np.ndarray:
+    """NumPy oracle of ``baseline_replicas_lookup`` -> (batch, R) int64."""
+    from repro.core.consistent_hashing import ch_place_np
+    from repro.core.random_slicing import rs_place_np
+    from repro.core.rng import draw_u32_np
+    from repro.core.wrh import wrh_place_np
+
+    place = {"ch": ch_place_np, "rs": rs_place_np, "wrh": wrh_place_np}[algorithm]
+    ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+    n = ids.shape[0]
+    slots = np.full((n_replicas, n), -1, dtype=np.int64)
+    slots[0] = place(ids, keys, vals)
+    found = np.ones(n, dtype=np.int64)
+    for k in range(1, max_tries + 1):
+        if (found >= n_replicas).all():
+            break
+        h = draw_u32_np(ids, REPLICA_FANOUT_LEVEL, np.full(n, k, dtype=np.uint32))
+        cand = place(h, keys, vals)
+        dup = (slots == cand[None]).any(axis=0)
+        take = (~dup) & (found < n_replicas)
+        slots[found[take], np.nonzero(take)[0]] = cand[take]
+        found[take] += 1
+    return slots.T
+
+
+@functools.partial(jax.jit, static_argnames=("algorithm", "n_replicas", "max_tries"))
+def _baseline_replicas_ref(ids, keys, vals, *, algorithm, n_replicas, max_tries):
+    return baseline_replicas_lookup(
+        _LOOKUP[algorithm], ids, keys, vals,
+        n_replicas=n_replicas, max_tries=max_tries,
+    )
+
+
+def baseline_place_replicas_on_table_device(
+    algorithm: str,
+    datum_ids,
+    table_a: jax.Array,
+    table_b: jax.Array,
+    *,
+    n_replicas: int,
+    max_tries: int = REPLICA_MAX_TRIES,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Device-resident baseline fan-out -> (batch, R) int32, zero host syncs.
+
+    Runs the jitted jnp body on every backend (the ``ShardedSweep`` idiom:
+    the fan-out is a rejection loop around the shape-polymorphic lookups,
+    bit-identical to the Pallas lookups by construction), so the
+    ``use_pallas``/``interpret``/``rows_per_block`` knobs are accepted for
+    interface parity with ``baseline_place_on_table_device`` and ignored.
+    """
+    del use_pallas, interpret, rows_per_block
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    if ids.shape[0] == 0:
+        return jnp.zeros((0, n_replicas), dtype=jnp.int32)
+    return _baseline_replicas_ref(
+        ids, table_a, table_b,
+        algorithm=algorithm, n_replicas=n_replicas, max_tries=max_tries,
+    )
 
 
 def baseline_place_on_table_device(

@@ -429,6 +429,20 @@ class ShardedSweep:
         mat = np.asarray(fn(ids, w, *tabs)).astype(np.int64)
         return int(mat.sum()), mat
 
+    # -- serving (DESIGN.md section 12) ---------------------------------------
+
+    def serve_stream(self, **kwargs):
+        """A ``RequestStreamDriver`` sharding its request stream over this
+        mesh: each shard generates its slice of the global lane range
+        (bit-identical words by the counter-based construction), routes and
+        selects against the replicated tables + start-of-batch counters,
+        and the per-node load histogram merges with ONE exact integer psum
+        per batch -- so the sharded stream equals the single-device stream
+        bit for bit (selftest-enforced)."""
+        from repro.serve import RequestStreamDriver
+
+        return RequestStreamDriver(self.engine, mesh=self, **kwargs)
+
 
 # ---------------------------------------------------------------------------
 # Bit-identity selftest (the forced-host-device smoke; tests + CI call this)
@@ -500,6 +514,35 @@ def selftest(n_devices: int | None = None, n_ids: int = 100_003) -> int:
             ), f"R={R}: sharded replica plan field {field} differs"
         rn, _ = sweep.movement_matrix(ids, v0, v1, n_nodes + 1, n_replicas=R)
         assert rn == rplan.n_moves, f"R={R}: sharded replica moved count differs"
+
+    # mesh-sharded serving stream == single-device stream, bit for bit:
+    # chosen nodes, load counters and queue state, every batch, all four
+    # algorithms, R in {1, 3} (DESIGN.md section 12)
+    from repro.serve import RequestStreamDriver
+
+    serve_cluster = make_uniform_cluster(16)
+    batch = 256 * int(mesh.devices.size)
+    for alg in ("asura", "ch", "wrh", "rs"):
+        eng_s = PlacementEngine(serve_cluster, backend="ref", algorithm=alg)
+        for R in (1, 3):
+            kw = dict(
+                batch=batch, n_keys=4096, law="zipf",
+                n_replicas=R, policy="pow2", seed=7,
+            )
+            solo = RequestStreamDriver(eng_s, **kw)
+            shard = RequestStreamDriver(eng_s, mesh=mesh, **kw)
+            for _step in range(3):
+                a = np.asarray(solo.step())
+                b = np.asarray(shard.step())
+                assert np.array_equal(a, b), (
+                    f"{alg} R={R} step {_step}: sharded chosen nodes differ"
+                )
+                assert np.array_equal(
+                    solo.load_counts(), shard.load_counts()
+                ), f"{alg} R={R} step {_step}: sharded load counters differ"
+                assert np.array_equal(
+                    np.asarray(solo.queue), np.asarray(shard.queue)
+                ), f"{alg} R={R} step {_step}: sharded queue state differs"
     return sweep.n_devices
 
 

@@ -62,6 +62,68 @@ def _member_fn():
     return member
 
 
+_ROUTE_CACHE: dict = {}
+_TRACE_COUNTS = {"replica_route": 0}
+
+
+def probe_trace_count(kind: str = "replica_route") -> int:
+    """Total jit traces of the fused window probes so far (the tests'
+    tripwire that repeated serving batches stop retracing)."""
+    return _TRACE_COUNTS[kind]
+
+
+def _fused_replica_route(statics: tuple):
+    """ONE jit for the whole replica read rule, cached per
+    ``(top_level, s_log2, max_draws, n_replicas)``.
+
+    The batched serving driver calls ``route_replicas_device`` every
+    batch; dispatching three separate jits (dst placement, membership
+    probe, merge) per batch is measurable overhead and three chances to
+    leak an eager op.  This fuses dst = v+1 replica sets, the per-slot
+    pending probe and the ``where`` merge into one traced body.  The
+    cache key is exactly the static routing configuration -- re-begun
+    windows, rollbacks and fresh ``LiveMigration`` objects at the same
+    config all reuse the same compiled probe (shape changes of the
+    pending view retrace inside jax's own cache, like every probe here).
+    """
+    fn = _ROUTE_CACHE.get(statics)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import _place_replicas_fused_ref
+
+    top_level, s_log2, max_draws, n_replicas = statics
+
+    @jax.jit
+    def route(ids, len32, node_of, ids_pad, src_pad, counts):
+        _TRACE_COUNTS["replica_route"] += 1  # Python side effect: per TRACE
+        u = ids.astype(jnp.uint32)
+        dst = _place_replicas_fused_ref(
+            u,
+            len32,
+            node_of,
+            top_level=top_level,
+            s_log2=s_log2,
+            max_draws=max_draws,
+            n_replicas=n_replicas,
+            emit_nodes=True,
+        )
+
+        def per_slot(sorted_pad, src_vals, n):
+            pos = jnp.searchsorted(sorted_pad, u, side="left")
+            pos_c = jnp.minimum(pos, sorted_pad.shape[0] - 1)
+            hit = (pos < n) & (sorted_pad[pos_c] == u)
+            return hit, src_vals[pos_c]
+
+        hit, src = jax.vmap(per_slot)(ids_pad, src_pad, counts)
+        return jnp.where(hit.T, src.T, dst)
+
+    _ROUTE_CACHE[statics] = route
+    return route
+
+
 @functools.cache
 def _replica_member_fn():
     """Jitted per-slot membership + aligned-source gather: one vmapped
@@ -201,18 +263,23 @@ class LiveMigration(DrainDriver):
     def route_replicas_device(self, datum_ids):
         """Device-resident ``route_replicas``: (batch, R) int32, zero host
         syncs after the per-round control-path refresh (the per-slot
-        pending view uploads once per round, like ``route_device``)."""
+        pending view uploads once per round, like ``route_device``).
+
+        The whole rule -- v+1 replica placement, per-slot pending probe,
+        merge -- runs as ONE cached jit (``_fused_replica_route``), so the
+        batched serving driver pays a single dispatch per batch and
+        repeated batches never retrace (``probe_trace_count`` tripwire)."""
         self._check_live()
         import jax.numpy as jnp
 
-        dst = self.engine.place_replica_nodes_device_at(
-            datum_ids, self.v_to, self.n_replicas
-        )
+        art = self.engine._device_artifact_for(self.v_to, "asura")
+        params = self.engine.params
+        statics = (art.top_level, params.s_log2, params.max_draws, self.n_replicas)
         ids_pad, src_pad, counts = self.state.pending_replicas_device()
-        pending, src = _replica_member_fn()(
-            jnp.asarray(datum_ids), ids_pad, src_pad, counts
+        return _fused_replica_route(statics)(
+            jnp.asarray(datum_ids), art.len32_dev, art.node_of_dev,
+            ids_pad, src_pad, counts,
         )
-        return jnp.where(pending, src, dst)
 
     # -- drain control (round/pump/run from the shared DrainDriver loop) ------
 

@@ -42,6 +42,25 @@ DEFAULT_CHUNK = 1 << 20  # ids per streaming chunk (fixed device memory)
 _MASK_CACHE: dict = {}
 
 
+def pad_pow2(chunk, multiple: int = 1):
+    """(padded, n_valid): zero-pad a chunk into its pow2 bucket (and up to
+    a device multiple for mesh sweeps), so ragged tails share one compile
+    per bucket.  Full pow2 chunks pass through untouched (``padded is
+    chunk`` -- the zero-sync fast path); device-array tails pad ON DEVICE
+    (``kernels.ops._pad_ids``).  Shared by the streaming planner and the
+    serving driver's external-batch path (DESIGN.md sections 11-12)."""
+    n = int(chunk.shape[0])
+    target = 1 << max(0, n - 1).bit_length()
+    target += (-target) % max(1, multiple)
+    if target == n:
+        return chunk, n
+    if isinstance(chunk, np.ndarray):
+        return np.pad(chunk, (0, target - n)), n
+    from repro.kernels.ops import _pad_ids
+
+    return _pad_ids(chunk, target), n
+
+
 def _mask_tail(moved, n_valid: int):
     """``moved`` with rows >= ``n_valid`` forced False, on device.
 
@@ -228,22 +247,9 @@ class MigrationPlanner:
         for start in range(0, len(ids), chunk):
             yield ids[start : start + chunk]
 
-    @staticmethod
-    def _pad_pow2(chunk, multiple: int = 1):
-        """(padded, n_valid): zero-pad a chunk into its pow2 bucket (and up
-        to a device multiple for mesh sweeps).  Full pow2 chunks pass
-        through untouched (``padded is chunk`` -- the zero-sync fast path);
-        device-array tails pad ON DEVICE (``kernels.ops._pad_ids``)."""
-        n = int(chunk.shape[0])
-        target = 1 << max(0, n - 1).bit_length()
-        target += (-target) % max(1, multiple)
-        if target == n:
-            return chunk, n
-        if isinstance(chunk, np.ndarray):
-            return np.pad(chunk, (0, target - n)), n
-        from repro.kernels.ops import _pad_ids
-
-        return _pad_ids(chunk, target), n
+    # kept as a staticmethod alias so planner call sites and tests read the
+    # same way they always did; the shared implementation is module-level.
+    _pad_pow2 = staticmethod(pad_pow2)
 
     # -- host-facing plan assembly ------------------------------------------
 

@@ -1,3 +1,12 @@
 from .router import ReplicaRouter, Router
+from .stream import POLICIES, RequestStreamDriver
+from .traffic import LAWS, TrafficModel
 
-__all__ = ["ReplicaRouter", "Router"]
+__all__ = [
+    "LAWS",
+    "POLICIES",
+    "ReplicaRouter",
+    "RequestStreamDriver",
+    "Router",
+    "TrafficModel",
+]

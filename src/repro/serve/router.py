@@ -22,9 +22,16 @@ version, so the per-request hot path is pure placement -- no table prep.
 ``Router(algorithm=...)`` swaps the placement algorithm under the SAME
 interface: ``"asura"`` (default), ``"ch"``, ``"wrh"`` or ``"rs"`` route
 through the engine's baseline device backends (DESIGN.md section 9), so the
-paper's head-to-head comparison runs on the serving path too.  ASURA-only
-capabilities (replica fan-out, live scale migrations) raise a clear error
-under a baseline algorithm.
+paper's head-to-head comparison runs on the serving path too -- including
+R-way replica fan-out (the baselines use the salted rejection re-probe,
+DESIGN.md section 12).  Live scale migrations remain ASURA-only (they ride
+on its dual-version table artifacts) and raise a clear error otherwise.
+
+The replica hot path is a CACHED fused probe: ``route_replicas_device``
+compiles once per ``(algorithm statics, n_replicas, table shapes)`` and
+every later batch is a single dispatch (``probe_traces`` is the tests'
+retrace tripwire).  ``stream_driver()`` hands the same engine to the
+batched serving pipeline (``serve.stream``).
 """
 
 from __future__ import annotations
@@ -67,6 +74,8 @@ class ReplicaRouter:
                 self.cluster, algorithm=algorithm, virtual_nodes=virtual_nodes
             )
         self._scale_migration = None  # at most one live window at a time
+        self._probe_cache: dict = {}  # (statics, R, table shapes) -> jitted probe
+        self.probe_traces = 0  # replica-probe jit traces (retrace tripwire)
 
     def route(self, session_ids) -> np.ndarray:
         """session ids -> replica ids (vectorized, table-local)."""
@@ -83,15 +92,57 @@ class ReplicaRouter:
 
     def route_replicas(self, session_ids, n_replicas: int) -> np.ndarray:
         """(sessions, R) replica ids on distinct replicas, primary first --
-        for read fan-out / warm-standby session caches (section 5.A)."""
+        for read fan-out / warm-standby session caches (section 5.A; the
+        baselines fan out via the salted rejection re-probe)."""
         return self.engine.place_replica_nodes(
             np.asarray(session_ids, dtype=np.uint32), n_replicas
         )
 
+    def _replica_probe(self, n_replicas: int):
+        """The cached fused replica probe + its table operands.
+
+        One jit per ``(algorithm statics, n_replicas, table shapes)``:
+        membership changes (new table shapes) or a different R compile a
+        new probe; steady-state serving always hits the cache.  The trace
+        counter increments inside the traced body, so it ticks per TRACE,
+        not per call -- the tripwire tests pin it across repeated batches.
+        """
+        from .stream import replica_owners_body, route_statics
+
+        tables, statics = route_statics(self.engine, self.algorithm)
+        key = (statics, n_replicas, tuple(t.shape for t in tables))
+        fn = self._probe_cache.get(key)
+        if fn is None:
+            import jax
+
+            owners_fn = replica_owners_body(statics, n_replicas)
+            router = self
+
+            @jax.jit
+            def probe(ids, *tabs):
+                router.probe_traces += 1
+                return owners_fn(ids, *tabs)
+
+            fn = self._probe_cache[key] = probe
+        return fn, tables
+
     def route_replicas_device(self, session_ids, n_replicas: int):
         """Device-resident ``route_replicas`` (fused node gather; -1 marks
-        the practically-impossible non-converged entries)."""
-        return self.engine.place_replica_nodes_device(session_ids, n_replicas)
+        the practically-impossible non-converged entries).  One cached-jit
+        dispatch per call -- the serving hot path."""
+        import jax.numpy as jnp
+
+        fn, tables = self._replica_probe(n_replicas)
+        return fn(jnp.asarray(session_ids), *tables)
+
+    def stream_driver(self, **kwargs):
+        """A batched ``RequestStreamDriver`` bound to this router's engine
+        and algorithm (DESIGN.md section 12) -- the serving-at-scale entry
+        point: device-resident traffic generation, fused route+select,
+        on-device load counters."""
+        from .stream import RequestStreamDriver
+
+        return RequestStreamDriver(self.engine, algorithm=self.algorithm, **kwargs)
 
     @property
     def table_uploads(self) -> int:

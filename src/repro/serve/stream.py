@@ -1,0 +1,483 @@
+"""Batched device-resident serving pipeline (DESIGN.md section 12).
+
+The paper's headline claims (sub-microsecond calc time, <1% load
+variability) are about SERVING a placement function under real traffic.
+``RequestStreamDriver`` is the batched, stateful driver that replaces
+per-call routing on the serving hot path:
+
+  * a device-resident request generator (``serve.traffic``): threefry
+    fold-in streams per GLOBAL lane, exact-u32 CDF sampling -- no host RNG
+    anywhere in the loop,
+  * a fused route+select pass: the batch routes through the replica
+    placement (ASURA's section-5.A kernel body, or the baselines' salted
+    fan-out), then a replica-selection policy picks one of the R holders
+    per request -- ``pow2`` is power-of-two-choices against the on-device
+    per-node load counters (arXiv 2312.10360: redundancy level + selection
+    policy jointly set the achievable balance),
+  * on-device load state: per-node served counters, a queue-depth
+    recurrence ``q' = max(q + arrivals - service, 0)`` and a queue-history
+    ring for p99 -- scatter-updated in the same jit,
+
+all inside ONE jit per step with zero host syncs (transfer-guard tested).
+Every selection in a batch reads the START-of-batch counters and the batch
+histogram merges once -- the standard batched approximation of
+least-loaded-of-two, and the property that makes the mesh path exact:
+
+``mesh=`` shards the request stream over ``launch/placement_mesh``'s 1-D
+``data`` mesh (the PR-6 follow-up): each shard generates ITS slice of the
+global lane range (bit-identical words by the counter-based construction),
+routes and selects against the replicated kilobyte tables and replicated
+start-of-batch counters, and the per-node load histogram merges with ONE
+exact integer psum per batch -- so the sharded stream is bit-identical to
+the single-device stream (selftest-enforced at 8 forced host devices).
+
+External id batches (``route_batch``) reuse the migration planner's pow2
+bucketing so ragged tails share one compile per bucket, and
+``serve_migrating`` drives the stream through a live migration window via
+the cached fused ``route_replicas_device`` probe -- dual-version serving
+keeps working under the batched driver.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.migrate.planner import pad_pow2
+
+from .traffic import TrafficModel
+
+POLICIES = ("primary", "random", "pow2")
+
+DEFAULT_BATCH = 1 << 16
+DEFAULT_KEYS = 1 << 20
+DEFAULT_HIST = 256  # queue-history ring rows (p99 window)
+
+
+def route_statics(engine, algorithm: str | None = None):
+    """(tables, statics) for a replica-routing body under ``algorithm``.
+
+    ``tables`` are the replicated device operands; ``statics`` is a
+    hashable key that fully determines the body (the compile-cache key the
+    driver, router probe and mesh serving path all share)."""
+    alg = engine._resolve_algorithm(algorithm)
+    if alg == "asura":
+        art = engine._device_artifact("asura")
+        tables = (art.len32_dev, art.node_of_dev)
+        statics = ("asura", art.top_level, engine.params.s_log2, engine.params.max_draws)
+    else:
+        art = engine._device_artifact(alg)
+        tables = (art.keys_dev, art.vals_dev)
+        statics = (alg,)
+    return tables, statics
+
+
+def replica_owners_body(statics: tuple, n_replicas: int):
+    """Per-shard replica owners: (ids, *tables) -> (batch, R) int32 -- the
+    same jnp kernel bodies the single-device engine paths run (the
+    ``ShardedSweep._owners_body`` idiom, R-way)."""
+    alg = statics[0]
+    if alg == "asura":
+        from repro.kernels.ops import _place_replicas_fused_ref
+
+        _, top_level, s_log2, max_draws = statics
+
+        def owners(ids, len32, node_of):
+            return _place_replicas_fused_ref(
+                ids, len32, node_of,
+                top_level=top_level, s_log2=s_log2, max_draws=max_draws,
+                n_replicas=n_replicas, emit_nodes=True,
+            )
+
+        return owners
+    from repro.kernels.baselines import _LOOKUP, baseline_replicas_lookup
+
+    lookup = _LOOKUP[alg]
+
+    def owners(ids, keys, vals):
+        return baseline_replicas_lookup(
+            lookup, ids, keys, vals, n_replicas=n_replicas
+        )
+
+    return owners
+
+
+def select_replica(owners, sel, counts, *, policy: str, n_replicas: int):
+    """Pick one holder per request -> (batch,) int32 chosen nodes.
+
+    ``owners`` is (batch, R) with -1 marking non-converged slots (masked:
+    an invalid candidate always loses, and a fully-invalid row falls back
+    to a clamped primary).  ``pow2`` draws two DISTINCT slots from the
+    selection word and takes the one with the smaller start-of-batch
+    counter (strict <, first-slot tie-break); ``random`` takes one slot
+    uniformly; ``primary`` (or R == 1) always slot 0.
+    """
+    import jax.numpy as jnp
+
+    prim = jnp.maximum(owners[:, 0], 0)
+    if policy == "primary" or n_replicas == 1:
+        return prim
+    R = n_replicas
+    if policy == "random":
+        slot = (sel % jnp.uint32(R)).astype(jnp.int32)
+        chosen = jnp.take_along_axis(owners, slot[:, None], axis=1)[:, 0]
+        return jnp.where(chosen >= 0, chosen, prim)
+    if policy != "pow2":
+        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    i = (sel % jnp.uint32(R)).astype(jnp.int32)
+    off = ((sel >> jnp.uint32(16)) % jnp.uint32(R - 1)).astype(jnp.int32)
+    j = (i + 1 + off) % R
+    a = jnp.take_along_axis(owners, i[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(owners, j[:, None], axis=1)[:, 0]
+    big = jnp.iinfo(jnp.int32).max
+    la = jnp.where(a >= 0, jnp.take(counts, jnp.maximum(a, 0)), big)
+    lb = jnp.where(b >= 0, jnp.take(counts, jnp.maximum(b, 0)), big)
+    chosen = jnp.where(lb < la, b, a)
+    return jnp.where(chosen >= 0, chosen, prim)
+
+
+class RequestStreamDriver:
+    """Stateful batched serving simulator bound to one ``PlacementEngine``.
+
+    Device state (all jax arrays; the host only ever reads them through
+    the explicit metric accessors):
+
+      * ``counts`` -- (n_bins,) int32 cumulative served requests per node,
+      * ``queue``  -- (n_bins,) int32 current queue depth per node
+        (``service_rate`` requests drain per node per step),
+      * ``qhist``  -- (max_hist, n_bins) int32 queue-depth ring (p99),
+      * ``_step``  -- int32 device scalar (the fold-in stream position).
+
+    ``step()`` runs one fused generate+route+select+count batch and
+    returns the chosen nodes (device array; shard-partitioned on a mesh).
+    ``step_traces`` counts jit traces of the fused step -- the tripwire
+    that repeated steps stop retracing.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        batch: int = DEFAULT_BATCH,
+        n_keys: int = DEFAULT_KEYS,
+        law: str = "zipf",
+        alpha: float = 1.1,
+        hot_fraction: float = 0.9,
+        hot_keys: int = 64,
+        n_replicas: int = 3,
+        policy: str = "pow2",
+        seed: int = 0,
+        service_rate: int | None = None,
+        max_hist: int = DEFAULT_HIST,
+        n_bins: int | None = None,
+        mesh=None,
+        algorithm: str | None = None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        self.engine = engine
+        self.algorithm = engine._resolve_algorithm(algorithm)
+        self.batch = int(batch)
+        self.n_replicas = int(n_replicas)
+        self.policy = policy
+        self.max_hist = int(max_hist)
+        self.traffic = TrafficModel(
+            n_keys, law=law, alpha=alpha,
+            hot_fraction=hot_fraction, hot_keys=hot_keys, seed=seed,
+        )
+        self._sweep = None
+        if mesh is not None:
+            from repro.launch.placement_mesh import ShardedSweep
+
+            self._sweep = (
+                mesh if isinstance(mesh, ShardedSweep) else ShardedSweep(engine, mesh)
+            )
+            if self.batch % self._sweep.n_devices:
+                raise ValueError(
+                    f"batch ({self.batch}) must divide the mesh "
+                    f"({self._sweep.n_devices} devices)"
+                )
+        nodes = getattr(engine.cluster, "nodes", None)
+        if n_bins is not None:
+            self.n_bins = int(n_bins)
+        elif nodes:
+            self.n_bins = int(max(nodes)) + 1
+        else:  # table-only cluster: size off the seg->node map
+            self.n_bins = int(np.max(engine.artifact().node_of)) + 1
+        n_active = len(nodes) if nodes else self.n_bins
+        if service_rate is None:
+            # 25% capacity headroom over the mean arrival rate: uniform
+            # traffic keeps queues near zero, skew shows up as real depth.
+            service_rate = max(1, math.ceil(1.25 * self.batch / max(1, n_active)))
+        self.service_rate = int(service_rate)
+        self._service = jnp.full((self.n_bins,), self.service_rate, jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self.step_traces = 0  # fused-step jit traces (the retrace tripwire)
+        self._fns: dict = {}
+        self.reset()
+
+    # -- state ----------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Zero the load/queue state and rewind the request stream."""
+        import jax.numpy as jnp
+
+        self.counts = jnp.zeros((self.n_bins,), jnp.int32)
+        self.queue = jnp.zeros((self.n_bins,), jnp.int32)
+        self.qhist = jnp.zeros((self.max_hist, self.n_bins), jnp.int32)
+        self._step = jnp.zeros((), jnp.int32)
+        self.steps_done = 0
+
+    def _cached(self, key: tuple, build):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = build()
+        return fn
+
+    # -- the fused step -------------------------------------------------------
+
+    def _step_fn(self, statics: tuple):
+        """One-jit batch step: generate -> route -> select -> count."""
+        import jax
+        import jax.numpy as jnp
+
+        batch, R = self.batch, self.n_replicas
+        policy, n_bins, max_hist = self.policy, self.n_bins, self.max_hist
+        id_salt = self.traffic.id_salt
+        owners_fn = replica_owners_body(statics, R)
+        sweep = self._sweep
+        driver = self
+
+        def body(key, step_idx, counts, queue, qhist, service, thresholds, *tables):
+            driver.step_traces += 1  # Python side effect: fires per TRACE only
+            if sweep is None:
+                lanes = jnp.arange(batch, dtype=jnp.uint32)
+            else:
+                from repro.launch.placement_mesh import DATA_AXIS
+
+                local = batch // sweep.n_devices
+                first = jax.lax.axis_index(DATA_AXIS).astype(jnp.uint32) * local
+                lanes = first + jnp.arange(local, dtype=jnp.uint32)
+            ids, sel = TrafficModel.draw(key, step_idx, lanes, thresholds, id_salt)
+            owners = owners_fn(ids, *tables)
+            chosen = select_replica(
+                owners, sel, counts, policy=policy, n_replicas=R
+            )
+            hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(1)
+            if sweep is not None:
+                from repro.launch.placement_mesh import DATA_AXIS
+
+                hist = jax.lax.psum(hist, DATA_AXIS)
+            counts = counts + hist
+            queue = jnp.maximum(queue + hist - service, 0)
+            qhist = jax.lax.dynamic_update_slice(
+                qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
+            )
+            return counts, queue, qhist, step_idx + 1, chosen
+
+        if sweep is None:
+            return jax.jit(body)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.placement_mesh import DATA_AXIS
+
+        n_tables = 2 + len(self._fixed_operands())
+        return jax.jit(
+            shard_map(
+                body,
+                mesh=sweep.mesh,
+                # everything replicated: lanes derive from axis_index, so
+                # there is no partitioned INPUT at all -- only the chosen
+                # lanes come back shard-partitioned.
+                in_specs=(P(),) * (5 + n_tables),
+                out_specs=(P(), P(), P(), P(), P(DATA_AXIS)),
+                check_rep=False,  # while_loop ladders have no replication rule
+            )
+        )
+
+    def _fixed_operands(self):
+        return (self._service, self.traffic.thresholds_dev)
+
+    def step(self):
+        """Serve one generated batch -> (batch,) int32 chosen nodes (device
+        array; shard-partitioned over the mesh when sharded).  Zero host
+        syncs: state stays on device, the stream position is a device
+        scalar."""
+        tables, statics = route_statics(self.engine, self.algorithm)
+        fn = self._cached(("step", statics), lambda: self._step_fn(statics))
+        self.counts, self.queue, self.qhist, self._step, chosen = fn(
+            self._key, self._step, self.counts, self.queue, self.qhist,
+            *self._fixed_operands(), *tables,
+        )
+        self.steps_done += 1
+        return chosen
+
+    # -- external batches (pow2 bucketing -- ragged tails share compiles) -----
+
+    def _route_batch_fn(self, statics: tuple):
+        import jax
+        import jax.numpy as jnp
+
+        R, policy = self.n_replicas, self.policy
+        n_bins, max_hist = self.n_bins, self.max_hist
+        owners_fn = replica_owners_body(statics, R)
+        driver = self
+
+        @jax.jit
+        def body(ids, n_valid, key, step_idx, counts, queue, qhist, service, *tables):
+            driver.step_traces += 1
+            lanes = jnp.arange(ids.shape[0], dtype=jnp.uint32)
+            valid = lanes < n_valid.astype(jnp.uint32)
+            sel = TrafficModel.lane_words(key, step_idx, lanes, 1)[:, 0]
+            owners = owners_fn(ids.astype(jnp.uint32), *tables)
+            chosen = select_replica(
+                owners, sel, counts, policy=policy, n_replicas=R
+            )
+            hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(
+                valid.astype(jnp.int32)  # pad lanes never count
+            )
+            counts = counts + hist
+            queue = jnp.maximum(queue + hist - service, 0)
+            qhist = jax.lax.dynamic_update_slice(
+                qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
+            )
+            return counts, queue, qhist, step_idx + 1, chosen
+
+        return body
+
+    def route_batch(self, datum_ids):
+        """Serve one EXTERNAL id batch through the fused select+count pass
+        -> (len(ids),) int32 chosen nodes (device array).
+
+        Ids are pow2-bucketed (``migrate.planner.pad_pow2``) with the valid
+        count traced, so ragged tails share one compile per bucket and pad
+        lanes never touch a counter.  Single-device (the generated stream
+        is the mesh path)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _head
+
+        if self._sweep is not None:
+            raise ValueError(
+                "route_batch serves host-fed batches single-device; "
+                "mesh-sharded serving goes through step()"
+            )
+        ids = jnp.asarray(datum_ids)
+        n = int(ids.shape[0])
+        padded, n_valid = pad_pow2(ids)
+        tables, statics = route_statics(self.engine, self.algorithm)
+        fn = self._cached(("route_batch", statics), lambda: self._route_batch_fn(statics))
+        self.counts, self.queue, self.qhist, self._step, chosen = fn(
+            padded, jnp.uint32(n_valid), self._key, self._step,
+            self.counts, self.queue, self.qhist, self._service, *tables,
+        )
+        self.steps_done += 1
+        return _head(chosen, n)
+
+    # -- serving through a live migration window ------------------------------
+
+    def _gen_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        batch, id_salt = self.batch, self.traffic.id_salt
+
+        @jax.jit
+        def gen(key, step_idx, thresholds):
+            lanes = jnp.arange(batch, dtype=jnp.uint32)
+            return TrafficModel.draw(key, step_idx, lanes, thresholds, id_salt)
+
+        return gen
+
+    def _mig_select_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        policy, R = self.policy, self.n_replicas
+        n_bins, max_hist = self.n_bins, self.max_hist
+
+        @jax.jit
+        def select(owners, sel, step_idx, counts, queue, qhist, service):
+            chosen = select_replica(
+                owners, sel, counts, policy=policy, n_replicas=R
+            )
+            hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(1)
+            counts = counts + hist
+            queue = jnp.maximum(queue + hist - service, 0)
+            qhist = jax.lax.dynamic_update_slice(
+                qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
+            )
+            return counts, queue, qhist, step_idx + 1, chosen
+
+        return select
+
+    def serve_migrating(self, migration):
+        """Serve one generated batch THROUGH a live migration window ->
+        (datum_ids, chosen) device arrays.
+
+        Routing goes through the window's dual-version replica read rule
+        (``LiveMigration.route_replicas_device`` -- the cached fused
+        probe), so every request lands on a node that physically holds its
+        datum mid-drain.  Three jitted dispatches (generate, route,
+        select+count), zero host syncs after the per-round pending-view
+        refresh.  Single-device, like the window itself."""
+        if self._sweep is not None:
+            raise ValueError(
+                "migration windows are single-device (the pending views "
+                "refresh per round); build the driver without mesh="
+            )
+        if migration.n_replicas != self.n_replicas:
+            raise ValueError(
+                f"driver serves R={self.n_replicas} but the migration plan "
+                f"is R={migration.n_replicas}"
+            )
+        gen = self._cached(("gen",), self._gen_fn)
+        ids, sel = gen(self._key, self._step, self.traffic.thresholds_dev)
+        owners = migration.route_replicas_device(ids)
+        select = self._cached(("mig_select",), self._mig_select_fn)
+        self.counts, self.queue, self.qhist, self._step, chosen = select(
+            owners, sel, self._step, self.counts, self.queue, self.qhist,
+            self._service,
+        )
+        self.steps_done += 1
+        return ids, chosen
+
+    # -- host-facing metrics (each accessor is ONE deliberate sync) -----------
+
+    def _active_bins(self) -> np.ndarray:
+        nodes = getattr(self.engine.cluster, "nodes", None)
+        if nodes:
+            return np.asarray(sorted(int(n) for n in nodes), dtype=np.int64)
+        return np.arange(self.n_bins, dtype=np.int64)
+
+    def load_counts(self) -> np.ndarray:
+        return np.asarray(self.counts)
+
+    def load_skew(self) -> float:
+        """max/mean served load over the live nodes (1.0 = perfectly
+        even; the paper's uniformity story, measured under traffic)."""
+        c = self.load_counts()[self._active_bins()].astype(np.float64)
+        mean = c.mean()
+        return float(c.max() / mean) if mean > 0 else 0.0
+
+    def queue_p99(self) -> float:
+        """p99 queue depth over (recorded step, live node) samples."""
+        rows = min(self.steps_done, self.max_hist)
+        if rows == 0:
+            return 0.0
+        q = np.asarray(self.qhist)[:rows][:, self._active_bins()]
+        return float(np.percentile(q, 99))
+
+    def snapshot(self) -> dict:
+        return {
+            "counts": self.load_counts(),
+            "queue": np.asarray(self.queue),
+            "steps": self.steps_done,
+            "skew": self.load_skew(),
+            "q_p99": self.queue_p99(),
+        }

@@ -1,0 +1,192 @@
+"""Device-resident request-stream generator (DESIGN.md section 12).
+
+What millions of users do to a storage cluster is not a uniform id sweep:
+a few hot keys dominate (Zipf), or a small working set takes most of the
+traffic (hot-set).  ``TrafficModel`` turns a traffic law into a sampler
+that runs entirely inside the serving driver's fused jit:
+
+  * the law's CDF is computed ONCE on the host in float64 and quantized to
+    exact u32 thresholds (the repo's exact-u32 idiom: ``thresholds[i]`` is
+    the largest raw draw that maps to rank <= i, and ``thresholds[-1]`` is
+    2**32 - 1 exactly), so sampling is one integer ``searchsorted`` per
+    request -- backend-independent, bit-identical on ref and Pallas
+    engines,
+  * per-request randomness is COUNTER-BASED threefry: the batch key is
+    ``fold_in(root_key, step)`` and each lane folds in its GLOBAL lane
+    index, so a mesh shard generating lanes [k*S, (k+1)*S) draws exactly
+    the words the single-device batch draws at those lanes -- sharded
+    generation is bit-identical by construction, and there is no host RNG
+    (or sequential state) anywhere in the loop,
+  * sampled RANKS map to datum ids through ``fmix32`` (bijective on u32),
+    so distinct ranks give distinct, well-scattered ids and the hot keys
+    are not the numerically-small ids that every placement test already
+    uses.
+
+Laws: ``uniform`` over ``n_keys``; ``zipf`` with p(r) proportional to
+1/(r+1)**alpha; ``hotset`` sending ``hot_fraction`` of the traffic to the
+first ``hot_keys`` ranks uniformly (the rest uniform over everything).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.rng import fmix32_np
+
+LAWS = ("uniform", "zipf", "hotset")
+
+_TWO32 = float(2**32)
+
+
+class TrafficModel:
+    """One traffic law over ``n_keys`` ranked keys, ready for device use.
+
+    Host-side construction only (float64 CDF + u32 quantization); the
+    device sampler is the static ``draw`` method, composed into the
+    serving driver's fused step jit with ``thresholds_dev`` passed as a
+    replicated operand.
+    """
+
+    def __init__(
+        self,
+        n_keys: int,
+        *,
+        law: str = "zipf",
+        alpha: float = 1.1,
+        hot_fraction: float = 0.9,
+        hot_keys: int = 64,
+        seed: int = 0,
+    ):
+        if law not in LAWS:
+            raise ValueError(f"law must be one of {LAWS}, got {law!r}")
+        if n_keys < 1:
+            raise ValueError("n_keys must be >= 1")
+        self.n_keys = int(n_keys)
+        self.law = law
+        self.alpha = float(alpha)
+        self.hot_fraction = float(hot_fraction)
+        self.hot_keys = min(int(hot_keys), self.n_keys)
+        # rank -> id bijection salt: any fixed u32; derived from the seed so
+        # two models with different seeds serve disjoint-looking key sets.
+        self.id_salt = int(
+            fmix32_np(np.asarray([seed ^ 0x7261666B], dtype=np.uint32))[0]
+        )
+        self._pmf = self._build_pmf()
+        cum = np.cumsum(self._pmf)
+        cum[-1] = 1.0  # kill float64 cumsum drift before quantizing
+        thr = np.round(cum * _TWO32).astype(np.uint64) - 1
+        self._thresholds = np.minimum(thr, np.uint64(2**32 - 1)).astype(np.uint32)
+        self._thresholds_dev = None
+
+    def _build_pmf(self) -> np.ndarray:
+        n = self.n_keys
+        if self.law == "uniform":
+            p = np.full(n, 1.0 / n, dtype=np.float64)
+        elif self.law == "zipf":
+            p = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), self.alpha)
+            p /= p.sum()
+        else:  # hotset
+            k, h = self.hot_keys, self.hot_fraction
+            p = np.full(n, (1.0 - h) / n, dtype=np.float64)
+            p[:k] += h / k
+            p /= p.sum()
+        return p
+
+    @property
+    def pmf(self) -> np.ndarray:
+        """Target probability per rank (float64, sums to 1) -- the
+        chi-square tests' expected frequencies."""
+        return self._pmf
+
+    @property
+    def thresholds(self) -> np.ndarray:
+        """Inclusive u32 upper bounds per rank: ``searchsorted(thresholds,
+        u, 'left')`` maps a raw u32 draw to its rank."""
+        return self._thresholds
+
+    @property
+    def thresholds_dev(self):
+        """Device copy of ``thresholds`` (built lazily, uploaded once)."""
+        if self._thresholds_dev is None:
+            import jax.numpy as jnp
+
+            self._thresholds_dev = jnp.asarray(self._thresholds)
+        return self._thresholds_dev
+
+    # -- device sampler (pure jnp; composed into the driver's fused jit) ------
+
+    @staticmethod
+    def lane_words(root_key, step_idx, lanes, n_words: int = 2):
+        """(len(lanes), n_words) u32 threefry words for GLOBAL lane indices.
+
+        ``fold_in(fold_in(root_key, step), lane)`` per lane: every word is
+        a pure function of (root_key, step, global lane), which is the
+        whole sharding story -- a shard holding a slice of the global lane
+        range reproduces the single-device words exactly.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        batch_key = jax.random.fold_in(root_key, step_idx)
+
+        def one(lane):
+            return jax.random.bits(
+                jax.random.fold_in(batch_key, lane), (n_words,), jnp.uint32
+            )
+
+        return jax.vmap(one)(lanes)
+
+    @staticmethod
+    def ranks_from_words(words, thresholds):
+        """u32 draws -> ranks via the exact-u32 CDF (one searchsorted)."""
+        import jax.numpy as jnp
+
+        ranks = jnp.searchsorted(thresholds, words, side="left")
+        return jnp.minimum(ranks, thresholds.shape[0] - 1).astype(jnp.uint32)
+
+    @staticmethod
+    def ids_from_ranks(ranks, id_salt: int):
+        """Bijective rank -> datum-id map (fmix32 of the salted rank)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ref import fmix32
+
+        return fmix32(ranks.astype(jnp.uint32) + jnp.uint32(id_salt))
+
+    @staticmethod
+    def draw(root_key, step_idx, lanes, thresholds, id_salt: int):
+        """One fused generator step -> (datum_ids, selection_words).
+
+        Word 0 of each lane samples the rank (then id); word 1 is handed to
+        the replica-selection policy untouched.
+        """
+        words = TrafficModel.lane_words(root_key, step_idx, lanes, 2)
+        ranks = TrafficModel.ranks_from_words(words[:, 0], thresholds)
+        return TrafficModel.ids_from_ranks(ranks, id_salt), words[:, 1]
+
+    # -- host-facing helpers (tests, examples) --------------------------------
+
+    def sample_ranks(self, seed: int, n: int, batch: int = 1 << 14) -> np.ndarray:
+        """Draw ``n`` ranks at a fixed seed (host-facing; the statistical
+        tests' entry point -- same per-lane stream the driver consumes)."""
+        import jax
+        import jax.numpy as jnp
+
+        key = jax.random.PRNGKey(seed)
+        out = []
+        step = 0
+        remaining = n
+        while remaining > 0:
+            take = min(batch, remaining)
+            lanes = jnp.arange(take, dtype=jnp.uint32)
+            words = self.lane_words(key, jnp.int32(step), lanes, 1)
+            out.append(np.asarray(self.ranks_from_words(words[:, 0], self.thresholds_dev)))
+            step += 1
+            remaining -= take
+        return np.concatenate(out)
+
+    def rank_to_id_np(self, ranks) -> np.ndarray:
+        """NumPy twin of ``ids_from_ranks`` (bit-identical)."""
+        r = np.asarray(ranks, dtype=np.uint32)
+        with np.errstate(over="ignore"):
+            return fmix32_np(r + np.uint32(self.id_salt))

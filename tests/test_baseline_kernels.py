@@ -293,9 +293,13 @@ def test_router_algorithm_threading():
     router = Router(caps, algorithm="ch", virtual_nodes=64)
     ring, owners = build_ring(sorted(caps), 64)
     assert np.array_equal(router.route(ids), ch_place_np(ids, ring, owners))
-    # ASURA-only surfaces raise cleanly under a baseline algorithm
-    with pytest.raises(ValueError):
-        router.route_replicas(ids[:8], 2)
+    # replica fan-out works under a baseline algorithm (the salted
+    # rejection re-probe, DESIGN.md section 12): distinct nodes, primary
+    # first
+    reps = router.route_replicas(ids[:8], 2)
+    assert np.array_equal(reps[:, 0], router.route(ids[:8]))
+    assert (reps[:, 0] != reps[:, 1]).all()
+    # ASURA-only surfaces still raise cleanly under a baseline algorithm
     with pytest.raises(ValueError):
         router.begin_scale_migration(ids[:8], add=(9, 1.0))
     # generic scale planning still works (before/after owner diff)

@@ -1,0 +1,121 @@
+"""ISSUE-7 coverage: the batched stream served THROUGH a live migration.
+
+Dual-version serving must keep working under the batched driver: a
+generated request stream routed mid-drain via
+``LiveMigration.route_replicas_device`` (the cached fused probe) must, at
+EVERY batch of every round,
+
+  * match the host ``route_replicas`` rule bit for bit,
+  * return pairwise-distinct holder sets (every served set is R live
+    copies),
+  * serve each slot from the v or v+1 replica set of its id -- never a
+    node on neither side of the window,
+  * pick the chosen node from the served set,
+
+with stable probe trace counts across batches within a round (the fused
+probe caches per routing config, not per call) and zero host syncs after
+the per-round pending-view refresh.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.migrate.live as live
+from repro.serve import Router
+
+N_NODES = 8
+R = 3
+SESSIONS = 20_000
+
+
+def _window():
+    router = Router({i: 1.0 for i in range(N_NODES)})
+    sessions = np.arange(SESSIONS, dtype=np.uint32)
+    mig = router.begin_scale_migration(
+        sessions,
+        add=(N_NODES, 1.0),
+        n_replicas=R,
+        egress={n: 60 for n in range(N_NODES + 1)},
+    )
+    assert mig.state.plan.n_moves > 120, "plan too small to span rounds"
+    driver = router.stream_driver(
+        batch=1024, n_keys=1 << 14, n_replicas=R, policy="pow2",
+        seed=5, n_bins=N_NODES + 1,
+    )
+    return router, mig, driver
+
+
+def test_batched_stream_through_mid_drain_window():
+    router, mig, driver = _window()
+    engine = router.engine
+    v0, v1 = mig.v_from, mig.v_to
+    rounds = 0
+    while not mig.done and rounds < 6:
+        mig.round()
+        rounds += 1
+        for _ in range(2):  # two batches per round
+            ids_dev, chosen_dev = driver.serve_migrating(mig)
+            ids = np.asarray(ids_dev)
+            chosen = np.asarray(chosen_dev)
+            served = np.asarray(mig.route_replicas_device(ids_dev))
+            # device rule == host rule, bit for bit
+            assert np.array_equal(served, mig.route_replicas(ids))
+            # holder sets stay pairwise-distinct mid-drain
+            for a in range(R):
+                for b in range(a + 1, R):
+                    assert (served[:, a] != served[:, b]).all()
+            # every served slot is on one side of the version window
+            v_set = engine.place_replica_nodes_at(ids, v0, R)
+            v1_set = engine.place_replica_nodes_at(ids, v1, R)
+            union_hit = (served[:, :, None] == v_set[:, None, :]).any(-1) | (
+                served[:, :, None] == v1_set[:, None, :]
+            ).any(-1)
+            assert union_hit.all(), "served a node on neither side of the window"
+            # the selected node comes from the served set
+            assert (chosen[:, None] == served).any(axis=1).all()
+    assert rounds > 1, "window drained in one round; nothing mid-drain tested"
+    if not mig.done:
+        mig.run()
+    assert driver.load_counts().sum() == driver.steps_done * driver.batch
+
+
+def test_window_probe_trace_stable_within_round(monkeypatch):
+    _router, mig, driver = _window()
+    mig.round()
+    driver.serve_migrating(mig)  # warm: probe compile + pending-view upload
+    traces = live.probe_trace_count()
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        for _ in range(3):
+            _ids, chosen = driver.serve_migrating(mig)
+        chosen.block_until_ready()
+    monkeypatch.undo()
+    assert not host_reads, f"mid-round serving touched the host: {len(host_reads)}"
+    assert live.probe_trace_count() == traces, "repeated batches retraced the probe"
+
+
+def test_serve_migrating_requires_matching_replication():
+    _router, mig, driver = _window()
+    bad = _window()[0].stream_driver(
+        batch=256, n_keys=1 << 12, n_replicas=2, n_bins=N_NODES + 1
+    )
+    with pytest.raises(ValueError, match="R=2"):
+        bad.serve_migrating(mig)
+    mig.run()
+    # a drained window still serves (pending sets empty, all v+1)
+    ids_dev, chosen = driver.serve_migrating(mig)
+    served = np.asarray(mig.route_replicas_device(ids_dev))
+    assert np.array_equal(
+        served,
+        driver.engine.place_replica_nodes_at(np.asarray(ids_dev), mig.v_to, R),
+    )
+    assert (np.asarray(chosen)[:, None] == served).any(axis=1).all()
