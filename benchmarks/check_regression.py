@@ -50,13 +50,16 @@ import sys
 
 DEFAULT_THRESHOLD = 1.25
 
-LOWER_BETTER_UNITS = ("us_per_id", "us_per_call", "s", "elapsed_s", "bytes")
+LOWER_BETTER_UNITS = (
+    "us_per_id", "us_per_call", "s", "elapsed_s", "bytes", "x_overhead",
+)
 HIGHER_BETTER_SUFFIXES = ("_per_s", "x_faster", "x_speedup")
 
 # Units the machine-speed calibration must NOT rescale: deterministic
 # byte counts, and dimensionless ratios (e.g. the scaling suite's
-# ``x_speedup`` entries -- machine speed cancels in the ratio).
-RAW_COMPARE_UNITS = ("bytes", "x_faster", "x_speedup")
+# ``x_speedup`` entries and the obs suite's instrumented/uninstrumented
+# ``x_overhead`` -- machine speed cancels in the ratio).
+RAW_COMPARE_UNITS = ("bytes", "x_faster", "x_speedup", "x_overhead")
 
 
 def direction(unit: str) -> str:

@@ -1,0 +1,126 @@
+"""Observability overhead benchmark (DESIGN.md section 13).
+
+The device-plane contract is that metrics are FREE on the serving hot
+path: the slab accumulation fuses into the batch step (a handful of
+in-register scatter-adds), so an instrumented driver must run at the
+uninstrumented driver's speed.  This suite measures exactly that:
+
+  * ``obs_base_ids_per_s`` / ``obs_instrumented_ids_per_s`` -- the fused
+    zipf+pow2 ASURA step with metrics off and on (gated like the serve
+    throughput entries),
+  * ``obs_overhead_ratio`` -- instrumented / uninstrumented wall time
+    per step, best-of-N interleaved so machine-speed drift cancels.
+    The <= 1.05 acceptance ceiling is asserted HERE (absolute -- both
+    sides run seconds apart in this process) AND gated lower-better
+    against the curated baseline,
+  * ``obs_snapshot_us`` -- one ``MetricsRegistry.snapshot()`` drain
+    (the single deliberate device->host transfer, informational),
+
+and exports the instrumented run's structured events as
+``BENCH_obs_events.jsonl`` next to the BENCH json (CI uploads it as a
+workflow artifact: uploads, spans, the serve snapshot, counters).
+
+A ``obs_calibration`` entry (the shared fmix32 yardstick) lets the CI
+gate normalize the timed entries by machine speed.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import PlacementEngine, make_uniform_cluster
+from repro.obs import MetricsRegistry, TraceLedger
+from repro.serve import RequestStreamDriver
+
+from .head_to_head import calibration_us
+
+R = 3
+SEED = 11
+
+
+def _make(engine, metrics, ledger, *, batch, n_keys):
+    return RequestStreamDriver(
+        engine, batch=batch, n_keys=n_keys, law="zipf", alpha=1.1,
+        n_replicas=R, policy="pow2", seed=SEED,
+        metrics=metrics, ledger=ledger,
+    )
+
+
+def _time_steps(driver, steps: int) -> float:
+    driver.reset()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        chosen = driver.step()
+    chosen.block_until_ready()
+    return time.perf_counter() - t0
+
+
+def run(csv_print, quick: bool = False) -> None:
+    csv_print("obs_calibration", calibration_us(), "us_calibration")
+    n_nodes = 16 if quick else 64
+    n_keys = 1 << 16 if quick else 1 << 20
+    batch, steps = (1 << 13, 8) if quick else (1 << 16, 16)
+    repeats = 3 if quick else 5
+
+    cluster = make_uniform_cluster(n_nodes)
+    engine = PlacementEngine(cluster, backend="ref")
+    ledger = TraceLedger()
+    registry = MetricsRegistry()
+    base = _make(engine, None, None, batch=batch, n_keys=n_keys)
+    inst = _make(engine, registry, ledger, batch=batch, n_keys=n_keys)
+
+    # warm both fused steps outside the clock
+    for d in (base, inst):
+        d.step()
+        d.step().block_until_ready()
+
+    # best-of-N, interleaved: one base run then one instrumented run per
+    # repeat, so clock drift / thermal state hits both sides equally
+    best_base = best_inst = float("inf")
+    for _ in range(repeats):
+        best_base = min(best_base, _time_steps(base, steps))
+        best_inst = min(best_inst, _time_steps(inst, steps))
+
+    csv_print("obs_base_ids_per_s", int(steps * batch / best_base), "ids_per_s")
+    csv_print(
+        "obs_instrumented_ids_per_s",
+        int(steps * batch / best_inst),
+        "ids_per_s",
+    )
+    ratio = round(best_inst / best_base, 4)
+    if ratio > 1.05:
+        raise RuntimeError(
+            f"instrumented fused step is {ratio}x the uninstrumented step "
+            "(acceptance ceiling 1.05x) -- the slab accumulation stopped "
+            "fusing"
+        )
+    csv_print("obs_overhead_ratio", ratio, "x_overhead")
+
+    # the ONE deliberate drain transfer (outside the hot loop by contract)
+    t0 = time.perf_counter()
+    snap = registry.snapshot()
+    csv_print(
+        "obs_snapshot_us", round(1e6 * (time.perf_counter() - t0), 1), "us"
+    )
+    served = snap["serve.served"].astype(np.int64)
+    routed = int(snap["serve.routed.asura.pow2"])
+    if int(served.sum()) != routed:
+        raise RuntimeError(
+            f"drained served histogram ({int(served.sum())}) does not match "
+            f"the routed counter ({routed})"
+        )
+
+    # structured-event export: the CI artifact showing the run's telemetry
+    inst.snapshot()  # one serve.snapshot event with skew/q_p99
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = os.path.join(out_dir, "BENCH_obs_events.jsonl")
+    # fold the engine's upload/span events into the exported ledger view
+    for ev in engine.ledger.events():
+        ledger._events.append(ev)
+    for name, count in engine.ledger.counters.items():
+        ledger.incr(name, count)
+    n_events = ledger.export_jsonl(path)
+    csv_print("obs_events_exported", n_events, "events")

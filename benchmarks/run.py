@@ -29,6 +29,7 @@ from . import (
     memory,
     migrate,
     movement,
+    obs,
     replicas,
     roofline,
     serve,
@@ -44,6 +45,7 @@ SUITES = {
     "replicas": replicas,
     "head_to_head": head_to_head,
     "serve": serve,
+    "obs": obs,
     "table3_actual_usage": actual_usage,
     "capacity": capacity,
     "roofline": roofline,

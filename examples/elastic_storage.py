@@ -14,12 +14,18 @@ no drain), then repair and grow the cluster as THROTTLED LIVE MIGRATIONS
     the mixed-version replica read rule -- no atomic table swap, no
     serving gap.
 
+One `TraceLedger` (DESIGN.md section 13) rides the whole scenario:
+checkpoint save/restore spans, one `migrate.round` event per drained
+round with per-round byte accounting, and the planner's prefilter
+counters -- exported as JSONL + Prometheus text at the end.
+
 Run:  PYTHONPATH=src python examples/elastic_storage.py
 """
 
 import numpy as np
 
 from repro.checkpoint import AsuraCheckpointStore, CheckpointManager
+from repro.obs import TraceLedger
 
 
 def cluster_usage(store) -> str:
@@ -35,7 +41,8 @@ def main() -> None:
         "opt/m": rng.standard_normal((2048, 2048)).astype(np.float32),
     }
     store = AsuraCheckpointStore({i: 1.0 for i in range(10)}, n_replicas=3)
-    mgr = CheckpointManager(store)
+    ledger = TraceLedger()
+    mgr = CheckpointManager(store, ledger=ledger)
 
     mgr.save(step=100, tree=state)
     print("saved 48 MiB checkpoint, 3-way replicated")
@@ -53,7 +60,7 @@ def main() -> None:
     # 6 copies per destination per round, readable the whole time
     clock = {"now": 0.0}
     repair = store.begin_remove_node(
-        2, ingress=6, clock=lambda: clock["now"], round_seconds=1.0
+        2, ingress=6, clock=lambda: clock["now"], round_seconds=1.0, ledger=ledger
     )
     plan = repair.live.state.plan
     print(
@@ -83,7 +90,12 @@ def main() -> None:
     # throughout
     clock["now"] = 0.0
     migration = store.begin_add_node(
-        20, capacity=2.0, ingress=8, clock=lambda: clock["now"], round_seconds=1.0
+        20,
+        capacity=2.0,
+        ingress=8,
+        clock=lambda: clock["now"],
+        round_seconds=1.0,
+        ledger=ledger,
     )
     plan = migration.live.state.plan
     print(
@@ -112,6 +124,20 @@ def main() -> None:
     out = mgr.restore(100, state)
     assert all(np.array_equal(out[k], state[k]) for k in state)
     print("restore still bit-identical after repair + live growth")
+
+    # the whole scenario left a structured trail on the one ledger:
+    # save/restore spans, per-round migration events with byte counts,
+    # and running counters -- exportable as JSONL or Prometheus text
+    rounds = ledger.events(kind="migrate.round")
+    moved_bytes = sum(e.get("bytes", 0) for e in rounds)
+    print(
+        f"telemetry: {len(ledger.events())} events "
+        f"({len(rounds)} migration rounds, {moved_bytes // (1 << 20)} MiB moved), "
+        f"counters {dict(sorted(ledger.counters.items()))}"
+    )
+    n = ledger.export_jsonl("elastic_storage_events.jsonl")
+    print(f"wrote {n} events to elastic_storage_events.jsonl")
+    print(ledger.prometheus_text().rstrip())
 
 
 if __name__ == "__main__":

@@ -219,7 +219,16 @@ class AsuraCheckpointStore:
         return moved
 
     def _begin_migration(
-        self, plan, all_keys, *, egress, ingress, clock, round_seconds
+        self,
+        plan,
+        all_keys,
+        *,
+        egress,
+        ingress,
+        clock,
+        round_seconds,
+        ledger=None,
+        bytes_per_row=0,
     ) -> "StoreMigration":
         from repro.migrate import LiveMigration
 
@@ -230,6 +239,8 @@ class AsuraCheckpointStore:
             ingress=ingress,
             clock=clock,
             round_seconds=round_seconds,
+            ledger=ledger,
+            bytes_per_row=bytes_per_row,
         )
         self._migration = StoreMigration(self, live, all_keys)
         return self._migration
@@ -243,6 +254,7 @@ class AsuraCheckpointStore:
         ingress=None,
         clock=None,
         round_seconds: float = 1.0,
+        ledger=None,
     ) -> "StoreMigration":
         """Add storage as a LIVE migration: the same minimal chunk set as
         ``add_node``, but blob copies drain in bandwidth-budgeted rounds
@@ -255,7 +267,9 @@ class AsuraCheckpointStore:
         matrices account every copy, not one flow per chunk.  The add-node
         ADDITION-NUMBER prefilter (R-replica trace) shrinks the diff set.
         Drive the returned ``StoreMigration`` (``round``/``pump``/``run``);
-        the store detaches it automatically once drained."""
+        the store detaches it automatically once drained.  A ``ledger``
+        gets one ``migrate.round`` event per drained round with CHUNK_BYTES
+        per-row byte accounting."""
         from repro.migrate import MigrationPlanner
 
         self._check_no_migration()
@@ -265,7 +279,7 @@ class AsuraCheckpointStore:
         v_from = self.cluster.version
         new_segs = self.cluster.add_node(node_id, capacity)
         self.nodes[node_id] = StorageNode(node_id, capacity)
-        plan = MigrationPlanner(self.engine).plan_replicas(
+        plan = MigrationPlanner(self.engine, ledger=ledger).plan_replicas(
             keys,
             v_from,
             self.cluster.version,
@@ -279,6 +293,8 @@ class AsuraCheckpointStore:
             ingress=ingress,
             clock=clock,
             round_seconds=round_seconds,
+            ledger=ledger,
+            bytes_per_row=CHUNK_BYTES,
         )
 
     def begin_remove_node(
@@ -289,6 +305,7 @@ class AsuraCheckpointStore:
         ingress=None,
         clock=None,
         round_seconds: float = 1.0,
+        ledger=None,
     ) -> "StoreMigration":
         """Remove (or repair a failed) node as a LIVE migration.
 
@@ -311,7 +328,7 @@ class AsuraCheckpointStore:
         self.cluster.remove_node(node_id)
         dead = self.nodes.pop(node_id)
         dead.alive = False
-        plan = MigrationPlanner(self.engine).plan_replicas(
+        plan = MigrationPlanner(self.engine, ledger=ledger).plan_replicas(
             affected, v_from, self.cluster.version, self.n_replicas
         )
         return self._begin_migration(
@@ -321,6 +338,8 @@ class AsuraCheckpointStore:
             ingress=ingress,
             clock=clock,
             round_seconds=round_seconds,
+            ledger=ledger,
+            bytes_per_row=CHUNK_BYTES,
         )
 
     def add_node(self, node_id: int, capacity: float) -> int:
@@ -452,10 +471,16 @@ class StoreMigration(DrainDriver):
 
 
 class CheckpointManager:
-    """Save/restore jax pytrees against an AsuraCheckpointStore."""
+    """Save/restore jax pytrees against an AsuraCheckpointStore.
 
-    def __init__(self, store: AsuraCheckpointStore):
+    Pass an ``obs.TraceLedger`` to get one span per save/restore
+    (``checkpoint.save`` / ``checkpoint.restore`` with chunk and byte
+    counts); without one the manager emits nothing.
+    """
+
+    def __init__(self, store: AsuraCheckpointStore, *, ledger=None):
         self.store = store
+        self.ledger = ledger
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self.saved_steps: list[int] = []
@@ -473,11 +498,20 @@ class CheckpointManager:
                 yield chunk_id(step, li, ci), blob
 
     def save(self, step: int, tree: Any) -> None:
+        from repro.obs.trace import maybe_span
+
         keys, blobs = [], []
         for key, blob in self._chunks_of(step, tree):
             keys.append(key)
             blobs.append(blob)
-        self.store.put_chunks(np.asarray(keys, dtype=np.uint32), blobs)
+        with maybe_span(
+            self.ledger,
+            "checkpoint.save",
+            step=step,
+            n_chunks=len(keys),
+            n_bytes=sum(len(b) for b in blobs),
+        ):
+            self.store.put_chunks(np.asarray(keys, dtype=np.uint32), blobs)
         self.saved_steps.append(step)
 
     def save_async(self, step: int, tree: Any) -> None:
@@ -506,13 +540,27 @@ class CheckpointManager:
 
     def restore(self, step: int, like: Any) -> Any:
         """Rebuild a pytree shaped like ``like`` from the store."""
+        from repro.obs.trace import maybe_span
+
         leaves, treedef = jax.tree.flatten(like)
         out = []
-        for li, leaf in enumerate(leaves):
-            arr = np.asarray(leaf)
-            raw = arr.tobytes()
-            n = max(1, -(-len(raw) // CHUNK_BYTES))
-            parts = [self.store.get_chunk(chunk_id(step, li, ci)) for ci in range(n)]
-            buf = b"".join(parts)
-            out.append(np.frombuffer(buf, dtype=arr.dtype).reshape(arr.shape))
+        n_chunks = n_bytes = 0
+        with maybe_span(self.ledger, "checkpoint.restore", step=step):
+            for li, leaf in enumerate(leaves):
+                arr = np.asarray(leaf)
+                raw = arr.tobytes()
+                n = max(1, -(-len(raw) // CHUNK_BYTES))
+                parts = [
+                    self.store.get_chunk(chunk_id(step, li, ci))
+                    for ci in range(n)
+                ]
+                buf = b"".join(parts)
+                n_chunks += n
+                n_bytes += len(buf)
+                out.append(
+                    np.frombuffer(buf, dtype=arr.dtype).reshape(arr.shape)
+                )
+        if self.ledger is not None:
+            self.ledger.incr("checkpoint.chunks_read", n_chunks)
+            self.ledger.incr("checkpoint.bytes_read", n_bytes)
         return treedef.unflatten(out)

@@ -159,6 +159,8 @@ class PlacementEngine:
         interpret: bool | None = None,
         rows_per_block: int | None = None,
         cache_versions: int = CACHE_VERSIONS,
+        ledger=None,
+        metrics=None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -186,7 +188,21 @@ class PlacementEngine:
         # re-deriving it from a membership snapshot.
         self._rs_shadow: RandomSlicingTable | None = None
         self._default_sweep = None  # lazily-built all-device ShardedSweep
-        self.uploads = 0  # table materializations (one per (algorithm, version))
+        from repro.obs import TraceLedger
+
+        # host-plane telemetry: artifact uploads / LRU hits / evictions land
+        # here as counters + structured events (instance-scoped unless a
+        # shared ledger is injected -- the exact upload tripwire counts in
+        # the tests must never alias across engines).  ``metrics`` is the
+        # optional device-plane registry consumers (planner, movers) share.
+        self.ledger = ledger if ledger is not None else TraceLedger()
+        self.metrics = metrics
+
+    @property
+    def uploads(self) -> int:
+        """Table materializations (one per (algorithm, version)) -- a
+        ledger counter behind the original attribute name."""
+        return self.ledger.counter("engine.uploads")
 
     # -- artifact lifecycle --------------------------------------------------
 
@@ -228,7 +244,11 @@ class PlacementEngine:
         cache = self._cache(algorithm)
         cache[art.version] = art
         while len(cache) > self._cache_versions:
-            cache.popitem(last=False)
+            evicted_version, _ = cache.popitem(last=False)
+            self.ledger.incr("engine.lru_evictions")
+            self.ledger.event(
+                "engine.lru_evict", algorithm, version=evicted_version
+            )
 
     def artifact(self, algorithm: str | None = None):
         """The current version's lookup table under ``algorithm`` (default:
@@ -240,13 +260,20 @@ class PlacementEngine:
         art = cache.get(version)
         if art is not None:
             cache.move_to_end(version)
+            self.ledger.incr("engine.lru_hits")
             return art
-        if alg == "asura":
-            art = self._build_asura_artifact(version)
-        else:
-            art = self._build_baseline_artifact(alg, version)
+        with self.ledger.span("engine.build_artifact", algorithm=alg,
+                              version=version):
+            if alg == "asura":
+                art = self._build_asura_artifact(version)
+            else:
+                art = self._build_baseline_artifact(alg, version)
         self._store(alg, art)
-        self.uploads += 1
+        self.ledger.incr("engine.uploads")
+        self.ledger.event(
+            "engine.upload", alg, version=version,
+            n_segs=getattr(art, "n_segs", None)
+        )
         return art
 
     def _build_asura_artifact(self, version: int) -> TableArtifact:

@@ -365,17 +365,27 @@ def baseline_replicas_lookup(
     *,
     n_replicas: int,
     max_tries: int = REPLICA_MAX_TRIES,
-) -> jax.Array:
+    emit_stats: bool = False,
+):
     """Shape-polymorphic jnp R-way fan-out -> (*ids.shape, R) int32 nodes.
 
     ``lookup`` is one of the ``*_lookup`` bodies; slots that fail to find a
     distinct node within ``max_tries`` stay -1 (only possible when
-    R > live nodes, or with astronomically bad luck)."""
+    R > live nodes, or with astronomically bad luck).
+
+    ``emit_stats=True`` returns ``(nodes, stats)`` where ``stats`` is a
+    (1,) uint32 vector holding the total salted re-probe attempts the
+    batch issued (draws on lanes whose R-set was still incomplete) -- the
+    obs device plane's rejection-cost metric.  Nodes are bit-identical
+    either way."""
     shape = ids.shape
     u = ids.astype(jnp.uint32)
     prim = lookup(ids, keys, vals)
     if n_replicas == 1:
-        return prim[..., None]
+        out = prim[..., None]
+        if emit_stats:
+            return out, jnp.zeros((1,), dtype=jnp.uint32)
+        return out
     slots = jnp.full((n_replicas,) + shape, -1, dtype=jnp.int32)
     slots = slots.at[0].set(prim)
     found = jnp.ones(shape, dtype=jnp.int32)
@@ -384,7 +394,11 @@ def baseline_replicas_lookup(
     )
 
     def body(k, state):
-        slots, found = state
+        if emit_stats:
+            slots, found, nprobe = state
+            nprobe = nprobe + jnp.sum((found < n_replicas).astype(jnp.uint32))
+        else:
+            slots, found = state
         ctr = jnp.broadcast_to(jnp.asarray(k).astype(jnp.uint32), shape)
         h = draw_u32(u, REPLICA_FANOUT_LEVEL, ctr)
         cand = lookup(h, keys, vals)
@@ -393,8 +407,15 @@ def baseline_replicas_lookup(
         put = take[None] & (row == found[None])
         slots = jnp.where(put, cand[None], slots)
         found = found + take.astype(jnp.int32)
+        if emit_stats:
+            return slots, found, nprobe
         return slots, found
 
+    if emit_stats:
+        slots, _, nprobe = jax.lax.fori_loop(
+            1, max_tries + 1, body, (slots, found, jnp.uint32(0))
+        )
+        return jnp.moveaxis(slots, 0, -1), nprobe[None]
     slots, _ = jax.lax.fori_loop(1, max_tries + 1, body, (slots, found))
     return jnp.moveaxis(slots, 0, -1)
 

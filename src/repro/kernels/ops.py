@@ -120,7 +120,8 @@ def tail_prep(len32) -> tuple[jax.Array, jax.Array]:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "emit_nodes")
+    jax.jit,
+    static_argnames=("top_level", "s_log2", "max_draws", "emit_nodes", "emit_stats"),
 )
 def _place_fused_ref(
     ids: jax.Array,
@@ -133,14 +134,24 @@ def _place_fused_ref(
     s_log2: int,
     max_draws: int,
     emit_nodes: bool,
-) -> jax.Array:
-    """jnp-reference analogue of ``place_fused_pallas``: total, on-device."""
+    emit_stats: bool = False,
+):
+    """jnp-reference analogue of ``place_fused_pallas``: total, on-device.
+
+    ``emit_stats=True`` returns ``(out, tail_count)`` where ``tail_count``
+    is the uint32 number of lanes that fell through the bounded draw loop
+    into the 95-bit tail resolution (obs device plane; p < 2**-53 per lane,
+    so a nonzero count is itself a signal).  Outputs are bit-identical
+    either way."""
     segs = place_ref(
         ids, len32, top_level=top_level, s_log2=s_log2, max_draws=max_draws
     )
+    tail_count = jnp.sum((segs < 0).astype(jnp.uint32)) if emit_stats else None
     segs = resolve_tail_dev(ids, segs, cum_hi, cum_lo, top_level)
     if emit_nodes:
         segs = jnp.take(node_of, segs, axis=0)
+    if emit_stats:
+        return segs, tail_count
     return segs
 
 
@@ -153,7 +164,10 @@ def _head(x: jax.Array, n: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("top_level", "s_log2", "max_draws", "n_replicas", "emit_nodes"),
+    static_argnames=(
+        "top_level", "s_log2", "max_draws", "n_replicas", "emit_nodes",
+        "emit_stats",
+    ),
 )
 def _place_replicas_fused_ref(
     ids: jax.Array,
@@ -165,20 +179,42 @@ def _place_replicas_fused_ref(
     max_draws: int,
     n_replicas: int,
     emit_nodes: bool,
-) -> jax.Array:
+    emit_stats: bool = False,
+):
     """jnp-reference replica placement with the optional fused node gather
-    (one jit so no eager scalar ops escape to the host between calls)."""
-    segs = place_replicas_ref(
-        ids,
-        len32,
-        node_of,
-        top_level=top_level,
-        s_log2=s_log2,
-        max_draws=max_draws,
-        n_replicas=n_replicas,
-    )
+    (one jit so no eager scalar ops escape to the host between calls).
+
+    ``emit_stats=True`` returns ``(out, stats)`` where ``stats`` is the
+    (DEPTH_BINS + 1,) uint32 vector ``[ladder_depth_hist..., nonconverged]``
+    the obs device plane accumulates into its slab -- placements stay
+    bit-identical (tested)."""
+    if emit_stats:
+        segs, depth_hist = place_replicas_ref(
+            ids,
+            len32,
+            node_of,
+            top_level=top_level,
+            s_log2=s_log2,
+            max_draws=max_draws,
+            n_replicas=n_replicas,
+            emit_stats=True,
+        )
+        nonconv = jnp.sum((segs < 0).astype(jnp.uint32))
+        stats = jnp.concatenate([depth_hist, nonconv[None]])
+    else:
+        segs = place_replicas_ref(
+            ids,
+            len32,
+            node_of,
+            top_level=top_level,
+            s_log2=s_log2,
+            max_draws=max_draws,
+            n_replicas=n_replicas,
+        )
     if emit_nodes:
         segs = jnp.where(segs >= 0, jnp.take(node_of, jnp.maximum(segs, 0)), -1)
+    if emit_stats:
+        return segs, stats
     return segs
 
 

@@ -15,6 +15,11 @@ import jax.numpy as jnp
 
 GOLDEN = 0x9E3779B9
 KMULT = 0x85EBCA77
+# Ladder-depth histogram width (obs device plane): a draw's depth is
+# ``top_level - exit_level + 1`` in [1, top_level + 1], and the shift
+# construction bounds top_level <= 32 - s_log2, so 34 bins (clipped)
+# cover every reachable depth at any parameterization.
+DEPTH_BINS = 34
 # NOTE: no module-level jnp constants here -- this module's helpers run
 # inside Pallas kernels, which reject captured device arrays.
 
@@ -43,7 +48,14 @@ def draw_u32(ids: jax.Array, level, counters: jax.Array) -> jax.Array:
     return fmix32(seed ^ (counters.astype(jnp.uint32) * jnp.uint32(KMULT)))
 
 
-def next_asura(ids, counters, top_level: int, s_log2: int):
+def next_asura(
+    ids,
+    counters,
+    top_level: int,
+    s_log2: int,
+    emit_depth: bool = False,
+    active=None,
+):
     """One ASURA number per lane as (k:int32, frac32:uint32, new_counters).
 
     counters: (top_level + 1, ...) uint32; row r is the counter of level
@@ -61,22 +73,41 @@ def next_asura(ids, counters, top_level: int, s_log2: int):
     is the counter array plus O(1) scalars instead of one rebuilt counter
     tensor per unrolled level.  Draw order and counter ticks are
     bit-identical to the unrolled ladder and the scalar oracle (tested).
+
+    ``emit_depth=True`` additionally returns the per-lane consulted depth
+    (``top_level - exit_level + 1``, int32) as a fourth output -- the obs
+    device plane's ladder-depth histogram source.  The k/frac/counter
+    stream is bit-identical either way (the extra ``where`` only feeds
+    the depth output; tested in tests/test_obs.py).
+
+    ``active`` (optional bool mask over ``ids``) gates the counter TICK
+    only: inactive lanes still draw (their k/f outputs are garbage the
+    caller ignores) but leave their counters frozen.  The replica loop
+    uses this to keep satisfied lanes' lockstep dead draws out of the
+    derived depth histogram -- the gate rides the existing one-row
+    counter update, so it costs O(batch) per consulted level instead of
+    an O(levels x batch) select per draw.  Active lanes' streams are
+    unaffected (lanes never read each other's counters).
     """
     shape = ids.shape
     # NOTE: constants below are created inside the traced function (not
     # module-level jnp arrays) so this helper can run inside Pallas kernels.
 
     def cond(state):
-        _, consult, _, _, _ = state
+        consult = state[1]
         return jnp.any(consult)
 
     def body(state):
-        level, consult, out_k, out_f, ctrs = state
+        if emit_depth:
+            level, consult, out_k, out_f, out_d, ctrs = state
+        else:
+            level, consult, out_k, out_f, ctrs = state
         row = top_level - level
         ctr = jax.lax.dynamic_index_in_dim(ctrs, row, 0, keepdims=False)
         h = draw_u32(ids, level, ctr)
+        tick = consult if active is None else consult & active
         ctrs = jax.lax.dynamic_update_index_in_dim(
-            ctrs, ctr + consult.astype(jnp.uint32), row, 0
+            ctrs, ctr + tick.astype(jnp.uint32), row, 0
         )
         descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
         emit = consult & ~descend
@@ -85,6 +116,9 @@ def next_asura(ids, counters, top_level: int, s_log2: int):
         f = h << (jnp.uint32(s_log2) + lvl)
         out_k = jnp.where(emit, k, out_k)
         out_f = jnp.where(emit, f, out_f)
+        if emit_depth:
+            out_d = jnp.where(emit, jnp.int32(top_level) - level + 1, out_d)
+            return level - 1, descend, out_k, out_f, out_d, ctrs
         return level - 1, descend, out_k, out_f, ctrs
 
     state = (
@@ -92,9 +126,14 @@ def next_asura(ids, counters, top_level: int, s_log2: int):
         jnp.ones(shape, dtype=bool),
         jnp.zeros(shape, dtype=jnp.int32),
         jnp.zeros(shape, dtype=jnp.uint32),
+        *((jnp.zeros(shape, dtype=jnp.int32),) if emit_depth else ()),
         counters,
     )
-    _, _, out_k, out_f, counters = jax.lax.while_loop(cond, body, state)
+    out = jax.lax.while_loop(cond, body, state)
+    if emit_depth:
+        _, _, out_k, out_f, out_d, counters = out
+        return out_k, out_f, counters, out_d
+    _, _, out_k, out_f, counters = out
     return out_k, out_f, counters
 
 
@@ -276,7 +315,8 @@ def addition_numbers_ref(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("top_level", "s_log2", "max_draws", "n_replicas")
+    jax.jit,
+    static_argnames=("top_level", "s_log2", "max_draws", "n_replicas", "emit_stats"),
 )
 def place_replicas_ref(
     ids: jax.Array,
@@ -287,7 +327,8 @@ def place_replicas_ref(
     s_log2: int = 1,
     max_draws: int = 128,
     n_replicas: int = 1,
-) -> jax.Array:
+    emit_stats: bool = False,
+):
     """Batched section 5.A replication -> (batch, R) int32 segment numbers.
 
     First column is the primary; the R draws hit distinct *nodes* (checked
@@ -295,6 +336,23 @@ def place_replicas_ref(
     dup test costs no extra table gather).  -1 marks lanes that did not
     converge (the wrapper raises).  Bit-identical to
     ``repro.core.asura.place_replicas_scalar`` lane-by-lane (tested).
+
+    ``emit_stats=True`` returns ``(segs, depth_hist)`` where ``depth_hist``
+    is the (DEPTH_BINS,) uint32 consulted-ladder-depth histogram over every
+    draw each lane issued while still seeking replicas -- the obs device
+    plane's view of how much ladder work the batch cost.  It is DERIVED
+    from the final draw counters rather than accumulated per draw: row
+    ``r`` of the counter array ticks once for every draw that consulted
+    level ``top_level - r``, i.e. every draw of depth >= r + 1, so the
+    histogram is the first difference of the per-row counter sums -- one
+    reduction after the loop plus a lane-liveness gate folded into the
+    existing one-row counter tick (the <= 1.05x overhead ceiling rules
+    out both an in-loop scatter and a full-array counter select).
+    Satisfied lanes' counters freeze so the histogram is a function of
+    each lane's id alone -- summing per-shard histograms of any partition
+    of a batch is bit-identical to the unsharded histogram (the sharded
+    snapshot merge relies on this).  The placement stream is bit-identical
+    either way (frozen lanes are inert: ``take`` requires ``found < R``).
     """
     ids = ids.astype(jnp.uint32)
     n_segs = len32.shape[0]
@@ -302,12 +360,24 @@ def place_replicas_ref(
     R = n_replicas
 
     def cond(state):
-        i, _, _, _, found = state
+        i, found = state[0], state[4]
         return (i < max_draws * max(1, R)) & ~jnp.all(found >= R)
 
     def body(state):
         i, counters, segs, nodes, found = state
-        k, f, counters = next_asura(ids, counters, top_level, s_log2)
+        # With stats on, satisfied lanes stop ticking their counters: the
+        # lockstep dead draws they keep issuing depend on the slowest lane
+        # IN THIS BATCH, so counting them would make the derived histogram
+        # depend on how a stream is sharded.  A frozen lane is inert for
+        # placement either way (``take`` requires ``found < R``), so the
+        # segment stream is bit-identical with or without stats.
+        k, f, counters = next_asura(
+            ids,
+            counters,
+            top_level,
+            s_log2,
+            active=(found < R) if emit_stats else None,
+        )
         k_safe = jnp.minimum(k, n_segs - 1)
         hit = (found < R) & (k < n_segs) & (f < len32[k_safe])
         node_k = node_of[k_safe]
@@ -321,13 +391,21 @@ def place_replicas_ref(
         nodes = jnp.stack(
             [jnp.where(take & (found == r), node_k, nodes[r]) for r in range(R)]
         )
-        return i + 1, counters, segs, nodes, found + take.astype(jnp.int32)
+        found = found + take.astype(jnp.int32)
+        return i + 1, counters, segs, nodes, found
 
     counters0 = jnp.zeros((top_level + 1, batch), dtype=jnp.uint32)
     segs0 = jnp.full((R, batch), -1, dtype=jnp.int32)
     nodes0 = jnp.full((R, batch), -1, dtype=jnp.int32)
     found0 = jnp.zeros((batch,), dtype=jnp.int32)
-    _, _, segs, _, _ = jax.lax.while_loop(
+    _, counters, segs, _, _ = jax.lax.while_loop(
         cond, body, (0, counters0, segs0, nodes0, found0)
     )
+    if emit_stats:
+        # cnt[r] = draws of depth >= r + 1; hist[d] = cnt[d-1] - cnt[d]
+        cnt = jnp.sum(counters, axis=1, dtype=jnp.uint32)
+        cnt = jnp.concatenate([cnt, jnp.zeros((1,), dtype=jnp.uint32)])
+        dh = jnp.zeros((DEPTH_BINS,), dtype=jnp.uint32)
+        dh = dh.at[1 : top_level + 2].set(cnt[:-1] - cnt[1:])
+        return segs.T, dh
     return segs.T

@@ -543,6 +543,30 @@ def selftest(n_devices: int | None = None, n_ids: int = 100_003) -> int:
                 assert np.array_equal(
                     np.asarray(solo.queue), np.asarray(shard.queue)
                 ), f"{alg} R={R} step {_step}: sharded queue state differs"
+
+    # metrics slab: the mesh-sharded instrumented stream's psum-merged
+    # snapshot equals the single-device snapshot bit for bit (same exact
+    # integer reduction contract as the load histogram)
+    from repro.obs import MetricsRegistry
+
+    eng_m = PlacementEngine(serve_cluster, backend="ref", algorithm="asura")
+    for R in (1, 3):
+        kw = dict(
+            batch=batch, n_keys=4096, law="zipf",
+            n_replicas=R, policy="pow2", seed=7,
+        )
+        reg_solo, reg_shard = MetricsRegistry(), MetricsRegistry()
+        solo = RequestStreamDriver(eng_m, metrics=reg_solo, **kw)
+        shard = RequestStreamDriver(eng_m, mesh=mesh, metrics=reg_shard, **kw)
+        for _step in range(3):
+            solo.step()
+            shard.step()
+        snap_a, snap_b = reg_solo.snapshot(), reg_shard.snapshot()
+        assert set(snap_a) == set(snap_b), "metric name sets differ"
+        for name in snap_a:
+            assert np.array_equal(snap_a[name], snap_b[name]), (
+                f"R={R}: sharded metric {name!r} differs"
+            )
     return sweep.n_devices
 
 

@@ -20,6 +20,15 @@ Subclasses implement:
                           public verb (liveness guards, blob landing,
                           detach-on-done) so a hook can never be skipped by
                           calling one verb instead of another.
+
+Observability rides the same chokepoint: a driver that carries a
+``ledger`` attribute (an ``obs.TraceLedger``) gets one structured
+``migrate.round`` event per completed round -- round index, per-(src,
+dst) pair count, rows moved, and bytes when a ``bytes_per_row`` attribute
+is set -- emitted from the public verbs only, so wrappers that delegate
+``_pump_rounds`` to an inner driver never double-count.  The round dicts
+the verbs RETURN are unchanged (field-compatible with every PR-3..5
+consumer); the events replace nothing, they annotate.
 """
 
 from __future__ import annotations
@@ -44,14 +53,39 @@ class DrainDriver:
     def _pending_desc(self) -> str:
         return "work still pending"
 
+    def _emit_rounds(self, matrices: list) -> list:
+        """Ledger/metrics hook: one ``migrate.round`` event per matrix."""
+        ledger = getattr(self, "ledger", None)
+        if ledger is None or not matrices:
+            return matrices
+        bytes_per_row = int(getattr(self, "bytes_per_row", 0) or 0)
+        metrics = getattr(self, "metrics", None)
+        for matrix in matrices:
+            moves = sum(matrix.values())
+            fields = {
+                "round": ledger.incr("migrate.rounds"),
+                "moves": moves,
+                "pairs": len(matrix),
+            }
+            ledger.incr("migrate.rows_moved", moves)
+            if bytes_per_row:
+                fields["bytes"] = moves * bytes_per_row
+                ledger.incr("migrate.bytes_moved", moves * bytes_per_row)
+                if metrics is not None:
+                    metrics.inc_host(
+                        "migrate.bytes_moved", moves * bytes_per_row
+                    )
+            ledger.event("migrate.round", type(self).__name__, **fields)
+        return matrices
+
     def round(self) -> dict:
         """One round; returns its per-(src, dst) movement matrix."""
-        [matrix] = self._advance(lambda: [self._round()])
+        [matrix] = self._emit_rounds(self._advance(lambda: [self._round()]))
         return matrix
 
     def pump(self) -> list:
         """Run the rounds the injected clock says are due (0 if none)."""
-        return self._advance(self._pump_rounds)
+        return self._emit_rounds(self._advance(self._pump_rounds))
 
     def run(self, max_rounds: int = 100_000) -> list:
         """Drain to completion; returns the per-round matrices."""
@@ -69,4 +103,4 @@ class DrainDriver:
                 )
             return out
 
-        return self._advance(drain)
+        return self._emit_rounds(self._advance(drain))

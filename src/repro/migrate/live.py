@@ -63,13 +63,17 @@ def _member_fn():
 
 
 _ROUTE_CACHE: dict = {}
-_TRACE_COUNTS = {"replica_route": 0}
 
 
 def probe_trace_count(kind: str = "replica_route") -> int:
     """Total jit traces of the fused window probes so far (the tests'
-    tripwire that repeated serving batches stop retracing)."""
-    return _TRACE_COUNTS[kind]
+    tripwire that repeated serving batches stop retracing).  The count
+    lives on the process-wide ``obs`` ledger now (the probe cache is
+    module-level, so its counter is too); this alias keeps the PR-7
+    call sites reading the same way."""
+    from repro.obs import get_ledger
+
+    return get_ledger().counter(f"migrate.live.{kind}_traces")
 
 
 def _fused_replica_route(statics: tuple):
@@ -96,9 +100,11 @@ def _fused_replica_route(statics: tuple):
 
     top_level, s_log2, max_draws, n_replicas = statics
 
+    from repro.obs import get_ledger
+
     @jax.jit
     def route(ids, len32, node_of, ids_pad, src_pad, counts):
-        _TRACE_COUNTS["replica_route"] += 1  # Python side effect: per TRACE
+        get_ledger().incr("migrate.live.replica_route_traces")  # per TRACE
         u = ids.astype(jnp.uint32)
         dst = _place_replicas_fused_ref(
             u,
@@ -161,6 +167,9 @@ class LiveMigration(DrainDriver):
         self.state = state
         self.mover = mover
         self.aborted = False
+        # NO window-level ledger: this wrapper's _round/_pump_rounds call
+        # the inner mover's PUBLIC verbs, whose DrainDriver hook already
+        # emits each round exactly once.
 
     @classmethod
     def from_plan(
@@ -172,6 +181,9 @@ class LiveMigration(DrainDriver):
         ingress=None,
         clock=None,
         round_seconds: float = 1.0,
+        ledger=None,
+        metrics=None,
+        bytes_per_row: int = 0,
     ) -> "LiveMigration":
         """Assemble the standard state + throttled mover around a plan (the
         one construction path every consumer shares)."""
@@ -182,6 +194,9 @@ class LiveMigration(DrainDriver):
             ingress=ingress,
             clock=clock,
             round_seconds=round_seconds,
+            ledger=ledger,
+            metrics=metrics,
+            bytes_per_row=bytes_per_row,
         )
         return cls(engine, state, mover)
 
@@ -355,6 +370,9 @@ class LiveMigration(DrainDriver):
             ingress=mover.egress,
             clock=mover.clock,
             round_seconds=mover.round_seconds,
+            ledger=mover.ledger,
+            metrics=mover.metrics,
+            bytes_per_row=mover.bytes_per_row,
         )
         tracked = getattr(self, "tracked_rows", None)
         if tracked is not None:

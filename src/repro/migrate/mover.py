@@ -275,12 +275,21 @@ class ThrottledMover(DrainDriver):
         ingress=None,
         clock: Callable[[], float] | None = None,
         round_seconds: float = 1.0,
+        ledger=None,
+        metrics=None,
+        bytes_per_row: int = 0,
     ):
         self.state = state
         self.egress = egress
         self.ingress = ingress
         self.clock = clock
         self.round_seconds = float(round_seconds)
+        # observability (optional): a TraceLedger gets one structured
+        # event per round via the DrainDriver hook; ``bytes_per_row``
+        # prices each (id, slot) row so the events/counters carry bytes.
+        self.ledger = ledger
+        self.metrics = metrics
+        self.bytes_per_row = int(bytes_per_row)
         self.rounds_done = 0
         self._pumped = 0  # clock-paced rounds only (manual round()s excluded)
         self.history: list[dict[tuple[int, int], int]] = []

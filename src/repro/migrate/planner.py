@@ -153,8 +153,32 @@ class MigrationPlanner:
     every engine consumer already does) or ``engine.artifact_for`` raises.
     """
 
-    def __init__(self, engine):
+    def __init__(self, engine, *, ledger=None, metrics=None):
         self.engine = engine
+        # observability (optional): spans around plan assembly plus the
+        # ADDITION-NUMBER prefilter's scanned/kept counters (its hit rate
+        # is the section-2.D fast path's effectiveness, DESIGN.md 13).
+        self.ledger = ledger
+        self.metrics = metrics
+
+    def _note_prefilter(self, n_scanned: int, n_kept: int) -> None:
+        if self.ledger is not None:
+            self.ledger.incr("planner.prefilter_scanned", n_scanned)
+            self.ledger.incr("planner.prefilter_kept", n_kept)
+        if self.metrics is not None:
+            self.metrics.inc_host("planner.prefilter_scanned", n_scanned)
+            self.metrics.inc_host("planner.prefilter_kept", n_kept)
+
+    def _note_plan(self, kind: str, plan, t0: float) -> None:
+        if self.ledger is None:
+            return
+        import time
+
+        self.ledger.event(
+            "span", kind, dur_s=float(time.perf_counter() - t0),
+            n_scanned=plan.n_scanned, n_moves=plan.n_moves,
+            v_from=plan.v_from, v_to=plan.v_to,
+        )
 
     def _sweep(self, mesh):
         """Resolve ``mesh=`` (a Mesh, a ``ShardedSweep``, or None) into a
@@ -286,6 +310,9 @@ class MigrationPlanner:
         bit-identical (DESIGN.md section 11); it forces the device path
         regardless of backend.
         """
+        import time
+
+        t0 = time.perf_counter()
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         sweep = self._sweep(mesh)
         host = self.engine.backend == "numpy" and sweep is None
@@ -300,6 +327,7 @@ class MigrationPlanner:
             base = np.arange(start, start + len(c), dtype=np.int64)
             if max_new_seg is not None:
                 keep = self._candidates(c, v_from, max_new_seg, host)
+                self._note_prefilter(len(keep), int(keep.sum()))
                 c, base = c[keep], base[keep]
             if c.size == 0:
                 continue
@@ -335,7 +363,7 @@ class MigrationPlanner:
         cat = lambda parts, dtype: (  # noqa: E731
             np.concatenate(parts) if parts else np.zeros(0, dtype=dtype)
         )
-        return MigrationPlan(
+        plan = MigrationPlan(
             v_from=v_from,
             v_to=v_to,
             ids=cat(out_ids, np.uint32),
@@ -344,6 +372,8 @@ class MigrationPlanner:
             index=cat(out_idx, np.int64),
             n_scanned=len(ids),
         )
+        self._note_plan("planner.plan", plan, t0)
+        return plan
 
     def plan_replicas(
         self,
@@ -374,6 +404,9 @@ class MigrationPlanner:
         two placement sweeps.  ``mesh=`` scales the dual replica diff over
         the mesh's data axis, bit-identically, as in ``plan``.
         """
+        import time
+
+        t0 = time.perf_counter()
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         sweep = self._sweep(mesh)
         host = self.engine.backend == "numpy" and sweep is None
@@ -389,6 +422,7 @@ class MigrationPlanner:
                 keep = self._candidates(
                     c, v_from, max_new_seg, host, n_replicas=n_replicas
                 )
+                self._note_prefilter(len(keep), int(keep.sum()))
                 c, base = c[keep], base[keep]
             if c.size == 0:
                 continue
@@ -430,7 +464,7 @@ class MigrationPlanner:
         cat = lambda parts, dtype: (  # noqa: E731
             np.concatenate(parts) if parts else np.zeros(0, dtype=dtype)
         )
-        return MigrationPlan(
+        plan = MigrationPlan(
             v_from=v_from,
             v_to=v_to,
             ids=cat(out["ids"], np.uint32),
@@ -442,6 +476,8 @@ class MigrationPlanner:
             slot=cat(out["slot"], np.int32),
             src_slot=cat(out["src_slot"], np.int32),
         )
+        self._note_plan("planner.plan_replicas", plan, t0)
+        return plan
 
     def _candidates(
         self,

@@ -1,0 +1,184 @@
+"""Device-plane metrics: one u32 slab the fused jits accumulate into.
+
+``MetricsRegistry`` owns a single contiguous uint32 device array (the
+"slab").  Counters and histograms are append-only layout entries -- a
+name maps to a ``(offset, size)`` window of the slab, fixed at
+registration time, so the in-jit helpers (``add`` / ``add_hist`` /
+``bucket_add``) bake static offsets into the trace and cost one fused
+scatter-add each.  The contract that makes this safe on the serving hot
+path (DESIGN.md section 13):
+
+  * the slab is threaded through the jitted step like any other device
+    state (counts, queue, qhist): passed in, returned updated -- no
+    side channels, no host sync per step;
+  * a DISABLED registry (``enabled=False``) makes every helper a
+    build-time no-op returning its operand unchanged, so enabled and
+    disabled drivers compile the same number of traces;
+  * metrics drain through ONE explicit ``snapshot()`` transfer, which
+    zeroes the device slab and accumulates into host ``uint64`` totals
+    (the device plane stays u32 -- TPUs have no u64 -- and overflow
+    headroom lives on the host side of the drain);
+  * under a mesh, a step accumulates into a zeros *delta* slab that
+    merges with the existing per-node histogram in the step's single
+    exact integer psum, so the sharded slab is bit-identical to the
+    single-device slab (selftest-enforced).
+
+Host-plane oddments that never touch the device (planner prefilter
+counts, migration bytes) go through ``inc_host`` and drain through the
+same ``snapshot()`` dict.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class MetricsRegistry:
+    """Append-only u32 device slab of named counters and histograms."""
+
+    def __init__(self, *, enabled: bool = True):
+        self.enabled = bool(enabled)
+        self._layout: dict[str, tuple[int, int]] = {}  # name -> (offset, size)
+        self._size = 0
+        self._slab = None  # lazily-built jax uint32 array, or None
+        self._totals: dict[str, np.ndarray] = {}  # drained device totals (u64)
+        self._host: dict[str, int] = {}  # host-plane counters
+
+    # -- layout (host side, registration time) -------------------------------
+
+    def _ensure(self, name: str, size: int) -> str:
+        if not self.enabled:
+            return name
+        prev = self._layout.get(name)
+        if prev is not None:
+            if prev[1] != size:
+                raise ValueError(
+                    f"metric {name!r} already registered with size {prev[1]}, "
+                    f"got {size}"
+                )
+            return name
+        if size < 1:
+            raise ValueError(f"metric {name!r} needs size >= 1, got {size}")
+        self._layout[name] = (self._size, int(size))
+        self._size += int(size)
+        return name
+
+    def counter(self, name: str) -> str:
+        """Register (idempotently) a scalar counter; returns ``name``."""
+        return self._ensure(name, 1)
+
+    def histogram(self, name: str, n_bins: int) -> str:
+        """Register (idempotently) an ``n_bins``-wide histogram."""
+        return self._ensure(name, n_bins)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._layout)
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    # -- the device slab ------------------------------------------------------
+
+    def slab(self):
+        """The current device slab, grown (zero-padded) to the layout.
+
+        Offsets are append-only, so growing preserves every live window;
+        a growth retraces the consuming jit once (a shape change), which
+        is the same benign retrace any new operand shape costs.
+        """
+        import jax.numpy as jnp
+
+        if self._slab is None or int(self._slab.shape[0]) != self._size:
+            old = self._slab
+            self._slab = jnp.zeros((self._size,), jnp.uint32)
+            if old is not None and int(old.shape[0]):
+                self._slab = self._slab.at[: old.shape[0]].set(old)
+        return self._slab
+
+    def set_slab(self, slab) -> None:
+        """Store the updated slab a jitted step returned (device array)."""
+        self._slab = slab
+
+    # -- traced accumulation helpers (static offsets, no captures) ------------
+
+    def add(self, slab, name: str, value=1):
+        """``slab[name] += value`` (scalar counter); traced-value safe."""
+        if not self.enabled:
+            return slab
+        import jax.numpy as jnp
+
+        off, _ = self._layout[name]
+        return slab.at[off].add(jnp.asarray(value).astype(jnp.uint32))
+
+    def add_hist(self, slab, name: str, values):
+        """Add a whole per-bin vector into histogram ``name`` (the fused
+        step already holds its batch histogram -- no rebinning needed)."""
+        if not self.enabled:
+            return slab
+        import jax.numpy as jnp
+
+        off, size = self._layout[name]
+        v = jnp.asarray(values).astype(jnp.uint32)
+        if int(v.shape[0]) > size:
+            raise ValueError(
+                f"histogram {name!r} holds {size} bins, got {int(v.shape[0])}"
+            )
+        return slab.at[off : off + int(v.shape[0])].add(v)
+
+    def bucket_add(self, slab, name: str, idx, weight=1):
+        """Scatter-add into histogram ``name`` at (clipped) bucket ``idx``."""
+        if not self.enabled:
+            return slab
+        import jax.numpy as jnp
+
+        off, size = self._layout[name]
+        i = jnp.clip(jnp.asarray(idx).astype(jnp.int32), 0, size - 1)
+        w = jnp.broadcast_to(jnp.asarray(weight).astype(jnp.uint32), i.shape)
+        return slab.at[off + i].add(w)
+
+    # -- host plane ------------------------------------------------------------
+
+    def inc_host(self, name: str, n=1) -> int:
+        """Host-side counter (control-path metrics: planner prefilter
+        counts, migration bytes) -- drains through the same snapshot."""
+        self._host[name] = c = self._host.get(name, 0) + int(n)
+        return c
+
+    # -- drain ----------------------------------------------------------------
+
+    def _drain(self) -> None:
+        if not (self.enabled and self._slab is not None and self._size):
+            return
+        import jax.numpy as jnp
+
+        drained = np.zeros(self._size, np.uint64)
+        live = np.asarray(self._slab).astype(np.uint64)  # the ONE transfer
+        drained[: live.shape[0]] = live
+        self._slab = jnp.zeros((self._size,), jnp.uint32)
+        for name, (off, size) in self._layout.items():
+            tot = self._totals.get(name)
+            if tot is None:
+                tot = self._totals[name] = np.zeros(size, np.uint64)
+            tot += drained[off : off + size]
+
+    def totals(self) -> dict:
+        """Accumulated totals WITHOUT touching the device (what the last
+        snapshot drained, plus the host-plane counters)."""
+        out: dict = {}
+        for name, (_, size) in self._layout.items():
+            tot = self._totals.get(name)
+            if tot is None:
+                tot = np.zeros(size, np.uint64)
+            out[name] = int(tot[0]) if size == 1 else tot.copy()
+        for name, v in self._host.items():
+            out[name] = int(v)
+        return out
+
+    def snapshot(self) -> dict:
+        """Drain the device slab (ONE device->host transfer, slab resets
+        to zero) and return the accumulated ``{name: int | uint64 array}``
+        totals.  Totals are cumulative across snapshots."""
+        self._drain()
+        return self.totals()

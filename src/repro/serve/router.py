@@ -60,7 +60,10 @@ class ReplicaRouter:
         *,
         algorithm: str = "asura",
         virtual_nodes: int = DEFAULT_VIRTUAL_NODES,
+        ledger=None,
     ):
+        from repro.obs import TraceLedger
+
         self.cluster = Cluster()
         for rid, cap in replica_capacities.items():
             self.cluster.add_node(rid, cap)
@@ -75,7 +78,15 @@ class ReplicaRouter:
             )
         self._scale_migration = None  # at most one live window at a time
         self._probe_cache: dict = {}  # (statics, R, table shapes) -> jitted probe
-        self.probe_traces = 0  # replica-probe jit traces (retrace tripwire)
+        # instance-scoped unless a shared ledger is injected -- the exact
+        # probe-trace tripwire counts must never alias across routers
+        self.ledger = ledger if ledger is not None else TraceLedger()
+
+    @property
+    def probe_traces(self) -> int:
+        """Replica-probe jit traces (retrace tripwire) -- a ledger counter
+        behind the PR-7 attribute name."""
+        return self.ledger.counter("serve.probe_traces")
 
     def route(self, session_ids) -> np.ndarray:
         """session ids -> replica ids (vectorized, table-local)."""
@@ -120,7 +131,7 @@ class ReplicaRouter:
 
             @jax.jit
             def probe(ids, *tabs):
-                router.probe_traces += 1
+                router.ledger.incr("serve.probe_traces")  # per TRACE only
                 return owners_fn(ids, *tabs)
 
             fn = self._probe_cache[key] = probe

@@ -73,10 +73,15 @@ def route_statics(engine, algorithm: str | None = None):
     return tables, statics
 
 
-def replica_owners_body(statics: tuple, n_replicas: int):
+def replica_owners_body(statics: tuple, n_replicas: int, emit_stats: bool = False):
     """Per-shard replica owners: (ids, *tables) -> (batch, R) int32 -- the
     same jnp kernel bodies the single-device engine paths run (the
-    ``ShardedSweep._owners_body`` idiom, R-way)."""
+    ``ShardedSweep._owners_body`` idiom, R-way).
+
+    ``emit_stats=True`` returns ``(owners, stats)`` instead, where
+    ``stats`` is the algorithm's uint32 device-plane vector (ASURA:
+    ``[ladder_depth_hist..., nonconverged]`` of length ``DEPTH_BINS + 1``;
+    baselines: ``[reprobes]``) -- owners are bit-identical either way."""
     alg = statics[0]
     if alg == "asura":
         from repro.kernels.ops import _place_replicas_fused_ref
@@ -87,7 +92,7 @@ def replica_owners_body(statics: tuple, n_replicas: int):
             return _place_replicas_fused_ref(
                 ids, len32, node_of,
                 top_level=top_level, s_log2=s_log2, max_draws=max_draws,
-                n_replicas=n_replicas, emit_nodes=True,
+                n_replicas=n_replicas, emit_nodes=True, emit_stats=emit_stats,
             )
 
         return owners
@@ -97,7 +102,8 @@ def replica_owners_body(statics: tuple, n_replicas: int):
 
     def owners(ids, keys, vals):
         return baseline_replicas_lookup(
-            lookup, ids, keys, vals, n_replicas=n_replicas
+            lookup, ids, keys, vals, n_replicas=n_replicas,
+            emit_stats=emit_stats,
         )
 
     return owners
@@ -173,6 +179,8 @@ class RequestStreamDriver:
         n_bins: int | None = None,
         mesh=None,
         algorithm: str | None = None,
+        metrics=None,
+        ledger=None,
     ):
         import jax
         import jax.numpy as jnp
@@ -216,9 +224,53 @@ class RequestStreamDriver:
         self.service_rate = int(service_rate)
         self._service = jnp.full((self.n_bins,), self.service_rate, jnp.int32)
         self._key = jax.random.PRNGKey(seed)
-        self.step_traces = 0  # fused-step jit traces (the retrace tripwire)
+        from repro.obs import TraceLedger
+
+        # Instance-scoped by default so the exact trace-count tripwires
+        # never alias across drivers; pass a shared ledger to unify.
+        self.ledger = ledger if ledger is not None else TraceLedger()
+        self.metrics = metrics
+        self._instrumented = metrics is not None and metrics.enabled
+        if self._instrumented:
+            self._register_metrics()
         self._fns: dict = {}
         self.reset()
+
+    def _register_metrics(self) -> None:
+        """Claim this driver's slab windows (append-only; idempotent)."""
+        from repro.kernels.ref import DEPTH_BINS
+
+        reg = self.metrics
+        self._routed_name = reg.counter(
+            f"serve.routed.{self.algorithm}.{self.policy}"
+        )
+        reg.histogram("serve.served", self.n_bins)
+        if self.algorithm == "asura":
+            reg.histogram("asura.ladder_depth", DEPTH_BINS)
+            reg.counter("asura.nonconverged")
+        else:
+            reg.counter("baseline.reprobes")
+
+    @property
+    def step_traces(self) -> int:
+        """Fused-step jit traces (the retrace tripwire) -- a ledger
+        counter behind the PR-7 attribute name."""
+        return self.ledger.counter("serve.step_traces")
+
+    def _accumulate(self, delta, hist, stats):
+        """Fold one batch's device-plane contributions into a slab delta
+        (build-time no-op chain when uninstrumented -- never traced)."""
+        from repro.kernels.ref import DEPTH_BINS
+
+        reg = self.metrics
+        delta = reg.add_hist(delta, "serve.served", hist)
+        if stats is not None:
+            if self.algorithm == "asura":
+                delta = reg.add_hist(delta, "asura.ladder_depth", stats[:DEPTH_BINS])
+                delta = reg.add(delta, "asura.nonconverged", stats[DEPTH_BINS])
+            else:
+                delta = reg.add(delta, "baseline.reprobes", stats[0])
+        return delta
 
     # -- state ----------------------------------------------------------------
 
@@ -241,19 +293,31 @@ class RequestStreamDriver:
     # -- the fused step -------------------------------------------------------
 
     def _step_fn(self, statics: tuple):
-        """One-jit batch step: generate -> route -> select -> count."""
+        """One-jit batch step: generate -> route -> select -> count.
+
+        With a live ``MetricsRegistry`` the body also threads the u32
+        metrics slab: routed/served/kernel-stats accumulate into a zeros
+        DELTA slab in-register, and under a mesh the delta rides the
+        step's single exact integer psum alongside the per-node histogram
+        (DESIGN.md section 13) -- still zero host syncs per step.
+        """
         import jax
         import jax.numpy as jnp
 
         batch, R = self.batch, self.n_replicas
         policy, n_bins, max_hist = self.policy, self.n_bins, self.max_hist
         id_salt = self.traffic.id_salt
-        owners_fn = replica_owners_body(statics, R)
+        instrumented = self._instrumented
+        owners_fn = replica_owners_body(statics, R, emit_stats=instrumented)
         sweep = self._sweep
         driver = self
 
-        def body(key, step_idx, counts, queue, qhist, service, thresholds, *tables):
-            driver.step_traces += 1  # Python side effect: fires per TRACE only
+        def body(key, step_idx, counts, queue, qhist, *rest):
+            driver.ledger.incr("serve.step_traces")  # fires per TRACE only
+            if instrumented:
+                slab, service, thresholds, *tables = rest
+            else:
+                service, thresholds, *tables = rest
             if sweep is None:
                 lanes = jnp.arange(batch, dtype=jnp.uint32)
             else:
@@ -263,20 +327,40 @@ class RequestStreamDriver:
                 first = jax.lax.axis_index(DATA_AXIS).astype(jnp.uint32) * local
                 lanes = first + jnp.arange(local, dtype=jnp.uint32)
             ids, sel = TrafficModel.draw(key, step_idx, lanes, thresholds, id_salt)
-            owners = owners_fn(ids, *tables)
+            if instrumented:
+                owners, stats = owners_fn(ids, *tables)
+            else:
+                owners = owners_fn(ids, *tables)
             chosen = select_replica(
                 owners, sel, counts, policy=policy, n_replicas=R
             )
             hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(1)
+            if instrumented:
+                delta = jnp.zeros_like(slab)
+                delta = driver.metrics.add(
+                    delta, driver._routed_name, lanes.shape[0]
+                )
+                delta = driver._accumulate(delta, hist, stats)
             if sweep is not None:
                 from repro.launch.placement_mesh import DATA_AXIS
 
-                hist = jax.lax.psum(hist, DATA_AXIS)
+                if instrumented:
+                    # the slab delta rides the step's ONE exact psum
+                    merged = jax.lax.psum(
+                        jnp.concatenate([hist, delta.astype(jnp.int32)]),
+                        DATA_AXIS,
+                    )
+                    hist = merged[:n_bins]
+                    delta = merged[n_bins:].astype(jnp.uint32)
+                else:
+                    hist = jax.lax.psum(hist, DATA_AXIS)
             counts = counts + hist
             queue = jnp.maximum(queue + hist - service, 0)
             qhist = jax.lax.dynamic_update_slice(
                 qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
             )
+            if instrumented:
+                return counts, queue, qhist, slab + delta, step_idx + 1, chosen
             return counts, queue, qhist, step_idx + 1, chosen
 
         if sweep is None:
@@ -287,6 +371,8 @@ class RequestStreamDriver:
         from repro.launch.placement_mesh import DATA_AXIS
 
         n_tables = 2 + len(self._fixed_operands())
+        n_in = (6 if instrumented else 5) + n_tables
+        n_rep_out = 4 if instrumented else 3
         return jax.jit(
             shard_map(
                 body,
@@ -294,8 +380,8 @@ class RequestStreamDriver:
                 # everything replicated: lanes derive from axis_index, so
                 # there is no partitioned INPUT at all -- only the chosen
                 # lanes come back shard-partitioned.
-                in_specs=(P(),) * (5 + n_tables),
-                out_specs=(P(), P(), P(), P(), P(DATA_AXIS)),
+                in_specs=(P(),) * n_in,
+                out_specs=(P(),) * (n_rep_out + 1) + (P(DATA_AXIS),),
                 check_rep=False,  # while_loop ladders have no replication rule
             )
         )
@@ -310,10 +396,18 @@ class RequestStreamDriver:
         scalar."""
         tables, statics = route_statics(self.engine, self.algorithm)
         fn = self._cached(("step", statics), lambda: self._step_fn(statics))
-        self.counts, self.queue, self.qhist, self._step, chosen = fn(
-            self._key, self._step, self.counts, self.queue, self.qhist,
-            *self._fixed_operands(), *tables,
-        )
+        if self._instrumented:
+            (self.counts, self.queue, self.qhist, slab, self._step,
+             chosen) = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                self.metrics.slab(), *self._fixed_operands(), *tables,
+            )
+            self.metrics.set_slab(slab)
+        else:
+            self.counts, self.queue, self.qhist, self._step, chosen = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                *self._fixed_operands(), *tables,
+            )
         self.steps_done += 1
         return chosen
 
@@ -325,12 +419,20 @@ class RequestStreamDriver:
 
         R, policy = self.n_replicas, self.policy
         n_bins, max_hist = self.n_bins, self.max_hist
+        instrumented = self._instrumented
+        # External batches carry pad lanes, whose kernel stats would be
+        # phantom work -- only the valid-masked routed/served metrics
+        # accumulate here, so the body routes without emit_stats.
         owners_fn = replica_owners_body(statics, R)
         driver = self
 
         @jax.jit
-        def body(ids, n_valid, key, step_idx, counts, queue, qhist, service, *tables):
-            driver.step_traces += 1
+        def body(ids, n_valid, key, step_idx, counts, queue, qhist, *rest):
+            driver.ledger.incr("serve.step_traces")
+            if instrumented:
+                slab, service, *tables = rest
+            else:
+                service, *tables = rest
             lanes = jnp.arange(ids.shape[0], dtype=jnp.uint32)
             valid = lanes < n_valid.astype(jnp.uint32)
             sel = TrafficModel.lane_words(key, step_idx, lanes, 1)[:, 0]
@@ -346,6 +448,11 @@ class RequestStreamDriver:
             qhist = jax.lax.dynamic_update_slice(
                 qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
             )
+            if instrumented:
+                delta = jnp.zeros_like(slab)
+                delta = driver.metrics.add(delta, driver._routed_name, n_valid)
+                delta = driver._accumulate(delta, hist, None)
+                return counts, queue, qhist, slab + delta, step_idx + 1, chosen
             return counts, queue, qhist, step_idx + 1, chosen
 
         return body
@@ -372,10 +479,19 @@ class RequestStreamDriver:
         padded, n_valid = pad_pow2(ids)
         tables, statics = route_statics(self.engine, self.algorithm)
         fn = self._cached(("route_batch", statics), lambda: self._route_batch_fn(statics))
-        self.counts, self.queue, self.qhist, self._step, chosen = fn(
-            padded, jnp.uint32(n_valid), self._key, self._step,
-            self.counts, self.queue, self.qhist, self._service, *tables,
-        )
+        if self._instrumented:
+            (self.counts, self.queue, self.qhist, slab, self._step,
+             chosen) = fn(
+                padded, jnp.uint32(n_valid), self._key, self._step,
+                self.counts, self.queue, self.qhist, self.metrics.slab(),
+                self._service, *tables,
+            )
+            self.metrics.set_slab(slab)
+        else:
+            self.counts, self.queue, self.qhist, self._step, chosen = fn(
+                padded, jnp.uint32(n_valid), self._key, self._step,
+                self.counts, self.queue, self.qhist, self._service, *tables,
+            )
         self.steps_done += 1
         return _head(chosen, n)
 
@@ -400,9 +516,15 @@ class RequestStreamDriver:
 
         policy, R = self.policy, self.n_replicas
         n_bins, max_hist = self.n_bins, self.max_hist
+        instrumented = self._instrumented
+        driver = self
 
         @jax.jit
-        def select(owners, sel, step_idx, counts, queue, qhist, service):
+        def select(owners, sel, step_idx, counts, queue, qhist, *rest):
+            if instrumented:
+                slab, service = rest
+            else:
+                (service,) = rest
             chosen = select_replica(
                 owners, sel, counts, policy=policy, n_replicas=R
             )
@@ -412,6 +534,13 @@ class RequestStreamDriver:
             qhist = jax.lax.dynamic_update_slice(
                 qhist, queue[None], (step_idx % max_hist, jnp.int32(0))
             )
+            if instrumented:
+                delta = jnp.zeros_like(slab)
+                delta = driver.metrics.add(
+                    delta, driver._routed_name, owners.shape[0]
+                )
+                delta = driver._accumulate(delta, hist, None)
+                return counts, queue, qhist, slab + delta, step_idx + 1, chosen
             return counts, queue, qhist, step_idx + 1, chosen
 
         return select
@@ -440,10 +569,18 @@ class RequestStreamDriver:
         ids, sel = gen(self._key, self._step, self.traffic.thresholds_dev)
         owners = migration.route_replicas_device(ids)
         select = self._cached(("mig_select",), self._mig_select_fn)
-        self.counts, self.queue, self.qhist, self._step, chosen = select(
-            owners, sel, self._step, self.counts, self.queue, self.qhist,
-            self._service,
-        )
+        if self._instrumented:
+            (self.counts, self.queue, self.qhist, slab, self._step,
+             chosen) = select(
+                owners, sel, self._step, self.counts, self.queue, self.qhist,
+                self.metrics.slab(), self._service,
+            )
+            self.metrics.set_slab(slab)
+        else:
+            self.counts, self.queue, self.qhist, self._step, chosen = select(
+                owners, sel, self._step, self.counts, self.queue, self.qhist,
+                self._service,
+            )
         self.steps_done += 1
         return ids, chosen
 
@@ -474,10 +611,15 @@ class RequestStreamDriver:
         return float(np.percentile(q, 99))
 
     def snapshot(self) -> dict:
-        return {
+        snap = {
             "counts": self.load_counts(),
             "queue": np.asarray(self.queue),
             "steps": self.steps_done,
             "skew": self.load_skew(),
             "q_p99": self.queue_p99(),
         }
+        self.ledger.event(
+            "serve.snapshot", self.algorithm,
+            steps=self.steps_done, skew=snap["skew"], q_p99=snap["q_p99"],
+        )
+        return snap
