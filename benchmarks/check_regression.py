@@ -91,57 +91,98 @@ def calibration_ratio(base_entries: dict, fresh_entries: dict) -> float:
     return 1.0
 
 
-def compare_entries(
+def _compare(
     baseline: dict, fresh: dict, *, threshold: float = DEFAULT_THRESHOLD
-) -> tuple[list[str], list[str]]:
-    """Compare two BENCH payloads' ``entries`` -> (failures, warnings)."""
+) -> tuple[list[str], list[str], list[dict]]:
+    """Compare two BENCH payloads' ``entries``.
+
+    Returns (failures, warnings, rows) where ``rows`` is one dict per
+    entry -- name, fresh/baseline values, speed-adjusted delta and the
+    gate verdict -- ready for the markdown run summary.
+    """
     failures: list[str] = []
     warnings: list[str] = []
+    rows: list[dict] = []
     base_entries = baseline.get("entries", {})
     fresh_entries = fresh.get("entries", {})
     cal = calibration_ratio(base_entries, fresh_entries)
     for name in sorted(set(fresh_entries) - set(base_entries)):
         warnings.append(f"new entry (no baseline, not gated): {name}")
+        rows.append(
+            {"name": name, "fresh": fresh_entries[name].get("value"),
+             "base": None, "unit": str(fresh_entries[name].get("unit", "")),
+             "delta": None, "verdict": "new"}
+        )
     for name in sorted(set(base_entries) - set(fresh_entries)):
         warnings.append(f"baseline entry missing from fresh run: {name}")
+        rows.append(
+            {"name": name, "fresh": None,
+             "base": base_entries[name].get("value"),
+             "unit": str(base_entries[name].get("unit", "")),
+             "delta": None, "verdict": "missing"}
+        )
     for name in sorted(set(base_entries) & set(fresh_entries)):
         base = base_entries[name]
         new = fresh_entries[name]
-        sense = direction(str(base.get("unit", "")))
+        unit = str(base.get("unit", ""))
+        sense = direction(unit)
+        row = {"name": name, "fresh": new.get("value"),
+               "base": base.get("value"), "unit": unit,
+               "delta": None, "verdict": "info"}
+        rows.append(row)
         if sense == "skip":
             continue
         try:
             b, f = float(base["value"]), float(new["value"])
         except (KeyError, TypeError, ValueError):
             warnings.append(f"unreadable value for {name}; skipped")
+            row["verdict"] = "unreadable"
             continue
         if b <= 0:
             warnings.append(f"non-positive baseline for {name}; skipped")
+            row["verdict"] = "unreadable"
             continue
         # deterministic units (bytes) and dimensionless ratios are compared
         # raw; timed units are normalized by the machine-speed ratio.
-        unit = str(base.get("unit", ""))
         scale = 1.0 if unit.endswith(RAW_COMPARE_UNITS) else cal
+        # signed regression %: positive = worse, whatever the direction
+        if sense == "lower":
+            regress = f / (b * scale)
+        else:
+            regress = b / (f * scale)
+        row["delta"] = 100.0 * (regress - 1.0)
+        row["verdict"] = "ok"
         if sense == "lower" and f > b * threshold * scale:
+            row["verdict"] = "FAIL"
             failures.append(
                 f"{name}: {f:.4g} vs baseline {b:.4g} "
                 f"({f / (b * scale):.2f}x speed-adjusted, limit {threshold:.2f}x)"
             )
         elif sense == "higher" and f < b / (threshold * scale):
+            row["verdict"] = "FAIL"
             failures.append(
                 f"{name}: {f:.4g} vs baseline {b:.4g} "
                 f"({b / (f * scale):.2f}x slower speed-adjusted, "
                 f"limit {threshold:.2f}x)"
             )
+    return failures, warnings, rows
+
+
+def compare_entries(
+    baseline: dict, fresh: dict, *, threshold: float = DEFAULT_THRESHOLD
+) -> tuple[list[str], list[str]]:
+    """Compare two BENCH payloads' ``entries`` -> (failures, warnings)."""
+    failures, warnings, _ = _compare(baseline, fresh, threshold=threshold)
     return failures, warnings
 
 
-def check_dirs(
+def _check_dirs(
     baseline_dir: str, fresh_dir: str, *, threshold: float = DEFAULT_THRESHOLD
-) -> tuple[list[str], list[str]]:
+) -> tuple[list[str], list[str], dict[str, list[dict]]]:
     """Gate every committed BENCH_*.json that the fresh run also produced."""
     failures: list[str] = []
     warnings: list[str] = []
+    suite_rows: dict[str, list[dict]] = {}
     base_paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
     if not base_paths:
         warnings.append(f"no committed baselines under {baseline_dir}; nothing gated")
@@ -155,10 +196,69 @@ def check_dirs(
             baseline = json.load(fh)
         with open(fresh_path) as fh:
             fresh = json.load(fh)
-        fails, warns = compare_entries(baseline, fresh, threshold=threshold)
+        fails, warns, rows = _compare(baseline, fresh, threshold=threshold)
         failures += [f"{name}: {m}" for m in fails]
         warnings += [f"{name}: {m}" for m in warns]
+        suite_rows[name] = rows
+    return failures, warnings, suite_rows
+
+
+def check_dirs(
+    baseline_dir: str, fresh_dir: str, *, threshold: float = DEFAULT_THRESHOLD
+) -> tuple[list[str], list[str]]:
+    failures, warnings, _ = _check_dirs(baseline_dir, fresh_dir, threshold=threshold)
     return failures, warnings
+
+
+def _fmt_value(v) -> str:
+    if v is None:
+        return "--"
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return str(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return f"{f:.4g}"
+
+
+def write_summary(
+    path: str,
+    suite_rows: dict[str, list[dict]],
+    failures: list[str],
+    warnings: list[str],
+    *,
+    warn_only: bool = False,
+) -> None:
+    """Append a markdown per-entry report to ``path`` (the CI job points
+    this at ``$GITHUB_STEP_SUMMARY`` so the gate verdict is on the run
+    page, not buried in the log)."""
+    if failures:
+        verdict = "warn-only (would fail)" if warn_only else "FAILED"
+        headline = f"perf gate {verdict}: {len(failures)} regression(s)"
+    else:
+        headline = f"perf gate clean ({len(warnings)} warnings)"
+    lines = ["## Benchmark gate", "", headline, ""]
+    for suite, rows in sorted(suite_rows.items()):
+        lines += [f"### {suite}", ""]
+        lines.append("| entry | value | baseline | delta | verdict |")
+        lines.append("| --- | ---: | ---: | ---: | --- |")
+        for row in rows:
+            delta = "--" if row["delta"] is None else f"{row['delta']:+.1f}%"
+            mark = {"FAIL": ":x: FAIL", "ok": ":white_check_mark: ok"}.get(
+                row["verdict"], row["verdict"]
+            )
+            lines.append(
+                f"| {row['name']} ({row['unit']}) | {_fmt_value(row['fresh'])} "
+                f"| {_fmt_value(row['base'])} | {delta} | {mark} |"
+            )
+        lines.append("")
+    if warnings:
+        lines += ["<details><summary>warnings</summary>", ""]
+        lines += [f"- {w}" for w in warnings]
+        lines += ["", "</details>", ""]
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main(argv=None) -> int:
@@ -177,17 +277,34 @@ def main(argv=None) -> int:
         default=DEFAULT_THRESHOLD,
         help="allowed slowdown ratio before failing (default 1.25 = +25%%)",
     )
+    ap.add_argument(
+        "--summary",
+        default=None,
+        metavar="PATH",
+        help="append a markdown per-entry report (value, delta vs baseline, "
+        "verdict) to PATH -- CI passes $GITHUB_STEP_SUMMARY",
+    )
+    ap.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="report regressions but exit 0 (first landing of full-size "
+        "baselines on the nightly job)",
+    )
     args = ap.parse_args(argv)
-    failures, warnings = check_dirs(
+    failures, warnings, suite_rows = _check_dirs(
         args.baseline_dir, args.fresh_dir, threshold=args.threshold
     )
+    if args.summary:
+        write_summary(
+            args.summary, suite_rows, failures, warnings, warn_only=args.warn_only
+        )
     for w in warnings:
         print(f"WARN  {w}")
     for f in failures:
         print(f"FAIL  {f}")
     if failures:
         print(f"# perf gate: {len(failures)} regression(s) over threshold")
-        return 1
+        return 0 if args.warn_only else 1
     print(f"# perf gate: clean ({len(warnings)} warnings)")
     return 0
 

@@ -25,6 +25,7 @@ from . import (
     actual_usage,
     calc_time,
     capacity,
+    durability,
     head_to_head,
     memory,
     migrate,
@@ -49,6 +50,7 @@ SUITES = {
     "table3_actual_usage": actual_usage,
     "capacity": capacity,
     "roofline": roofline,
+    "durability": durability,
 }
 
 

@@ -18,7 +18,13 @@ from .asura import (
     tail_cumsum_halves,
 )
 from .cluster import Cluster, NodeInfo, make_cluster, make_uniform_cluster
-from .engine import ALGORITHMS, BaselineArtifact, PlacementEngine, TableArtifact
+from .engine import (
+    ALGORITHMS,
+    BaselineArtifact,
+    HierArtifact,
+    PlacementEngine,
+    TableArtifact,
+)
 from .hierarchy import HierarchicalCluster
 from .consistent_hashing import ConsistentHashRing, build_ring, ch_place_np
 from .random_slicing import RandomSlicingTable, rs_place_np
@@ -33,6 +39,7 @@ __all__ = [
     "Cluster",
     "NodeInfo",
     "ConsistentHashRing",
+    "HierArtifact",
     "HierarchicalCluster",
     "PlacementEngine",
     "RandomSlicingTable",

@@ -142,11 +142,50 @@ class BaselineArtifact:
         return 8 * self.n_entries
 
 
+@dataclasses.dataclass(frozen=True)
+class HierArtifact:
+    """Immutable snapshot of one HIERARCHICAL cluster version (section 14).
+
+    The device view of both levels: the domain-level segment table (node
+    ids re-mapped to dense domain SLOTS so the section-5.A tile's
+    distinct-node test is a distinct-domain test), the D per-domain tables
+    stacked into flat ``(D * s_pad,)`` arrays (lengths zero-padded, node
+    map -1-padded, u64-cumsum halves carried at each domain's total), and
+    the per-domain top levels + domain ids as lane-padded vectors.
+    ``tables_dev`` is the 8-tuple in the kernel's operand order.  Node ids
+    are validated globally unique at build time (``node_domain`` is the
+    host-side node -> domain accounting view).
+    """
+
+    version: int
+    n_domains: int
+    top_level: int
+    max_top: int
+    s_pad: int
+    domain_ids: np.ndarray
+    node_domain: dict
+    tables_dev: tuple
+
+    @property
+    def statics(self) -> tuple:
+        return (self.top_level, self.max_top, self.s_pad)
+
+    @property
+    def has_device_tables(self) -> bool:
+        return True
+
+
 class PlacementEngine:
     """Cached STEP-2 dispatcher bound to one mutable ``Cluster``.
 
     The engine is deliberately duck-typed on the cluster: anything exposing
     ``version``, ``params``, ``seg_lengths()`` and ``seg_to_node()`` works.
+    A ``HierarchicalCluster`` (``is_hierarchical``) switches the engine into
+    the domain-aware mode: two-level artifacts behind the same versioned
+    LRU, ``place_replica_nodes[_device]`` emitting (domain, node) sets with
+    pairwise-distinct domains, and ``diff_replicas_*`` diffing both levels
+    (DESIGN.md section 14).  Flat segment-semantics methods raise a
+    directed error in this mode.
     """
 
     def __init__(
@@ -172,6 +211,12 @@ class PlacementEngine:
             raise ValueError("cache_versions must be >= 1")
         self.cluster = cluster
         self.params: AsuraParams = getattr(cluster, "params", DEFAULT_PARAMS)
+        self.hierarchical = bool(getattr(cluster, "is_hierarchical", False))
+        if self.hierarchical and algorithm != "asura":
+            raise ValueError(
+                "hierarchical placement is ASURA-only (two-level segment "
+                f"tables); got algorithm={algorithm!r}"
+            )
         self.algorithm = algorithm
         self._virtual_nodes = int(virtual_nodes)
         self._backend = backend
@@ -394,6 +439,190 @@ class PlacementEngine:
         rebuilds)."""
         self._artifacts.clear()
 
+    # -- hierarchical artifacts (DESIGN.md section 14) ------------------------
+
+    def _require_hier(self, method: str) -> None:
+        if not self.hierarchical:
+            raise ValueError(
+                f"{method} needs a HierarchicalCluster-bound engine; this "
+                "engine's cluster is flat"
+            )
+
+    def _build_hier_artifact(self, version: int) -> HierArtifact:
+        import jax.numpy as jnp
+
+        from repro.kernels.asura_place import LANE
+        from repro.kernels.ops import _lane_pad_np
+
+        from .asura import tail_cumsum_halves
+
+        h = self.cluster
+        top = h._top
+        lengths = np.asarray(top.seg_lengths(), dtype=np.float64)
+        top_len32 = lengths_to_u32(lengths)
+        top_level = self.params.level_for(_upper_bound(lengths))
+        node_domain = h.node_domains()  # validates global node-id uniqueness
+        domain_ids = np.asarray(sorted(int(d) for d in top.nodes), dtype=np.int64)
+        slot_of = {int(d): i for i, d in enumerate(domain_ids)}
+        top_slot = np.asarray(
+            [slot_of[int(d)] if d >= 0 else -1 for d in top.seg_to_node()],
+            dtype=np.int32,
+        )
+        dom_lens, dom_nodes, dom_tops = [], [], []
+        for d in domain_ids:
+            dom = h.domains[int(d)]
+            dl = np.asarray(dom.seg_lengths(), dtype=np.float64)
+            dom_tops.append(self.params.level_for(_upper_bound(dl)))
+            dom_lens.append(lengths_to_u32(dl))
+            dom_nodes.append(np.asarray(dom.seg_to_node(), dtype=np.int32))
+        s_pad = -(-max(len(row) for row in dom_lens) // LANE) * LANE
+        D = len(domain_ids)
+        len_flat = np.zeros(D * s_pad, dtype=np.uint32)
+        node_flat = np.full(D * s_pad, -1, dtype=np.int32)
+        cum_hi = np.zeros(D * s_pad, dtype=np.uint32)
+        cum_lo = np.zeros(D * s_pad, dtype=np.uint32)
+        for i, (row, nodes) in enumerate(zip(dom_lens, dom_nodes)):
+            base = i * s_pad
+            len_flat[base : base + len(row)] = row
+            node_flat[base : base + len(nodes)] = nodes
+            hi, lo = tail_cumsum_halves(
+                np.concatenate([row, np.zeros(s_pad - len(row), dtype=np.uint32)])
+            )
+            cum_hi[base : base + s_pad] = hi
+            cum_lo[base : base + s_pad] = lo
+        tables_dev = (
+            jnp.asarray(_lane_pad_np(top_len32, np.uint32(0))),
+            jnp.asarray(_lane_pad_np(top_slot, np.int32(-1))),
+            jnp.asarray(len_flat),
+            jnp.asarray(node_flat),
+            jnp.asarray(cum_hi),
+            jnp.asarray(cum_lo),
+            jnp.asarray(_lane_pad_np(np.asarray(dom_tops, dtype=np.int32), np.int32(0))),
+            jnp.asarray(_lane_pad_np(domain_ids.astype(np.int32), np.int32(0))),
+        )
+        return HierArtifact(
+            version=version,
+            n_domains=D,
+            top_level=top_level,
+            max_top=int(max(dom_tops)),
+            s_pad=s_pad,
+            domain_ids=domain_ids,
+            node_domain=node_domain,
+            tables_dev=tables_dev,
+        )
+
+    def hier_artifact(self) -> HierArtifact:
+        """The current version's two-level artifact (same versioned LRU,
+        upload ledger and eviction events as the flat artifacts)."""
+        self._require_hier("hier_artifact")
+        version = self.cluster.version
+        cache = self._cache("hier")
+        art = cache.get(version)
+        if art is not None:
+            cache.move_to_end(version)
+            self.ledger.incr("engine.lru_hits")
+            return art
+        with self.ledger.span(
+            "engine.build_artifact", algorithm="hier", version=version
+        ):
+            art = self._build_hier_artifact(version)
+        self._store("hier", art)
+        self.ledger.incr("engine.uploads")
+        self.ledger.event(
+            "engine.upload", "hier", version=version, n_segs=art.n_domains
+        )
+        return art
+
+    def hier_artifact_for(self, version: int) -> HierArtifact:
+        """A SPECIFIC version's two-level artifact (must be in the LRU --
+        the same pin-before-mutating contract as ``artifact_for``)."""
+        self._require_hier("hier_artifact_for")
+        if version == self.cluster.version:
+            return self.hier_artifact()
+        cache = self._cache("hier")
+        art = cache.get(version)
+        if art is None:
+            raise KeyError(
+                f"hier table version {version} not cached (LRU holds "
+                f"{list(cache)}); place at that version before mutating, "
+                "or raise cache_versions"
+            )
+        cache.move_to_end(version)
+        return art
+
+    def _hier_place_kwargs(self, art: HierArtifact, n_replicas: int) -> dict:
+        return dict(
+            top_level=art.top_level,
+            max_top=art.max_top,
+            s_pad=art.s_pad,
+            n_replicas=n_replicas,
+            **self._device_kwargs(),
+        )
+
+    def place_replica_pairs_device(
+        self, datum_ids, n_replicas: int, version: int | None = None
+    ):
+        """Fused two-level replication -> (2, R, batch) int32 DEVICE array
+        (plane 0 domains, plane 1 nodes), zero host syncs; -1 marks
+        level-1 non-convergence (too few distinct domains).  ``version``
+        pins a cached table version (default: current)."""
+        from repro.kernels.ops import hier_place_replicas_on_tables_device
+
+        self._require_hier("place_replica_pairs_device")
+        art = (
+            self.hier_artifact()
+            if version is None
+            else self.hier_artifact_for(version)
+        )
+        return hier_place_replicas_on_tables_device(
+            datum_ids, art.tables_dev, **self._hier_place_kwargs(art, n_replicas)
+        )
+
+    def place_replica_pairs(
+        self, datum_ids, n_replicas: int, version: int | None = None
+    ) -> np.ndarray:
+        """Host-facing fused two-level replication -> (batch, R, 2) int64
+        ``(domain_id, node_id)`` pairs with pairwise-DISTINCT domains,
+        primary first -- bit-identical to the ``HierarchicalCluster``
+        oracle.  Raises if the distinct-domain draw did not converge."""
+        from repro.kernels.ops import hier_place_replicas_on_tables
+
+        self._require_hier("place_replica_pairs")
+        art = (
+            self.hier_artifact()
+            if version is None
+            else self.hier_artifact_for(version)
+        )
+        return hier_place_replicas_on_tables(
+            datum_ids, art.tables_dev, **self._hier_place_kwargs(art, n_replicas)
+        )
+
+    def diff_replica_domains_device(
+        self, datum_ids, v_from: int, v_to: int, n_replicas: int
+    ):
+        """Two-level replica diff with the domain planes attached ->
+        ``(moved, src, dst, src_slot, src_dom, dst_dom)`` device arrays.
+
+        Both LEVELS of both VERSIONS are placed by the fused kernel; the
+        alignment runs on the node plane (node ids are globally unique)
+        and the domains ride along -- the intra-domain movement proofs and
+        the durability simulator's bytes accounting read them directly.
+        """
+        from repro.kernels.ops import hier_diff_replicas_on_tables_device
+
+        self._require_hier("diff_replica_domains_device")
+        art_a = self.hier_artifact_for(v_from)
+        art_b = self.hier_artifact_for(v_to)
+        return hier_diff_replicas_on_tables_device(
+            datum_ids,
+            art_a.tables_dev,
+            art_b.tables_dev,
+            statics_a=art_a.statics,
+            statics_b=art_b.statics,
+            n_replicas=n_replicas,
+            **self._device_kwargs(),
+        )
+
     # -- STEP 2 dispatch -----------------------------------------------------
 
     def _kernel_kwargs(self) -> dict:
@@ -419,6 +648,13 @@ class PlacementEngine:
                 "place_nodes/place_nodes_device (they dispatch per "
                 "algorithm)"
             )
+        if self.hierarchical:
+            raise ValueError(
+                f"{method} is flat-table semantics; this engine is bound to "
+                "a HierarchicalCluster -- use place_nodes / "
+                "place_replica_nodes / place_replica_pairs[_device] / "
+                "diff_replica{s,_domains}_device (the two-level paths)"
+            )
 
     def place(self, datum_ids) -> np.ndarray:
         """Batch placement -> int64 segment numbers (tail-resolved, total)."""
@@ -433,6 +669,8 @@ class PlacementEngine:
     def place_nodes(self, datum_ids, algorithm: str | None = None) -> np.ndarray:
         """Batch placement -> int64 node ids (dispatches on ``algorithm``)."""
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_nodes(datum_ids, 1)[:, 0, 1]
         art = self.artifact(alg)
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         if alg != "asura":
@@ -475,8 +713,16 @@ class PlacementEngine:
     ) -> np.ndarray:
         """(batch, R) node ids, primary first (dispatches on ``algorithm``:
         ASURA's section-5.A distinct-node draw, or the baselines' salted
-        rejection fan-out -- DESIGN.md section 12)."""
+        rejection fan-out -- DESIGN.md section 12).
+
+        HIERARCHICAL engines return (batch, R, 2) ``(domain, node)`` pairs
+        instead (section-5.A applied to the DOMAIN cluster, then the salted
+        per-domain node draw): the replica domains are pairwise distinct,
+        so a whole-domain failure holds at most one replica of any datum.
+        """
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_pairs(datum_ids, n_replicas)
         if alg != "asura":
             from repro.kernels.baselines import baseline_place_replicas_np
 
@@ -538,6 +784,8 @@ class PlacementEngine:
         (dispatches on ``algorithm`` -- the baselines' movement-accounting
         building block: diff owners across two cached versions)."""
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_pairs(datum_ids, 1, version)[:, 0, 1]
         art = self.artifact_for(version, alg)
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         if alg != "asura":
@@ -582,7 +830,10 @@ class PlacementEngine:
     ) -> np.ndarray:
         """(batch, R) node ids under a specific cached version, primary
         first -- the migration window's replica read rule places the v+1
-        sets through this (DESIGN.md section 10)."""
+        sets through this (DESIGN.md section 10).  Hierarchical engines
+        return (batch, R, 2) pairs, as in ``place_replica_nodes``."""
+        if self.hierarchical:
+            return self.place_replica_pairs(datum_ids, n_replicas, version)
         self._require_asura("place_replica_nodes_at")
         art = self.artifact_for(version)
         return art.node_of[self.place_replicas_at(datum_ids, version, n_replicas)]
@@ -617,6 +868,8 @@ class PlacementEngine:
         from repro.kernels.ops import place_nodes_on_table_device
 
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_pairs_device(datum_ids, 1)[1, 0, :]
         art = self._device_artifact(alg)
         if alg != "asura":
             from repro.kernels.baselines import baseline_place_on_table_device
@@ -643,10 +896,14 @@ class PlacementEngine:
     ):
         """(batch, R) int32 node ids on device, primary first, zero host
         syncs (dispatches on ``algorithm``).  Non-converged entries stay -1
-        (checking would force a sync); the host variant raises instead."""
+        (checking would force a sync); the host variant raises instead.
+        Hierarchical engines return the (2, R, batch) pair planes of
+        ``place_replica_pairs_device``."""
         from repro.kernels.ops import place_replicas_on_table_device
 
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_pairs_device(datum_ids, n_replicas)
         if alg != "asura":
             from repro.kernels.baselines import (
                 baseline_place_replicas_on_table_device,
@@ -695,6 +952,8 @@ class PlacementEngine:
         from repro.kernels.ops import place_nodes_on_table_device
 
         alg = self._resolve_algorithm(algorithm)
+        if self.hierarchical:
+            return self.place_replica_pairs_device(datum_ids, 1, version)[1, 0, :]
         art = self._device_artifact_for(version, alg)
         if alg != "asura":
             from repro.kernels.baselines import baseline_place_on_table_device
@@ -723,6 +982,8 @@ class PlacementEngine:
         (zero host syncs; -1 marks non-converged entries)."""
         from repro.kernels.ops import place_replicas_on_table_device
 
+        if self.hierarchical:
+            return self.place_replica_pairs_device(datum_ids, n_replicas, version)
         self._require_asura("place_replica_nodes_device_at")
         art = self._device_artifact_for(version, "asura")
         return place_replicas_on_table_device(
@@ -781,9 +1042,18 @@ class PlacementEngine:
         mass), ``src`` the vacated v-side node for moved slots (the common
         owner otherwise), ``src_slot`` its v-set position (rollback
         re-indexing).  DESIGN.md section 10.
+
+        Hierarchical engines diff the NODE planes of the fused two-level
+        placement under both versions (same 4-tuple contract, node ids are
+        globally unique); ``diff_replica_domains_device`` adds the domain
+        planes.
         """
         from repro.kernels.ops import diff_replicas_on_tables_device
 
+        if self.hierarchical:
+            return self.diff_replica_domains_device(
+                datum_ids, v_from, v_to, n_replicas
+            )[:4]
         self._require_asura("diff_replicas_device")
         art_a = self._device_artifact_for(v_from, "asura")
         art_b = self._device_artifact_for(v_to, "asura")
@@ -814,6 +1084,18 @@ class PlacementEngine:
         from .asura import align_replica_sets
 
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
+        if self.hierarchical:
+            # Two-level diffs always run the fused kernels (jnp reference
+            # twins on the numpy backend) -- one code path, both backends.
+            moved, src, dst, src_slot = self.diff_replicas_device(
+                ids, v_from, v_to, n_replicas
+            )
+            return (
+                np.asarray(moved),
+                np.asarray(src).astype(np.int64),
+                np.asarray(dst).astype(np.int64),
+                np.asarray(src_slot),
+            )
         if self.backend == "numpy":
             before = self.place_replica_nodes_at(ids, v_from, n_replicas)
             after = self.place_replica_nodes_at(ids, v_to, n_replicas)

@@ -33,12 +33,37 @@ from .rng import fmix32_np
 
 
 class HierarchicalCluster:
-    """Two-level ASURA: domains (racks/pods) -> nodes."""
+    """Two-level ASURA: domains (racks/pods) -> nodes.
+
+    Carries a monotonic ``version`` (bumped by every membership mutation)
+    and a lazy ``engine`` exactly like ``Cluster``, so the hierarchical
+    ``PlacementEngine`` mode can key its versioned two-level artifacts off
+    this cluster (DESIGN.md section 14).
+    """
+
+    is_hierarchical = True
 
     def __init__(self, params: AsuraParams = DEFAULT_PARAMS):
         self.params = params
         self.domains: dict[int, Cluster] = {}
         self._top = Cluster(params=params)
+        self._version = 0
+        self._engine = None  # lazy hierarchical PlacementEngine
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def engine(self):
+        """The cluster's hierarchical PlacementEngine (created on first
+        placement) -- the fused two-level kernel path, bit-identical to
+        the host oracle below."""
+        if self._engine is None:
+            from .engine import PlacementEngine  # lazy: avoids import cycle
+
+            self._engine = PlacementEngine(self)
+        return self._engine
 
     # -- membership ----------------------------------------------------------
 
@@ -46,34 +71,64 @@ class HierarchicalCluster:
         if domain_id in self.domains:
             raise ValueError(f"domain {domain_id} exists")
         self.domains[domain_id] = Cluster(params=self.params)
+        self._version += 1
 
     def add_node(self, domain_id: int, node_id: int, capacity: float) -> None:
         if domain_id not in self.domains:
             self.add_domain(domain_id)
         dom = self.domains[domain_id]
-        had = dom.total_capacity()
         dom.add_node(node_id, capacity)
-        self._sync_domain(domain_id, had)
+        self._sync_domain(domain_id)
+        self._version += 1
 
     def remove_node(self, domain_id: int, node_id: int) -> None:
         dom = self.domains[domain_id]
-        had = dom.total_capacity()
         dom.remove_node(node_id)
-        self._sync_domain(domain_id, had)
+        self._sync_domain(domain_id)
+        self._version += 1
 
     def remove_domain(self, domain_id: int) -> None:
         del self.domains[domain_id]
         self._top.remove_node(domain_id)
+        self._version += 1
 
-    def _sync_domain(self, domain_id: int, had: float) -> None:
-        """Keep the top-level capacity equal to the domain's node sum."""
+    def _sync_domain(self, domain_id: int) -> None:
+        """Keep the top-level capacity EXACTLY equal to the domain's node sum.
+
+        Compares against the top cluster's recorded capacity (not a caller
+        snapshot): the historical ``abs(now - had) > 1e-12`` tolerance let
+        repeated sub-epsilon churn accumulate unbounded drift between
+        ``_top`` and the true sum (each step under the tolerance, the total
+        not) -- regression-tested in tests/test_hier_kernel.py.
+        """
         now = self.domains[domain_id].total_capacity()
-        if had == 0 and now > 0:
-            self._top.add_node(domain_id, now)
+        info = self._top.nodes.get(domain_id)
+        if info is None:
+            if now > 0:
+                self._top.add_node(domain_id, now)
         elif now == 0:
             self._top.remove_node(domain_id)
-        elif abs(now - had) > 1e-12:
+        elif now != info.capacity:
             self._top.resize_node(domain_id, now)
+
+    def node_domains(self) -> dict[int, int]:
+        """node_id -> domain_id over every node in the hierarchy.
+
+        The engine's hierarchical mode requires node ids to be GLOBALLY
+        unique across domains (so replica diffs, movers and the serving
+        path keep a flat node-id space); this is the validation view.
+        """
+        out: dict[int, int] = {}
+        for did, dom in self.domains.items():
+            for nid in dom.nodes:
+                if nid in out:
+                    raise ValueError(
+                        f"node id {nid} appears in domains {out[nid]} and "
+                        f"{did}; hierarchical placement requires globally "
+                        "unique node ids"
+                    )
+                out[nid] = did
+        return out
 
     # -- placement -----------------------------------------------------------
 

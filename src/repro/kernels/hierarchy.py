@@ -1,0 +1,437 @@
+"""Fused two-level (failure-domain-aware) ASURA placement kernels.
+
+``core.hierarchy.HierarchicalCluster`` places a datum in two ASURA steps:
+the section-5.A distinct-replica draw over the DOMAIN cluster (racks /
+zones, capacity = the domain's node sum), then a salted per-domain draw
+over that domain's own node cluster.  The host oracle runs the second step
+domain-by-domain; the kernels here run BOTH levels for a whole id batch in
+one zero-host-sync pass, bit-identical to the oracle (tested for R in
+{1, 2, 3}, ref and Pallas).
+
+The device layout (built by the engine, DESIGN.md section 14):
+
+  * the top level is an ordinary segment table whose "node ids" are DENSE
+    DOMAIN SLOTS (0..D-1), so the section-5.A tile body is reused verbatim
+    -- distinct slots are distinct domains,
+  * the D per-domain tables are stacked into flat ``(D * s_pad,)`` arrays
+    (lengths zero-padded, seg->node padded -1, u64-cumsum halves carried
+    at the domain total through the padding), gathered at
+    ``slot * s_pad + k`` -- ragged domains, one VMEM operand each,
+  * per-domain top levels ride as a ``(D,)`` vector: ``next_asura_vartop``
+    is the per-LANE descend ladder -- the scalar level descends in
+    lockstep from ``max_top`` and a lane joins when the level reaches ITS
+    domain's top, which reproduces that lane's solo stream exactly
+    (draws are a function of (id, level, counter[level]) only),
+  * the salted second-level id is ``fmix32(id ^ domain_id * GOLDEN)``,
+    matching ``HierarchicalCluster._salt`` (uint32 wrap-around), and the
+    non-converged tail resolves per lane against the owning domain's
+    cumsum row (``resolve_tail_vartop``).
+
+Outputs are ``(2, R, batch)``: plane 0 the domain ids, plane 1 the node
+ids; -1 marks lanes whose level-1 replica draw did not converge (too few
+distinct domains -- the host wrapper raises, matching the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .asura_place import DEFAULT_ROWS, LANE, _place_replicas_tile
+from .ref import GOLDEN, draw_u32, fmix32, mul32_wide
+
+
+def next_asura_vartop(ids, counters, lane_top, max_top: int, s_log2: int):
+    """One ASURA number per lane with a PER-LANE top level.
+
+    ``counters``: (max_top + 1, ...) uint32, row L = the counter of level
+    L (levels index rows directly -- unlike ``next_asura``'s top-relative
+    rows -- so lanes with different tops share one array).  ``lane_top``:
+    int32 per-lane start level, <= ``max_top`` (static).
+
+    The scalar level descends in lockstep from ``max_top``; a lane
+    consults only once the level has reached its own top and it has not
+    yet emitted.  Per lane this is bit-identical to ``next_asura`` run at
+    that lane's top: each draw is a function of (id, level, counter[level])
+    alone, and the sequence of consulted levels from ``lane_top`` down is
+    unchanged by the extra idle iterations above it.
+    """
+    shape = ids.shape
+
+    def cond(state):
+        level, emitted = state[0], state[1]
+        return (level >= 0) & ~jnp.all(emitted)
+
+    def body(state):
+        level, emitted, out_k, out_f, ctrs = state
+        consult = ~emitted & (level <= lane_top)
+        ctr = jax.lax.dynamic_index_in_dim(ctrs, level, 0, keepdims=False)
+        h = draw_u32(ids, level, ctr)
+        ctrs = jax.lax.dynamic_update_index_in_dim(
+            ctrs, ctr + consult.astype(jnp.uint32), level, 0
+        )
+        descend = consult & (level > 0) & ((h & jnp.uint32(0x80000000)) == 0)
+        emit = consult & ~descend
+        lvl = level.astype(jnp.uint32)
+        k = (h >> (jnp.uint32(32 - s_log2) - lvl)).astype(jnp.int32)
+        f = h << (jnp.uint32(s_log2) + lvl)
+        out_k = jnp.where(emit, k, out_k)
+        out_f = jnp.where(emit, f, out_f)
+        return level - 1, emitted | emit, out_k, out_f, ctrs
+
+    state = (
+        jnp.int32(max_top),
+        jnp.zeros(shape, dtype=bool),
+        jnp.zeros(shape, dtype=jnp.int32),
+        jnp.zeros(shape, dtype=jnp.uint32),
+        counters,
+    )
+    _, _, out_k, out_f, counters = jax.lax.while_loop(cond, body, state)
+    return out_k, out_f, counters
+
+
+def resolve_tail_vartop(ids, segs, cum_hi, cum_lo, lane_top, dom_slot, s_pad: int):
+    """Per-lane section 3.2 tail against STACKED per-domain cumsum rows.
+
+    ``cum_hi`` / ``cum_lo``: flat (D * s_pad,) inclusive u64-cumsum halves,
+    each domain's row padded at its own total mass, so the branchless
+    binary search stays within ``dom_slot``'s row and is bit-identical to
+    ``resolve_tail_np`` on that domain's unpadded table.  The raw draw is
+    at ``lane_top + 1`` (the owning domain's top), counter 0.
+    """
+    shape = ids.shape
+    miss = segs < 0
+    base = dom_slot * s_pad
+
+    def tail(_):
+        h = draw_u32(ids, lane_top + 1, jnp.zeros(shape, dtype=jnp.uint32))
+        last = (base + (s_pad - 1)).reshape(-1)
+        t_hi = jnp.take(cum_hi, last, axis=0).reshape(shape)
+        t_lo = jnp.take(cum_lo, last, axis=0).reshape(shape)
+        p1_hi, p1_lo = mul32_wide(h, t_hi)
+        p2_hi, _ = mul32_wide(h, t_lo)
+        u_lo = p1_lo + p2_hi
+        u_hi = p1_hi + (u_lo < p1_lo).astype(jnp.uint32)
+        # searchsorted(cum, u, side="right") within the domain's row.
+        lo = jnp.zeros(shape, dtype=jnp.int32)
+        hi = jnp.full(shape, s_pad, dtype=jnp.int32)
+        for _step in range(max(1, int(s_pad).bit_length())):
+            active = lo < hi
+            mid = jnp.minimum((lo + hi) >> 1, s_pad - 1)
+            idx = (base + mid).reshape(-1)
+            c_hi = jnp.take(cum_hi, idx, axis=0).reshape(shape)
+            c_lo = jnp.take(cum_lo, idx, axis=0).reshape(shape)
+            le = (c_hi < u_hi) | ((c_hi == u_hi) & (c_lo <= u_lo))  # cum<=u
+            lo = jnp.where(active & le, mid + 1, lo)
+            hi = jnp.where(active & ~le, mid, hi)
+        return lo
+
+    tail_seg = jax.lax.cond(
+        jnp.any(miss), tail, lambda _: jnp.zeros(shape, dtype=jnp.int32), None
+    )
+    return jnp.where(miss, tail_seg, segs)
+
+
+def _place_vartop(
+    ids,
+    len32_flat,
+    cum_hi,
+    cum_lo,
+    lane_top,
+    dom_slot,
+    *,
+    max_top: int,
+    s_log2: int,
+    s_pad: int,
+    max_draws: int,
+):
+    """Total single placement of every lane in ITS OWN domain's table.
+
+    The ``place_ref`` loop with the vartop ladder and stacked-table
+    gathers: padded (zero-length) slots never hit, so the miss set is
+    exactly the oracle's ``k >= n_segs_d | frac >= len32[k]``; the tail
+    then resolves per lane.  Returns per-domain segment indices.
+    """
+    shape = ids.shape
+    base = dom_slot * s_pad
+
+    def cond(state):
+        i, _, _, done = state
+        return (i < max_draws) & ~jnp.all(done)
+
+    def body(state):
+        i, counters, result, done = state
+        k, f, counters = next_asura_vartop(ids, counters, lane_top, max_top, s_log2)
+        k_safe = jnp.minimum(k, s_pad - 1)
+        lens = jnp.take(len32_flat, (base + k_safe).reshape(-1), axis=0).reshape(shape)
+        hit = (~done) & (k < s_pad) & (f < lens)
+        result = jnp.where(hit, k, result)
+        return i + 1, counters, result, done | hit
+
+    counters0 = jnp.zeros((max_top + 1,) + shape, dtype=jnp.uint32)
+    result0 = jnp.full(shape, -1, dtype=jnp.int32)
+    done0 = jnp.zeros(shape, dtype=bool)
+    _, _, result, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), counters0, result0, done0)
+    )
+    return resolve_tail_vartop(ids, result, cum_hi, cum_lo, lane_top, dom_slot, s_pad)
+
+
+def _hier_replicas_tile(
+    ids,
+    top_len32,
+    top_slot_of,
+    dom_len32,
+    dom_node,
+    dom_cum_hi,
+    dom_cum_lo,
+    dom_top,
+    dom_ids,
+    *,
+    top_level: int,
+    max_top: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs_top: int,
+    s_pad: int,
+    n_replicas: int,
+):
+    """Both levels for one tile -> (domains, nodes), each (R, ...) int32.
+
+    Level 1 is the untouched section-5.A replica tile against the domain
+    table (distinct "nodes" = distinct domain slots); level 2 runs one
+    salted vartop placement per replica slot -- fresh counters per slot,
+    exactly one ``place_nodes`` stream per (id, domain) like the oracle.
+    """
+    shape = ids.shape
+    ids = ids.astype(jnp.uint32)
+    _, slots = _place_replicas_tile(
+        ids,
+        top_len32,
+        top_slot_of,
+        top_level=top_level,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs=n_segs_top,
+        n_replicas=n_replicas,
+    )
+    out_dom, out_node = [], []
+    for r in range(n_replicas):
+        slot = slots[r]
+        valid = slot >= 0
+        slot_safe = jnp.maximum(slot, 0)
+        flat = slot_safe.reshape(-1)
+        did = jnp.take(dom_ids, flat, axis=0).reshape(shape)
+        lane_top = jnp.take(dom_top, flat, axis=0).reshape(shape)
+        salted = fmix32(ids ^ (did.astype(jnp.uint32) * jnp.uint32(GOLDEN)))
+        seg = _place_vartop(
+            salted,
+            dom_len32,
+            dom_cum_hi,
+            dom_cum_lo,
+            lane_top,
+            slot_safe,
+            max_top=max_top,
+            s_log2=s_log2,
+            s_pad=s_pad,
+            max_draws=max_draws,
+        )
+        node = jnp.take(
+            dom_node, (slot_safe * s_pad + seg).reshape(-1), axis=0
+        ).reshape(shape)
+        out_dom.append(jnp.where(valid, did, jnp.int32(-1)))
+        out_node.append(jnp.where(valid, node, jnp.int32(-1)))
+    return jnp.stack(out_dom), jnp.stack(out_node)
+
+
+_HIER_STATICS = (
+    "top_level",
+    "max_top",
+    "s_log2",
+    "max_draws",
+    "s_pad",
+    "n_replicas",
+)
+
+
+@functools.partial(jax.jit, static_argnames=_HIER_STATICS)
+def hier_place_replicas_ref(
+    ids,
+    top_len32,
+    top_slot_of,
+    dom_len32,
+    dom_node,
+    dom_cum_hi,
+    dom_cum_lo,
+    dom_top,
+    dom_ids,
+    *,
+    top_level: int,
+    max_top: int,
+    s_log2: int,
+    max_draws: int,
+    s_pad: int,
+    n_replicas: int,
+):
+    """jnp twin of the fused two-level kernel -> (2, R, batch) int32.
+
+    Plane 0 = domain ids, plane 1 = node ids; -1 marks non-converged
+    level-1 lanes (the engine's host wrapper raises on them).
+    """
+    doms, nodes = _hier_replicas_tile(
+        ids.astype(jnp.uint32),
+        top_len32,
+        top_slot_of.astype(jnp.int32),
+        dom_len32,
+        dom_node.astype(jnp.int32),
+        dom_cum_hi,
+        dom_cum_lo,
+        dom_top.astype(jnp.int32),
+        dom_ids.astype(jnp.int32),
+        top_level=top_level,
+        max_top=max_top,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs_top=int(top_len32.shape[0]),
+        s_pad=s_pad,
+        n_replicas=n_replicas,
+    )
+    return jnp.stack([doms, nodes])
+
+
+def _hier_replicas_kernel(
+    ids_ref,
+    top_len_ref,
+    top_slot_ref,
+    dom_len_ref,
+    dom_node_ref,
+    dom_ch_ref,
+    dom_cl_ref,
+    dom_top_ref,
+    dom_ids_ref,
+    out_ref,
+    *,
+    top_level: int,
+    max_top: int,
+    s_log2: int,
+    max_draws: int,
+    n_segs_top: int,
+    s_pad: int,
+    n_replicas: int,
+):
+    doms, nodes = _hier_replicas_tile(
+        ids_ref[...],
+        top_len_ref[...],
+        top_slot_ref[...],
+        dom_len_ref[...],
+        dom_node_ref[...],
+        dom_ch_ref[...],
+        dom_cl_ref[...],
+        dom_top_ref[...],
+        dom_ids_ref[...],
+        top_level=top_level,
+        max_top=max_top,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs_top=n_segs_top,
+        s_pad=s_pad,
+        n_replicas=n_replicas,
+    )
+    out_ref[...] = jnp.stack([doms, nodes])
+
+
+@functools.partial(
+    jax.jit, static_argnames=_HIER_STATICS + ("rows_per_block", "interpret")
+)
+def hier_place_replicas_pallas(
+    ids,
+    top_len32,
+    top_slot_of,
+    dom_len32,
+    dom_node,
+    dom_cum_hi,
+    dom_cum_lo,
+    dom_top,
+    dom_ids,
+    *,
+    top_level: int,
+    max_top: int,
+    s_log2: int,
+    max_draws: int,
+    s_pad: int,
+    n_replicas: int,
+    rows_per_block: int = DEFAULT_ROWS,
+    interpret: bool = True,
+):
+    """Fused two-level replication via pl.pallas_call -> (2, R, total).
+
+    ids must be block-padded; all tables lane-padded (the engine pads).
+    Both levels' tables sit whole in VMEM per grid step -- the top table
+    plus D stacked domain rows are still kilobytes.
+    """
+    n_segs_top = int(top_len32.shape[0])
+    d_flat = int(dom_len32.shape[0])
+    d_pad = int(dom_top.shape[0])
+    total = ids.shape[0]
+    block = rows_per_block * LANE
+    assert total % block == 0, "the engine must pad ids to a block multiple"
+    assert n_segs_top % LANE == 0, "top table must be lane-padded"
+    assert d_flat % LANE == 0 and d_flat % s_pad == 0, "stacked tables must be lane-padded"
+    assert d_pad % LANE == 0, "domain vectors must be lane-padded"
+    ids2 = ids.reshape(total // LANE, LANE)
+    grid = (total // block,)
+    kernel = functools.partial(
+        _hier_replicas_kernel,
+        top_level=top_level,
+        max_top=max_top,
+        s_log2=s_log2,
+        max_draws=max_draws,
+        n_segs_top=n_segs_top,
+        s_pad=s_pad,
+        n_replicas=n_replicas,
+    )
+    whole = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
+            whole(n_segs_top),
+            whole(n_segs_top),
+            whole(d_flat),
+            whole(d_flat),
+            whole(d_flat),
+            whole(d_flat),
+            whole(d_pad),
+            whole(d_pad),
+        ],
+        out_specs=pl.BlockSpec(
+            (2, n_replicas, rows_per_block, LANE), lambda i: (0, 0, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (2, n_replicas, total // LANE, LANE), jnp.int32
+        ),
+        interpret=interpret,
+    )(
+        ids2,
+        top_len32,
+        top_slot_of.astype(jnp.int32),
+        dom_len32,
+        dom_node.astype(jnp.int32),
+        dom_cum_hi,
+        dom_cum_lo,
+        dom_top.astype(jnp.int32),
+        dom_ids.astype(jnp.int32),
+    )
+    return out.reshape(2, n_replicas, total)
+
+
+__all__ = [
+    "next_asura_vartop",
+    "resolve_tail_vartop",
+    "hier_place_replicas_ref",
+    "hier_place_replicas_pallas",
+]

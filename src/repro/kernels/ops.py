@@ -46,6 +46,7 @@ from .asura_place import (
     place_pallas,
     place_replicas_pallas,
 )
+from .hierarchy import hier_place_replicas_pallas, hier_place_replicas_ref
 from .ref import (
     addition_numbers_ref,
     place_ref,
@@ -64,6 +65,9 @@ __all__ = [
     "place_replicas_on_table_device",
     "diff_nodes_on_tables_device",
     "diff_replicas_on_tables_device",
+    "hier_place_replicas_on_tables",
+    "hier_place_replicas_on_tables_device",
+    "hier_diff_replicas_on_tables_device",
     "addition_numbers_on_table_device",
     "asura_place",
     "asura_place_nodes",
@@ -711,6 +715,137 @@ def place_replicas_on_table(
     if (out < 0).any():
         raise RuntimeError("replication did not converge; too few distinct nodes?")
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _hier_head(out: jax.Array, n: int) -> jax.Array:
+    """(2, R, padded) kernel output -> (2, R, n) ON DEVICE."""
+    return out[:, :, :n]
+
+
+def hier_place_replicas_on_tables_device(
+    datum_ids,
+    tables,
+    *,
+    top_level: int,
+    max_top: int,
+    s_pad: int,
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Fused two-level replication -> (2, R, batch) int32 DEVICE array.
+
+    ``tables`` is the 8-tuple of prebuilt device operands (top length +
+    domain-slot tables, stacked per-domain length/node/cumsum tables,
+    per-domain top levels and domain ids -- the hierarchical artifact's
+    device view).  Plane 0 holds domain ids, plane 1 node ids; -1 marks
+    level-1 non-convergence (too few distinct domains).  Zero host syncs.
+    """
+    interpret = _default_interpret(interpret)
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    n = ids.shape[0]
+    if n == 0:
+        return jnp.zeros((2, n_replicas, 0), dtype=jnp.int32)
+    kw = dict(
+        top_level=top_level,
+        max_top=max_top,
+        s_log2=params.s_log2,
+        max_draws=params.max_draws,
+        s_pad=s_pad,
+        n_replicas=n_replicas,
+    )
+    if use_pallas:
+        block = rows_per_block * LANE
+        padded = _pad_ids(ids, block)
+        out = hier_place_replicas_pallas(
+            padded, *tables, rows_per_block=rows_per_block, interpret=interpret, **kw
+        )
+        return _hier_head(out, n)
+    return hier_place_replicas_ref(ids, *tables, **kw)
+
+
+def hier_place_replicas_on_tables(datum_ids, tables, **kwargs) -> np.ndarray:
+    """Host wrapper -> (batch, R, 2) int64 [domain, node] pairs.
+
+    Raises on level-1 non-convergence, matching the oracle's
+    ``place_replicas_u32`` behaviour (more replicas than distinct domains).
+    """
+    out = np.asarray(hier_place_replicas_on_tables_device(datum_ids, tables, **kwargs))
+    if (out[0] < 0).any():
+        raise RuntimeError(
+            "hierarchical replication did not converge; too few distinct domains?"
+        )
+    return out.transpose(2, 1, 0).astype(np.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("n_replicas",))
+def _hier_align(before: jax.Array, after: jax.Array, *, n_replicas: int):
+    """Align two (2, R, batch) two-level placements on their NODE plane.
+
+    Node ids are globally unique across domains (the hierarchical engine
+    validates this), so the flat rank-matched alignment applies unchanged;
+    the domain planes ride along: ``src_dom[b, r]`` is the vacated node's
+    domain under v (gathered at ``src_slot``), ``dst_dom`` the v+1 set's
+    domains.  Returns ``(moved, src, dst, src_slot, src_dom, dst_dom)``.
+    """
+    b_dom, b_node = before[0].T, before[1].T
+    a_dom, a_node = after[0].T, after[1].T
+    moved, src, dst, src_slot = _align_replica_sets(
+        b_node, a_node, n_replicas=n_replicas
+    )
+    src_dom = jnp.take_along_axis(b_dom.astype(jnp.int32), src_slot, axis=1)
+    dst_dom = a_dom.astype(jnp.int32)
+    src_dom = jnp.where(moved, src_dom, dst_dom)
+    return moved, src, dst, src_slot, src_dom, dst_dom
+
+
+def hier_diff_replicas_on_tables_device(
+    datum_ids,
+    tables_a,
+    tables_b,
+    *,
+    statics_a: tuple,
+    statics_b: tuple,
+    n_replicas: int,
+    params: AsuraParams = DEFAULT_PARAMS,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    rows_per_block: int = DEFAULT_ROWS,
+):
+    """Two-level replica-set version diff, both levels under both versions.
+
+    ``statics_*`` are ``(top_level, max_top, s_pad)`` per version (the two
+    artifacts' static shape keys).  Places every id's full (domain, node)
+    R-set under v and v+1 with the fused two-level pass each, then aligns
+    on the node plane -- ``(moved, src, dst, src_slot, src_dom, dst_dom)``,
+    all (batch, R) device arrays, zero host syncs.
+    """
+    ids = jnp.asarray(datum_ids).astype(jnp.uint32)
+    if ids.shape[0] == 0:
+        empty = jnp.zeros((0, n_replicas), dtype=jnp.int32)
+        return (
+            jnp.zeros((0, n_replicas), dtype=bool),
+            empty, empty, empty, empty, empty,
+        )
+    kw = dict(
+        n_replicas=n_replicas,
+        params=params,
+        use_pallas=use_pallas,
+        interpret=interpret,
+        rows_per_block=rows_per_block,
+    )
+    top_a, max_a, pad_a = statics_a
+    top_b, max_b, pad_b = statics_b
+    before = hier_place_replicas_on_tables_device(
+        ids, tables_a, top_level=top_a, max_top=max_a, s_pad=pad_a, **kw
+    )
+    after = hier_place_replicas_on_tables_device(
+        ids, tables_b, top_level=top_b, max_top=max_b, s_pad=pad_b, **kw
+    )
+    return _hier_align(before, after, n_replicas=n_replicas)
 
 
 def asura_place(

@@ -567,6 +567,43 @@ def selftest(n_devices: int | None = None, n_ids: int = 100_003) -> int:
             assert np.array_equal(snap_a[name], snap_b[name]), (
                 f"R={R}: sharded metric {name!r} differs"
             )
+
+    # two-level (domain, node) placement smoke: the fused hierarchy kernel
+    # (through the engine, on the forced host devices) must equal the
+    # HierarchicalCluster NumPy oracle bit for bit, and the mesh-sharded
+    # serving stream on a hierarchical engine must match the single-device
+    # stream (DESIGN.md section 14)
+    from repro.core import HierarchicalCluster
+
+    hcluster = HierarchicalCluster()
+    for d in range(4):
+        for i in range(4):
+            hcluster.add_node(d, 100 + d * 4 + i, 1.0 + 0.25 * i)
+    heng = PlacementEngine(hcluster, backend="ref")
+    hids = ids[: min(n_ids, 20_011)]
+    for R in (1, 3):
+        got = heng.place_replica_pairs(hids, R)
+        want = hcluster.place_replicas(hids, R)
+        assert np.array_equal(got, want), (
+            f"R={R}: two-level kernel differs from the oracle"
+        )
+    assert np.array_equal(heng.place_nodes(hids), want[:, 0, 1]), (
+        "two-level place_nodes differs from the oracle primary"
+    )
+    for R in (1, 3):
+        kw = dict(
+            batch=batch, n_keys=4096, law="zipf",
+            n_replicas=R, policy="pow2", seed=7,
+        )
+        solo = RequestStreamDriver(heng, **kw)
+        shard = RequestStreamDriver(heng, mesh=mesh, **kw)
+        for _step in range(3):
+            assert np.array_equal(
+                np.asarray(solo.step()), np.asarray(shard.step())
+            ), f"hier R={R} step {_step}: sharded chosen nodes differ"
+            assert np.array_equal(
+                solo.load_counts(), shard.load_counts()
+            ), f"hier R={R} step {_step}: sharded load counters differ"
     return sweep.n_devices
 
 

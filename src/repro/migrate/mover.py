@@ -305,6 +305,16 @@ class ThrottledMover(DrainDriver):
     def done(self) -> bool:
         return self.state.done
 
+    @property
+    def next_round_at(self) -> float | None:
+        """Clock time the next paced round becomes due (None: no clock or
+        already drained).  Event-driven callers (the durability simulator)
+        use this to jump virtual time straight to the next thing that can
+        happen instead of polling round by round."""
+        if self.clock is None or self.done:
+            return None
+        return self._t0 + (self._pumped + 1) * self.round_seconds
+
     def _pending_desc(self) -> str:
         return f"{self.state.n_pending} rows pending"
 

@@ -409,7 +409,16 @@ class MigrationPlanner:
         t0 = time.perf_counter()
         ids = np.atleast_1d(np.asarray(datum_ids, dtype=np.uint32))
         sweep = self._sweep(mesh)
-        host = self.engine.backend == "numpy" and sweep is None
+        hier = bool(getattr(self.engine, "hierarchical", False))
+        if hier and max_new_seg is not None:
+            raise ValueError(
+                "the ADDITION-NUMBER prefilter is flat-table semantics; "
+                "hierarchical plans scan the full id set (max_new_seg=None)"
+            )
+        # Hierarchical engines always diff through the fused two-level
+        # kernel path (node-plane alignment, domains validated globally
+        # unique) -- the host replica sweep returns (batch, R, 2) pairs.
+        host = self.engine.backend == "numpy" and sweep is None and not hier
         if known_before is not None:
             known_before = np.asarray(known_before, dtype=np.int64)
         out: dict[str, list[np.ndarray]] = {

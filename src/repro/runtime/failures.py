@@ -55,6 +55,11 @@ class FailureDetector:
             self.on_failure(node)
         return newly_dead
 
+    def clear(self, node_id: int) -> None:
+        """Forget a handled node (it recovered / was repaired in place), so
+        a LATER failure of the same node is detected and handled again."""
+        self.handled.discard(node_id)
+
 
 class MigrationDriver(DrainDriver):
     """Failure -> throttled repair migration (no instantaneous swap).
@@ -92,6 +97,12 @@ class MigrationDriver(DrainDriver):
     def poll(self) -> list[int]:
         """Detect new deaths; queue one repair migration per victim."""
         return self._detector.poll()
+
+    def notify_recovered(self, node_id: int) -> None:
+        """A repaired-in-place node is healthy again: re-arm detection so
+        its NEXT failure queues a fresh repair (long-lived simulations and
+        real clusters both re-fail nodes)."""
+        self._detector.clear(node_id)
 
     @property
     def done(self) -> bool:

@@ -64,9 +64,27 @@ class ReplicaRouter:
     ):
         from repro.obs import TraceLedger
 
-        self.cluster = Cluster()
-        for rid, cap in replica_capacities.items():
-            self.cluster.add_node(rid, cap)
+        self.hierarchical = any(
+            isinstance(v, dict) for v in replica_capacities.values()
+        )
+        if self.hierarchical:
+            # {domain: {replica: capacity}} -> failure-domain-aware routing
+            # (two-level ASURA; replica sets span R distinct domains).
+            if algorithm != "asura":
+                raise ValueError(
+                    "hierarchical routing is ASURA-only (two-level segment "
+                    f"tables); got algorithm={algorithm!r}"
+                )
+            from repro.core.hierarchy import HierarchicalCluster
+
+            self.cluster = HierarchicalCluster()
+            for did, members in replica_capacities.items():
+                for rid, cap in members.items():
+                    self.cluster.add_node(did, rid, cap)
+        else:
+            self.cluster = Cluster()
+            for rid, cap in replica_capacities.items():
+                self.cluster.add_node(rid, cap)
         self.algorithm = algorithm
         if algorithm == "asura":
             self.engine = self.cluster.engine
@@ -104,8 +122,25 @@ class ReplicaRouter:
     def route_replicas(self, session_ids, n_replicas: int) -> np.ndarray:
         """(sessions, R) replica ids on distinct replicas, primary first --
         for read fan-out / warm-standby session caches (section 5.A; the
-        baselines fan out via the salted rejection re-probe)."""
-        return self.engine.place_replica_nodes(
+        baselines fan out via the salted rejection re-probe).  Hierarchical
+        routers return the replica ids of pairwise-DISTINCT domains (use
+        ``route_replica_pairs`` for the (domain, replica) view)."""
+        out = self.engine.place_replica_nodes(
+            np.asarray(session_ids, dtype=np.uint32), n_replicas
+        )
+        return out[:, :, 1] if self.hierarchical else out
+
+    def route_replica_pairs(self, session_ids, n_replicas: int) -> np.ndarray:
+        """(sessions, R, 2) ``(domain, replica)`` pairs, hierarchical
+        routers only: every session's R cache holders live in R distinct
+        failure domains, so a whole-domain outage re-prefills at most one
+        warm copy per session."""
+        if not self.hierarchical:
+            raise ValueError(
+                "route_replica_pairs needs a hierarchical router (pass "
+                "{domain: {replica: capacity}} capacities)"
+            )
+        return self.engine.place_replica_pairs(
             np.asarray(session_ids, dtype=np.uint32), n_replicas
         )
 
@@ -165,14 +200,19 @@ class ReplicaRouter:
         return ids[self.route(ids) == replica_id]
 
     def plan_scale_event(self, session_ids, *, add=None, remove=None) -> ScalePlan:
-        """Apply a membership change; return the minimal session moves."""
+        """Apply a membership change; return the minimal session moves.
+
+        Hierarchical routers take ``add=(domain, replica, capacity)`` /
+        ``remove=(domain, replica)``; flat routers the 2-/1-tuple forms."""
         ids = np.asarray(session_ids, dtype=np.uint32)
         before = self.route(ids)
         if remove is not None:
-            self.cluster.remove_node(remove)
+            if self.hierarchical:
+                self.cluster.remove_node(*remove)
+            else:
+                self.cluster.remove_node(remove)
         if add is not None:
-            rid, cap = add
-            self.cluster.add_node(rid, cap)
+            self.cluster.add_node(*add)
         after = self.route(ids)
         moved = np.nonzero(before != after)[0]
         return ScalePlan(
@@ -214,6 +254,13 @@ class ReplicaRouter:
                 "live scale migrations ride on ASURA's dual-version table "
                 f"artifacts; this router routes via {self.algorithm!r} -- "
                 "use plan_scale_event for the instantaneous-swap plan"
+            )
+        if self.hierarchical:
+            raise NotImplementedError(
+                "live scale-migration windows are flat-router only for "
+                "now; hierarchical routers plan instantaneous swaps via "
+                "plan_scale_event (the engine's diff_replica_domains_device "
+                "gives the per-slot moves for external drivers)"
             )
         live = self._scale_migration
         if live is not None and not (live.done or live.aborted):

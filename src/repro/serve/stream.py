@@ -62,7 +62,14 @@ def route_statics(engine, algorithm: str | None = None):
     hashable key that fully determines the body (the compile-cache key the
     driver, router probe and mesh serving path all share)."""
     alg = engine._resolve_algorithm(algorithm)
-    if alg == "asura":
+    if getattr(engine, "hierarchical", False):
+        art = engine.hier_artifact()
+        tables = art.tables_dev
+        statics = (
+            "hier", art.top_level, art.max_top, art.s_pad,
+            engine.params.s_log2, engine.params.max_draws,
+        )
+    elif alg == "asura":
         art = engine._device_artifact("asura")
         tables = (art.len32_dev, art.node_of_dev)
         statics = ("asura", art.top_level, engine.params.s_log2, engine.params.max_draws)
@@ -81,8 +88,32 @@ def replica_owners_body(statics: tuple, n_replicas: int, emit_stats: bool = Fals
     ``emit_stats=True`` returns ``(owners, stats)`` instead, where
     ``stats`` is the algorithm's uint32 device-plane vector (ASURA:
     ``[ladder_depth_hist..., nonconverged]`` of length ``DEPTH_BINS + 1``;
-    baselines: ``[reprobes]``) -- owners are bit-identical either way."""
+    baselines: ``[reprobes]``) -- owners are bit-identical either way.
+
+    ``hier`` statics route the fused two-level kernel and emit the NODE
+    plane (the request stream balances over node holders; the domains are
+    a placement property, not a routing one).  Stats plumbing is flat-path
+    only for now."""
     alg = statics[0]
+    if alg == "hier":
+        if emit_stats:
+            raise NotImplementedError(
+                "hierarchical serving has no stats plane yet; route with "
+                "emit_stats=False"
+            )
+        from repro.kernels.hierarchy import hier_place_replicas_ref
+
+        _, top_level, max_top, s_pad, s_log2, max_draws = statics
+
+        def owners(ids, *tables):
+            out = hier_place_replicas_ref(
+                ids, *tables,
+                top_level=top_level, max_top=max_top, s_log2=s_log2,
+                max_draws=max_draws, s_pad=s_pad, n_replicas=n_replicas,
+            )
+            return out[1].T  # (batch, R) node plane
+
+        return owners
     if alg == "asura":
         from repro.kernels.ops import _place_replicas_fused_ref
 
@@ -210,6 +241,10 @@ class RequestStreamDriver:
                     f"({self._sweep.n_devices} devices)"
                 )
         nodes = getattr(engine.cluster, "nodes", None)
+        if nodes is None and getattr(engine, "hierarchical", False):
+            # two-level cluster: the artifact's node -> domain map is the
+            # flat node-id space the load/queue planes index
+            nodes = engine.hier_artifact().node_domain
         if n_bins is not None:
             self.n_bins = int(n_bins)
         elif nodes:
@@ -370,7 +405,9 @@ class RequestStreamDriver:
 
         from repro.launch.placement_mesh import DATA_AXIS
 
-        n_tables = 2 + len(self._fixed_operands())
+        # flat routing carries 2 table operands; the two-level path carries
+        # the 8-array stacked hierarchy artifact (kernels/hierarchy.py)
+        n_tables = (8 if statics[0] == "hier" else 2) + len(self._fixed_operands())
         n_in = (6 if instrumented else 5) + n_tables
         n_rep_out = 4 if instrumented else 3
         return jax.jit(

@@ -1,0 +1,230 @@
+"""Fused two-level (domain, node) placement kernel tests (DESIGN.md
+section 14):
+
+  * bit identity against the ``HierarchicalCluster`` NumPy oracle for
+    R in {1, 2, 3}, ref and pallas backends;
+  * a transfer-guard + np.asarray-tripwire proof that the two-level diff
+    path runs with ZERO host syncs and exactly one artifact upload per
+    version;
+  * the exact ``_sync_domain`` resync regression (sub-epsilon churn must
+    not drift the top-level capacity off the true domain sum);
+  * a churn property test (hypothesis): replica domains stay pairwise
+    distinct, a node add moves data only INTO the grown domain (and its
+    intra-domain moves land exactly on the new node), a node remove
+    sources every move from the shrunk domain, and a domain remove moves
+    exactly the rows the domain held.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import PlacementEngine
+from repro.core.hierarchy import HierarchicalCluster
+
+
+def _mk(domains=4, nodes_per=3, cap=lambda d, i: 1.0):
+    h = HierarchicalCluster()
+    for d in range(domains):
+        for i in range(nodes_per):
+            h.add_node(d, 100 + d * nodes_per + i, cap(d, i))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Bit identity vs the NumPy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("R", [1, 2, 3])
+def test_fused_two_level_matches_oracle(backend, R):
+    h = _mk(domains=5, nodes_per=4, cap=lambda d, i: 1.0 + 0.25 * i + 0.5 * (d % 2))
+    eng = PlacementEngine(h, backend=backend)
+    ids = np.arange(20_011, dtype=np.uint32)
+    got = eng.place_replica_pairs(ids, R)
+    want = h.place_replicas(ids, R)
+    assert np.array_equal(got, want), f"{backend} R={R}: kernel != oracle"
+    # primary-owner view agrees with the pair view
+    assert np.array_equal(eng.place_nodes(ids), want[:, 0, 1])
+
+
+def test_two_level_identity_survives_churn():
+    h = _mk(domains=5, nodes_per=3)
+    eng = PlacementEngine(h, backend="ref")
+    ids = np.arange(5_003, dtype=np.uint32)
+    h.add_node(1, 900, 1.7)
+    assert np.array_equal(eng.place_replica_pairs(ids, 3), h.place_replicas(ids, 3))
+    h.remove_node(1, 900)
+    assert np.array_equal(eng.place_replica_pairs(ids, 3), h.place_replicas(ids, 3))
+    h.remove_domain(4)
+    assert np.array_equal(eng.place_replica_pairs(ids, 3), h.place_replicas(ids, 3))
+
+
+def test_flat_only_methods_reject_hierarchical():
+    h = _mk()
+    eng = PlacementEngine(h, backend="ref")
+    with pytest.raises(ValueError, match="HierarchicalCluster"):
+        eng.place(np.arange(8, dtype=np.uint32))
+    with pytest.raises(ValueError, match="ASURA-only"):
+        PlacementEngine(h, backend="ref", algorithm="ch")
+
+
+# ---------------------------------------------------------------------------
+# Zero host syncs on the two-level diff path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_hier_diff_zero_host_transfers(backend, monkeypatch):
+    h = _mk(domains=5, nodes_per=4)
+    eng = PlacementEngine(h, backend=backend)
+    eng.hier_artifact()
+    v0 = h.version
+    h.add_node(2, 900, 1.0)
+    v1 = h.version
+    ids = jnp.arange(4096, dtype=jnp.uint32)
+    # warm-up: device tables for both versions + jit compile
+    for arr in eng.diff_replica_domains_device(ids, v0, v1, 3):
+        arr.block_until_ready()
+    uploads = eng.uploads
+
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        out = eng.diff_replica_domains_device(ids, v0, v1, 3)
+        for arr in out:
+            arr.block_until_ready()
+        pairs = eng.place_replica_pairs_device(ids, 3)
+        pairs.block_until_ready()
+    monkeypatch.undo()
+    assert all(isinstance(arr, jax.Array) for arr in out)
+    assert isinstance(pairs, jax.Array)
+    assert not host_reads, f"two-level diff touched the host: {len(host_reads)}"
+    assert eng.uploads == uploads == 2  # one hier artifact per version, ever
+
+
+# ---------------------------------------------------------------------------
+# Exact _sync_domain resync (the float-drift regression)
+# ---------------------------------------------------------------------------
+
+
+def test_sync_domain_exact_after_sub_epsilon_churn():
+    """Hundreds of sub-epsilon add/remove cycles must leave the top-level
+    domain capacity EXACTLY equal to the member sum -- the old
+    tolerance-based resync skipped every step and drifted unbounded."""
+    h = _mk(domains=4, nodes_per=2)
+    nid = 10_000
+    for _ in range(300):
+        h.add_node(0, nid, 1e-13)
+        h.remove_node(0, nid)
+        nid += 1
+        assert h._top.nodes[0].capacity == h.domains[0].total_capacity()
+    # and with a surviving tiny node the sum still matches bit for bit
+    h.add_node(0, nid, 1e-13)
+    assert h._top.nodes[0].capacity == h.domains[0].total_capacity()
+    # placement over the churned cluster still matches the fused kernel
+    eng = PlacementEngine(h, backend="ref")
+    ids = np.arange(2_003, dtype=np.uint32)
+    assert np.array_equal(eng.place_replica_pairs(ids, 3), h.place_replicas(ids, 3))
+
+
+# ---------------------------------------------------------------------------
+# Two-level churn properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_two_level_churn_properties():
+    """Property test over add-node / remove-node / remove-domain churn:
+    replica domains stay pairwise distinct, the fused diff equals the
+    brute-force set diff, and movement is failure-domain-local -- a node
+    add pulls data only INTO the grown domain (its intra-domain moves
+    land exactly on the new node), a node remove sources every move from
+    the shrunk domain, and a domain remove moves per row exactly the
+    copies the domain held."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(
+        st.tuples(
+            st.sampled_from(["add", "remove_node", "remove_domain"]),
+            st.floats(0.5, 2.0),
+        ),
+        min_size=1,
+        max_size=3,
+    )
+
+    @settings(max_examples=15, deadline=None)
+    @given(ops=ops, seed=st.integers(0, 2**16))
+    def run(ops, seed):
+        rng = np.random.default_rng(seed)
+        h = _mk(domains=5, nodes_per=3)
+        eng = PlacementEngine(h, backend="ref")
+        ids = rng.integers(0, 2**32, 300, dtype=np.uint32)
+        R = 3
+        next_node = 10_000
+        for op, cap in ops:
+            before = eng.place_replica_pairs(ids, R)
+            v_from = h.version
+            domains = sorted(h.domains)
+            if op == "remove_domain" and len(domains) > R + 1:
+                d = domains[int(cap * 7) % len(domains)]
+                h.remove_domain(d)
+                kind = "remove_domain"
+            elif op == "remove_node" and any(
+                len(h.domains[x].nodes) > 1 for x in domains
+            ):
+                d = next(
+                    x
+                    for x in domains[int(cap * 5) % len(domains):] + domains
+                    if len(h.domains[x].nodes) > 1
+                )
+                victim = sorted(h.domains[d].nodes)[0]
+                h.remove_node(d, victim)
+                kind = "remove_node"
+            else:
+                d = domains[int(cap * 7) % len(domains)]
+                h.add_node(d, next_node, float(cap))
+                kind = "add"
+            after = eng.place_replica_pairs(ids, R)
+            # R pairwise-distinct DOMAINS under every membership state
+            for row in after:
+                assert len(set(row[:, 0].tolist())) == R
+            moved, src, dst, src_slot, src_dom, dst_dom = (
+                np.asarray(x)
+                for x in eng.diff_replica_domains_device(
+                    jnp.asarray(ids, dtype=jnp.uint32), v_from, h.version, R
+                )
+            )
+            # the fused diff is the minimal node-set diff
+            b_node, a_node = before[:, :, 1], after[:, :, 1]
+            minimal = ~(a_node[:, :, None] == b_node[:, None, :]).any(axis=2)
+            assert int(moved.sum()) == int(minimal.sum())
+            # moved slots' (domain, node) labels match the placements
+            assert np.array_equal(dst_dom[moved], after[:, :, 0][moved])
+            assert np.array_equal(dst[moved], a_node[moved])
+            if kind == "add":
+                # all movement lands in the grown domain; intra-domain
+                # moves land exactly on the new node
+                assert np.all(dst_dom[moved] == d)
+                intra = moved & (src_dom == d)
+                assert np.all(dst[intra] == next_node)
+                next_node += 1
+            elif kind == "remove_node":
+                # every move vacates the shrunk domain
+                assert np.all(src_dom[moved] == d)
+            else:  # remove_domain
+                assert np.all(src_dom[moved] == d)
+                # per row, exactly the copies the domain held moved
+                held = (before[:, :, 0] == d).sum(axis=1)
+                assert np.array_equal(moved.sum(axis=1), held)
+
+    run()
