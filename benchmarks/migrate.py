@@ -126,6 +126,32 @@ def run(csv_print, quick: bool = False) -> None:
     if not mig2.done:
         mig2.run()
 
+    # Device-resident round blocks (DESIGN.md section 15): the throttled
+    # drain admitted k rounds per dispatch by the jitted scan over the
+    # padded plan view -- zero per-row host sync, bit-identical matrices
+    # (tested).  Reported as round/row rates, not a host-vs-device ratio:
+    # on a host-only install both paths are CPU-bound and the block's win
+    # is structural (one dispatch per k rounds instead of a host loop).
+    blk_budget = 20 if quick else 300
+    blk_k = 8
+    warm = coord.add_node_live(n_nodes + 1, 1.0, egress=blk_budget)
+    warm.round_block(blk_k)  # compile outside the clock (shape-shared jit)
+    coord.rollback_live(warm).run()
+    mig3 = coord.add_node_live(n_nodes + 1, 1.0, egress=blk_budget)
+    blk_moves = mig3.state.plan.n_moves
+    t0 = time.perf_counter()
+    while not mig3.done:
+        mig3.round_block(blk_k)
+    dt = time.perf_counter() - t0
+    csv_print(
+        "migrate_mover_block_rows_per_s", int(blk_moves / dt), f"k{blk_k}_blocks"
+    )
+    csv_print(
+        "migrate_mover_block_rounds_per_s",
+        int(mig3.mover.rounds_done / dt),
+        f"egress {blk_budget}/round",
+    )
+
     _replica_entries(csv_print, quick)
 
     # DESIGN.md section 11: R=3 replica-planner scaling over forced host

@@ -17,7 +17,16 @@ Zipf(1.1)) through all four algorithms at R=3 and reports
     asserted HERE (absolute, ~900x measured) rather than gated against a
     baseline snapshot: the numerator is compute-bound and the denominator
     dispatch-bound, so the ratio does not cancel machine speed and swings
-    too much run-to-run for a 1.25x relative gate.
+    too much run-to-run for a 1.25x relative gate,
+  * ``serve_superstep_ids_per_s`` / ``serve_superstep_vs_step_x_speedup``
+    -- the scan-fused superstep (DESIGN.md section 15) at the
+    SMALL-BATCH freshness config (batch 32, k 32): counters feed back
+    into pow2 selection every 32 requests, yet the superstep routes all
+    K sub-batches jointly, so it holds near bulk-batch throughput where
+    the per-batch ``step()`` loop is dispatch-bound.  A >= 3x absolute
+    floor is asserted here (same reasoning as the per-call ratio: the
+    denominator is dispatch-bound, so the ratio swings too much for the
+    relative gate, but 3x holds on any machine).
 
 A ``serve_calibration`` entry (the shared fmix32 yardstick) lets the CI
 gate normalize the timed entries by machine speed.  ``--quick`` shrinks
@@ -140,6 +149,43 @@ def run(csv_print, quick: bool = False) -> None:
         )
         if alg == "asura":
             batched_us_per_id = 1e6 * dt / (steps * batch)
+
+    # scan-fused superstep at the small-batch freshness config: pow2
+    # selection sees counters fresh every 32 requests in BOTH loops; the
+    # superstep amortizes the host dispatch AND routes all K sub-batches
+    # through one ladder while_loop (bit-identical -- tested), so only
+    # the per-batch loop pays the dispatch-bound small-batch tax
+    ss_batch, ss_k, ss_blocks = 32, 32, 4
+    d = _drive(
+        engines["asura"], batch=ss_batch, n_keys=n_keys,
+        law="zipf", policy="pow2", steps=2,
+    )
+    d.superstep(ss_k)  # warm the scanned jit
+    best_step = float("inf")
+    best_super = float("inf")
+    for _ in range(3):
+        d.reset()
+        t0 = time.perf_counter()
+        for _ in range(ss_blocks * ss_k):
+            chosen = d.step()
+        chosen.block_until_ready()
+        best_step = min(best_step, time.perf_counter() - t0)
+        d.reset()
+        t0 = time.perf_counter()
+        for _ in range(ss_blocks):
+            chosen = d.superstep(ss_k)
+        chosen.block_until_ready()
+        best_super = min(best_super, time.perf_counter() - t0)
+    ss_ids = ss_blocks * ss_k * ss_batch
+    csv_print(
+        "serve_superstep_ids_per_s", int(ss_ids / best_super), "ids_per_s"
+    )
+    speedup = round(best_step / best_super, 2)
+    if speedup < 3.0:
+        raise RuntimeError(
+            f"superstep only {speedup}x the per-batch step loop (floor 3x)"
+        )
+    csv_print("serve_superstep_vs_step_x_speedup", speedup, "x_speedup")
 
     # batched pipeline vs the per-call route_replicas loop (per-id).  The
     # floor is absolute: both sides run in this process seconds apart, so

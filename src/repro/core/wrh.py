@@ -17,9 +17,10 @@ re-formulation the ``PlacementEngine`` baseline backend uses:
     algorithm in Q16 fixed point -- pure u32 shifts/multiplies (via the same
     16-bit-limb trick the tail resolver uses), bit-identical on NumPy, jnp
     and inside Pallas kernels,
-  * the only float op is ONE IEEE float32 division by the weight (correctly
-    rounded everywhere, immune to FMA re-association because it is a single
-    op),
+  * the only float ops are ONE IEEE float32 reciprocal per NODE (computed
+    at table-prep time, shared by every id) and ONE float32 multiply per
+    (id, node) pair -- each a single correctly-rounded op, immune to FMA
+    re-association, so host and device agree bit-for-bit,
   * argmin ties break to the lowest node index on every path.
 
 The mantissa keeps 23 bits of the raw draw (u = (2*(h >> 9) + 1) * 2**-24,
@@ -106,5 +107,11 @@ def wrh_place_np(
     if ids.shape[0] == 0:
         return np.zeros(0, dtype=np.int64)
     h = wrh_hash_np(ids, nodes)
-    key = neg_log2_q16_np(h).astype(np.float32) / w[None, :]  # one IEEE f32 div
+    # One f32 reciprocal per NODE, one f32 multiply per (id, node) -- the
+    # same precomputed-reciprocal key the device tables bake in
+    # (``kernels.baselines.wrh_table_prep``), so the two paths stay
+    # bit-identical; both are single correctly-rounded IEEE ops.
+    with np.errstate(divide="ignore"):
+        inv_w = np.where(w > 0.0, np.float32(1.0) / w, np.float32(0.0))
+    key = neg_log2_q16_np(h).astype(np.float32) * inv_w[None, :].astype(np.float32)
     return nodes[np.argmin(key, axis=1)].astype(np.int64)  # first-min tie-break

@@ -9,10 +9,11 @@ same ``PlacementEngine`` artifact interface:
   * ``ch``  -- virtual-node ring lookup: ``fmix32(id)`` then a branchless
     binary search (side='left') over the sorted u32 ring, wrap to the first
     point; O(log NV) per id, the ring broadcast whole into VMEM,
-  * ``wrh`` -- weighted rendezvous: per-node keyed hash, fixed-point Q16
-    ``-log2(u)`` (pure u32 square-and-shift, see ``repro.core.wrh``), one
-    IEEE f32 division by the capacity weight, running argmin over the node
-    table; O(N) per id -- the unscalability the paper's Fig. 5 shows,
+  * ``wrh`` -- weighted rendezvous: per-node keyed hash (salt precomputed
+    at table prep), fixed-point Q16 ``-log2(u)`` (pure u32 square-and-
+    shift, see ``repro.core.wrh``), one IEEE f32 multiply by the
+    precomputed capacity reciprocal, running argmin over the node table;
+    O(N) per id -- the unscalability the paper's Fig. 5 shows,
   * ``rs``  -- random slicing: ``fmix32(id)`` then a branchless binary
     search (side='right' - 1) over the u32 interval starts; O(log I).
 
@@ -103,13 +104,34 @@ def rs_table_prep(starts32: np.ndarray, owners: np.ndarray):
 
 
 def wrh_table_prep(node_ids: np.ndarray, weights: np.ndarray):
-    """Lane-padded device node/weight tables.  Weight padding is 0.0, which
-    the lookup masks out (a zero-capacity straw can never win)."""
+    """Lane-padded device salt/reciprocal tables.
+
+    The per-id loop over the node table is WRH's whole cost (O(N) hashes
+    per id), so everything per-NODE is hoisted here, once per artifact:
+
+      * ``salts[j] = GOLDEN * (node_id + 1) mod 2**32`` -- the level term
+        of the keyed draw, so the loop hashes ``fmix32(fmix32(id + salt))``
+        instead of re-deriving the salt per (id, node) pair,
+      * ``inv_w[j] = float32(1) / weight`` -- the straw key becomes one f32
+        MULTIPLY per (id, node) instead of a division (same single-op IEEE
+        rounding contract; the NumPy oracle multiplies by the identical
+        precomputed reciprocal, so bit-identity is preserved).
+
+    Reciprocal padding is 0.0, which the lookup masks out (a zero-capacity
+    straw can never win); ``wrh_lookup`` recovers the winning node id from
+    its salt via the odd-constant inverse."""
     nodes = np.asarray(node_ids, dtype=np.uint32)
     w = np.asarray(weights, dtype=np.float32)
+    from .ref import GOLDEN
+
+    with np.errstate(over="ignore", divide="ignore"):  # u32 wrap by design
+        salts = np.uint32(GOLDEN) * (nodes + np.uint32(1))
+        inv_w = np.where(
+            w > 0.0, np.float32(1.0) / w, np.float32(0.0)
+        ).astype(np.float32)
     return (
-        jnp.asarray(_lane_pad(nodes, np.uint32(0))),
-        jnp.asarray(_lane_pad(w, np.float32(0.0))),
+        jnp.asarray(_lane_pad(salts, np.uint32(0))),
+        jnp.asarray(_lane_pad(inv_w, np.float32(0.0))),
     )
 
 
@@ -196,37 +218,44 @@ def neg_log2_q16(h: jax.Array) -> jax.Array:
 
 
 def wrh_lookup(
-    ids: jax.Array, node_ids: jax.Array, weights: jax.Array
+    ids: jax.Array, salts: jax.Array, inv_w: jax.Array
 ) -> jax.Array:
     """Weighted-rendezvous winner on one tile/batch -> int32 node ids.
 
-    Running argmin of ``neg_log2_q16(hash(id, node)) / weight`` over the
-    node table (``lax.fori_loop`` with dynamic scalar reads, the counter-
-    ladder pattern); strict ``<`` keeps the FIRST minimal node, matching
-    the NumPy oracle's ``argmin``.  Zero-weight (padding) entries never
-    win.
+    Running argmin of ``neg_log2_q16(hash(id, node)) * (1/weight)`` over
+    the prepped salt/reciprocal tables (``wrh_table_prep``): the per-node
+    salt and capacity reciprocal are precomputed, so each loop iteration
+    is two fmix rounds, the Q16 log and ONE f32 multiply -- the hoist that
+    closes WRH's serving fan-out gap.  Strict ``<`` keeps the FIRST
+    minimal node, matching the NumPy oracle's ``argmin``; zero-reciprocal
+    (padding) entries never win.  The winner's node id is recovered from
+    its salt by the odd-constant modular inverse (``salt = GOLDEN *
+    (nid + 1)`` is a bijection on u32; best-salt 0 recovers the -1
+    sentinel exactly).
     """
+    from .ref import GOLDEN
+
     shape = ids.shape
-    n_pad = node_ids.shape[0]
+    n_pad = salts.shape[0]
     ids_u32 = ids.astype(jnp.uint32)
-    zeros = jnp.zeros(shape, dtype=jnp.uint32)
 
     def body(j, state):
-        best_key, best_node = state
-        nid = jax.lax.dynamic_index_in_dim(node_ids, j, 0, keepdims=False)
-        w = jax.lax.dynamic_index_in_dim(weights, j, 0, keepdims=False)
-        h = draw_u32(ids_u32, nid, zeros)
-        key = neg_log2_q16(h).astype(jnp.float32) / w  # one IEEE f32 div
-        valid = w > jnp.float32(0.0)
+        best_key, best_salt = state
+        salt = jax.lax.dynamic_index_in_dim(salts, j, 0, keepdims=False)
+        iw = jax.lax.dynamic_index_in_dim(inv_w, j, 0, keepdims=False)
+        h = fmix32(fmix32(ids_u32 + salt))  # draw_u32 with hoisted level term
+        key = neg_log2_q16(h).astype(jnp.float32) * iw  # one IEEE f32 mul
+        valid = iw > jnp.float32(0.0)
         better = valid & (key < best_key)
         best_key = jnp.where(better, key, best_key)
-        best_node = jnp.where(better, nid.astype(jnp.int32), best_node)
-        return best_key, best_node
+        best_salt = jnp.where(better, salt, best_salt)
+        return best_key, best_salt
 
     best_key0 = jnp.full(shape, jnp.inf, dtype=jnp.float32)
-    best_node0 = jnp.full(shape, -1, dtype=jnp.int32)
-    _, best = jax.lax.fori_loop(0, n_pad, body, (best_key0, best_node0))
-    return best
+    best_salt0 = jnp.zeros(shape, dtype=jnp.uint32)
+    _, best_salt = jax.lax.fori_loop(0, n_pad, body, (best_key0, best_salt0))
+    inv = jnp.uint32(pow(GOLDEN, -1, 1 << 32))
+    return (best_salt * inv - jnp.uint32(1)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -242,8 +271,8 @@ def _rs_kernel(ids_ref, starts_ref, owners_ref, out_ref):
     out_ref[...] = rs_lookup(ids_ref[...], starts_ref[...], owners_ref[...])
 
 
-def _wrh_kernel(ids_ref, nodes_ref, weights_ref, out_ref):
-    out_ref[...] = wrh_lookup(ids_ref[...], nodes_ref[...], weights_ref[...])
+def _wrh_kernel(ids_ref, salts_ref, inv_ref, out_ref):
+    out_ref[...] = wrh_lookup(ids_ref[...], salts_ref[...], inv_ref[...])
 
 
 def _tiled_pallas_call(kernel, ids, tables, *, rows_per_block, interpret):
@@ -305,15 +334,15 @@ def rs_place_pallas(
 @functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
 def wrh_place_pallas(
     ids: jax.Array,
-    node_ids: jax.Array,
-    weights: jax.Array,
+    salts: jax.Array,
+    inv_w: jax.Array,
     *,
     rows_per_block: int = DEFAULT_ROWS,
     interpret: bool = True,
 ) -> jax.Array:
     """Batched weighted-rendezvous argmin via pl.pallas_call -> int32."""
     return _tiled_pallas_call(
-        _wrh_kernel, ids, (node_ids, weights),
+        _wrh_kernel, ids, (salts, inv_w),
         rows_per_block=rows_per_block, interpret=interpret,
     )
 
@@ -334,8 +363,8 @@ def _rs_ref(ids, starts, owners):
 
 
 @jax.jit
-def _wrh_ref(ids, node_ids, weights):
-    return wrh_lookup(ids, node_ids, weights)
+def _wrh_ref(ids, salts, inv_w):
+    return wrh_lookup(ids, salts, inv_w)
 
 
 _REF = {"ch": _ch_ref, "rs": _rs_ref, "wrh": _wrh_ref}
@@ -377,7 +406,15 @@ def baseline_replicas_lookup(
     (1,) uint32 vector holding the total salted re-probe attempts the
     batch issued (draws on lanes whose R-set was still incomplete) -- the
     obs device plane's rejection-cost metric.  Nodes are bit-identical
-    either way."""
+    either way.
+
+    The rejection loop is an EARLY-EXIT ``while_loop``: once every lane
+    has its R distinct nodes (almost always after R-1 tries, collision
+    odds ~ (R/N)**k) the loop stops, instead of sweeping all ``max_tries``
+    full-table lookups -- the fix for WRH's O(N)-per-lookup fan-out being
+    ~32x slower than ASURA's.  Bit-identical to the fixed-trip loop (and
+    to the NumPy oracle's host early-break): skipped iterations change no
+    state and issue zero probes by definition."""
     shape = ids.shape
     u = ids.astype(jnp.uint32)
     prim = lookup(ids, keys, vals)
@@ -393,13 +430,18 @@ def baseline_replicas_lookup(
         (n_replicas,) + (1,) * len(shape)
     )
 
-    def body(k, state):
+    def cond(state):
+        k = state[0]
+        found = state[2]
+        return (k <= max_tries) & jnp.any(found < n_replicas)
+
+    def body(state):
         if emit_stats:
-            slots, found, nprobe = state
+            k, slots, found, nprobe = state
             nprobe = nprobe + jnp.sum((found < n_replicas).astype(jnp.uint32))
         else:
-            slots, found = state
-        ctr = jnp.broadcast_to(jnp.asarray(k).astype(jnp.uint32), shape)
+            k, slots, found = state
+        ctr = jnp.broadcast_to(k.astype(jnp.uint32), shape)
         h = draw_u32(u, REPLICA_FANOUT_LEVEL, ctr)
         cand = lookup(h, keys, vals)
         dup = jnp.any(slots == cand[None], axis=0)
@@ -408,15 +450,16 @@ def baseline_replicas_lookup(
         slots = jnp.where(put, cand[None], slots)
         found = found + take.astype(jnp.int32)
         if emit_stats:
-            return slots, found, nprobe
-        return slots, found
+            return k + 1, slots, found, nprobe
+        return k + 1, slots, found
 
+    k0 = jnp.int32(1)
     if emit_stats:
-        slots, _, nprobe = jax.lax.fori_loop(
-            1, max_tries + 1, body, (slots, found, jnp.uint32(0))
+        _, slots, _, nprobe = jax.lax.while_loop(
+            cond, body, (k0, slots, found, jnp.uint32(0))
         )
         return jnp.moveaxis(slots, 0, -1), nprobe[None]
-    slots, _ = jax.lax.fori_loop(1, max_tries + 1, body, (slots, found))
+    _, slots, _ = jax.lax.while_loop(cond, body, (k0, slots, found))
     return jnp.moveaxis(slots, 0, -1)
 
 

@@ -604,6 +604,30 @@ def selftest(n_devices: int | None = None, n_ids: int = 100_003) -> int:
             assert np.array_equal(
                 solo.load_counts(), shard.load_counts()
             ), f"hier R={R} step {_step}: sharded load counters differ"
+
+    # scan-fused superstep: a mesh-sharded superstep(k) must equal k
+    # single-device step() calls bit for bit -- chosen, counters, queue
+    # (DESIGN.md section 15; the per-sub-batch psum stays inside the scan)
+    eng_k = PlacementEngine(serve_cluster, backend="ref", algorithm="asura")
+    kw = dict(
+        batch=batch, n_keys=4096, law="zipf",
+        n_replicas=3, policy="pow2", seed=7,
+    )
+    solo = RequestStreamDriver(eng_k, **kw)
+    shard = RequestStreamDriver(eng_k, mesh=mesh, **kw)
+    k = 3
+    for _block in range(2):
+        a = np.stack([np.asarray(solo.step()) for _ in range(k)])
+        b = np.asarray(shard.superstep(k))
+        assert np.array_equal(a, b), (
+            f"block {_block}: sharded superstep chosen nodes differ"
+        )
+        assert np.array_equal(
+            solo.load_counts(), shard.load_counts()
+        ), f"block {_block}: superstep load counters differ"
+        assert np.array_equal(
+            np.asarray(solo.queue), np.asarray(shard.queue)
+        ), f"block {_block}: superstep queue state differs"
     return sweep.n_devices
 
 

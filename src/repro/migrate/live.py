@@ -310,6 +310,14 @@ class LiveMigration(DrainDriver):
         # mover.pump() and migration.pump() must not double-run periods)
         return self.mover.pump()
 
+    def round_block(self, k: int) -> list[dict[tuple[int, int], int]]:
+        """k budgeted rounds in ONE device dispatch (the mover's
+        scan-fused round block); returns the k per-round matrices.  The
+        mover's public verb already ledger-emits each round exactly once,
+        so this wrapper only adds the liveness guard."""
+        self._check_live()
+        return self.mover.round_block(k)
+
     def _pending_desc(self) -> str:
         return f"{self.state.n_pending} rows pending"
 

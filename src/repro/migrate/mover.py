@@ -95,6 +95,69 @@ def _budget_of(budget, nodes: np.ndarray) -> np.ndarray:
     return np.full(len(nodes), int(budget), dtype=np.int64)
 
 
+def _scan_rounds(landed, *, src, dst, valid, src_c, dst_c, n_bins, k):
+    """k throttled admission rounds in ONE jit over the pow2-padded plan.
+
+    Module-level so jax's jit cache (keyed on array shapes + the static
+    ``(n_bins, k)``) is shared by every mover in the process.  Each round
+    recomputes the per-group admission ranks with the ``_GroupIndex``
+    recurrence -- ``lax.cummax`` standing in for ``np.maximum.accumulate``
+    -- and scatter-adds the admitted rows into a dense (n_bins, n_bins)
+    movement matrix.
+    """
+    return _get_scan_rounds_jit()(
+        landed, *src, *dst, valid, src_c, dst_c, n_bins=n_bins, k=k
+    )
+
+
+def _scan_rounds_impl(
+    landed,
+    order_s, start_s, cap_s,
+    order_d, start_d, cap_d,
+    valid, src_c, dst_c,
+    *, n_bins, k,
+):
+    import jax
+    import jax.numpy as jnp
+
+    P = landed.shape[0]
+
+    def ranks(order, is_start, pend):
+        f = pend[order].astype(jnp.int32)
+        cum = jnp.cumsum(f)
+        before = cum - f
+        base = jax.lax.cummax(jnp.where(is_start, before, 0))
+        return jnp.zeros((P,), jnp.int32).at[order].set(before - base)
+
+    def one(landed, _):
+        pend = valid & ~landed
+        take = (
+            pend
+            & (ranks(order_s, start_s, pend) < cap_s)
+            & (ranks(order_d, start_d, pend) < cap_d)
+        )
+        mat = jnp.zeros((n_bins, n_bins), jnp.int32).at[src_c, dst_c].add(
+            take.astype(jnp.int32)
+        )
+        return landed | take, mat
+
+    return jax.lax.scan(one, landed, None, length=k)
+
+
+_scan_rounds_jit = None  # jitted lazily: keep jax imports off the host path
+
+
+def _get_scan_rounds_jit():
+    global _scan_rounds_jit
+    if _scan_rounds_jit is None:
+        import jax
+
+        _scan_rounds_jit = jax.jit(
+            _scan_rounds_impl, static_argnames=("n_bins", "k")
+        )
+    return _scan_rounds_jit
+
+
 class MigrationState:
     """A plan plus its landed bitmap -- the single source of truth for the
     dual-version read rule.
@@ -300,6 +363,9 @@ class ThrottledMover(DrainDriver):
         self._by_dst = _GroupIndex(state.plan.dst)
         self._cap_src = _budget_of(egress, state.plan.src)
         self._cap_dst = _budget_of(ingress, state.plan.dst)
+        # Device round engine (lazy): built on the first round_block().
+        self._dev_rounds = None
+        self._block_fns: dict[int, object] = {}
 
     @property
     def done(self) -> bool:
@@ -357,6 +423,132 @@ class ThrottledMover(DrainDriver):
             out.append(self._round())
             self._pumped += 1
         return out
+
+    # -- device-resident round blocks (DESIGN.md section 15) ------------------
+
+    def _device_rounds(self):
+        """Lazy device round engine over the pow2-padded plan view.
+
+        Everything the admission rule needs is plan-constant -- the stable
+        group orders, group-start flags, per-row budget caps, scatter
+        coordinates -- so it uploads ONCE per mover and each round becomes
+        pure on-device arithmetic: a segmented cumsum per group axis (the
+        ``_GroupIndex.ranks`` recurrence, with ``lax.cummax`` standing in
+        for ``np.maximum.accumulate``) and one landed-bitmap OR.  Budget
+        caps clamp to int32 max: ranks are < P <= 2^31, so the comparison
+        is unchanged.  Returns None for an empty plan."""
+        if self._dev_rounds is None:
+            plan = self.state.plan
+            n = plan.n_moves
+            if n == 0:
+                self._dev_rounds = False
+            else:
+                import jax.numpy as jnp
+
+                P = 1 << max(0, n - 1).bit_length()
+                no_key = np.iinfo(np.int64).max  # pads sort last
+                i32max = np.iinfo(np.int32).max
+
+                def axis(keys, caps):
+                    kp = np.full(P, no_key, dtype=np.int64)
+                    kp[:n] = keys
+                    order = np.argsort(kp, kind="stable")
+                    sk = kp[order]
+                    is_start = np.empty(P, dtype=bool)
+                    is_start[0] = True
+                    np.not_equal(sk[1:], sk[:-1], out=is_start[1:])
+                    cp = np.zeros(P, dtype=np.int64)
+                    cp[:n] = np.minimum(caps, i32max)
+                    return (
+                        jnp.asarray(order.astype(np.int32)),
+                        jnp.asarray(is_start),
+                        jnp.asarray(cp.astype(np.int32)),
+                    )
+
+                n_bins = int(max(plan.src.max(), plan.dst.max())) + 1
+                coord = np.zeros((2, P), dtype=np.int32)
+                coord[0, :n] = plan.src
+                coord[1, :n] = plan.dst
+                self._dev_rounds = {
+                    "src": axis(plan.src, self._cap_src),
+                    "dst": axis(plan.dst, self._cap_dst),
+                    "valid": jnp.asarray(np.arange(P) < n),
+                    "src_c": jnp.asarray(coord[0]),
+                    "dst_c": jnp.asarray(coord[1]),
+                    "n_bins": n_bins,
+                    "P": P,
+                }
+        return self._dev_rounds or None
+
+    def _block_fn(self, k: int):
+        """k-round scan, bound to this mover's plan-constant arrays.
+
+        The jit itself is the MODULE-LEVEL ``_scan_rounds`` (static over
+        (k, n_bins) and cached by jax on array shapes), so two movers with
+        same-shape plans share one compile -- a fresh migration pays no
+        retrace for its round blocks."""
+        fn = self._block_fns.get(k)
+        if fn is not None:
+            return fn
+        import functools
+
+        dv = self._device_rounds()
+        fn = functools.partial(
+            _scan_rounds,
+            src=dv["src"],
+            dst=dv["dst"],
+            valid=dv["valid"],
+            src_c=dv["src_c"],
+            dst_c=dv["dst_c"],
+            n_bins=dv["n_bins"],
+            k=k,
+        )
+        self._block_fns[k] = fn
+        return fn
+
+    def _round_block(self, k: int) -> list[dict[tuple[int, int], int]]:
+        """k throttled rounds on device -- ONE dispatch, one sync back.
+
+        Bit-identical to k sequential ``_round()`` calls: the scan carries
+        the landed bitmap so each round's admission sees the previous
+        round's landings, and the per-round matrices aggregate the same
+        (src, dst) pair counts ``np.unique`` produces on the host path.
+        Runs exactly k rounds even once drained (trailing rounds move
+        nothing and record empty matrices, like the host loop)."""
+        state = self.state
+        if self._device_rounds() is None:  # empty plan: host loop is exact
+            return [self._round() for _ in range(k)]
+        import jax.numpy as jnp
+
+        dv = self._device_rounds()
+        P, n = dv["P"], state.plan.n_moves
+        landed = state.landed if n == P else np.pad(state.landed, (0, P - n))
+        landed_out, mats = self._block_fn(k)(jnp.asarray(landed))
+        landed_np = np.asarray(landed_out)[:n]
+        mats_np = np.asarray(mats)
+        newly = landed_np & ~state.landed
+        state.mark_landed(np.nonzero(newly)[0])
+        matrices: list[dict[tuple[int, int], int]] = []
+        for r in range(k):
+            s_idx, d_idx = np.nonzero(mats_np[r])
+            matrices.append(
+                {
+                    (int(s), int(d)): int(mats_np[r, s, d])
+                    for s, d in zip(s_idx, d_idx)
+                }
+            )
+        self.rounds_done += k
+        self.history.extend(matrices)
+        return matrices
+
+    def round_block(self, k: int) -> list[dict[tuple[int, int], int]]:
+        """Run k budgeted rounds in ONE device dispatch; returns the k
+        per-round movement matrices (ledger-emitted like any other round).
+        Counts as manual rounds: clock pacing (``pump``) is unaffected."""
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"round_block needs k >= 1, got {k}")
+        return self._emit_rounds(self._advance(lambda: self._round_block(k)))
 
     def movement_matrix(self) -> dict[tuple[int, int], int]:
         """Accumulated (src, dst) -> rows moved so far, across all rounds."""

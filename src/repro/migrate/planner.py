@@ -160,6 +160,8 @@ class MigrationPlanner:
         # is the section-2.D fast path's effectiveness, DESIGN.md 13).
         self.ledger = ledger
         self.metrics = metrics
+        # scan-fused multi-chunk diff jits, keyed (kind, statics[, R])
+        self._fuse_fns: dict = {}
 
     def _note_prefilter(self, n_scanned: int, n_kept: int) -> None:
         if self.ledger is not None:
@@ -208,7 +210,110 @@ class MigrationPlanner:
             datum_ids, v_from, v_to, n_replicas
         )
 
-    def plan_stream(self, id_chunks, v_from: int, v_to: int, *, mesh=None):
+    # -- scan-fused multi-chunk diff (DESIGN.md section 15) -------------------
+
+    def _fuse_tables(self, v_from: int, v_to: int, replicas: bool):
+        """(tables, statics) for the scan-fused diff body -- the same
+        dual-version device artifacts ``diff_device`` resolves."""
+        e = self.engine
+        art_a = e._device_artifact_for(v_from, "asura")
+        art_b = e._device_artifact_for(v_to, "asura")
+        p = e.params
+        statics = (art_a.top_level, art_b.top_level, p.s_log2, p.max_draws)
+        if replicas:
+            tables = (
+                art_a.len32_dev, art_a.node_of_dev,
+                art_b.len32_dev, art_b.node_of_dev,
+            )
+        else:
+            tables = (
+                art_a.len32_dev, art_a.cum_hi_dev, art_a.cum_lo_dev,
+                art_a.node_of_dev,
+                art_b.len32_dev, art_b.cum_hi_dev, art_b.cum_lo_dev,
+                art_b.node_of_dev,
+            )
+        return tables, statics
+
+    def _fuse_fn(self, statics: tuple, n_replicas: int | None):
+        """Jitted ``lax.scan`` of the fused dual-table diff over a stacked
+        (B, chunk) id block -- ONE dispatch per B chunks.  Cached per
+        static routing configuration; block shape changes retrace inside
+        jax's own cache (pow2 chunking bounds them at O(log chunk))."""
+        key = ("rdiff", statics, n_replicas) if n_replicas else ("diff", statics)
+        fn = self._fuse_fns.get(key)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _diff_fused_ref, _diff_replicas_fused_ref
+
+        top_a, top_b, s_log2, max_draws = statics
+
+        def body(tabs, ids):
+            u = ids.astype(jnp.uint32)
+            if n_replicas:
+                out = _diff_replicas_fused_ref(
+                    u, *tabs, top_a=top_a, top_b=top_b,
+                    s_log2=s_log2, max_draws=max_draws, n_replicas=n_replicas,
+                )
+            else:
+                out = _diff_fused_ref(
+                    u, *tabs, top_a=top_a, top_b=top_b,
+                    s_log2=s_log2, max_draws=max_draws,
+                )
+            return tabs, out
+
+        @jax.jit
+        def run(ids_blk, *tabs):
+            _, outs = jax.lax.scan(body, tabs, ids_blk)
+            return outs
+
+        self._fuse_fns[key] = run
+        return run
+
+    def _fused_stream(
+        self, id_chunks, v_from: int, v_to: int, fuse: int,
+        n_replicas: int | None,
+    ):
+        """Shared fused-stream driver: group consecutive equal-pow2-length
+        chunks into blocks of up to ``fuse``, diff each block in one
+        scanned dispatch, and yield the SAME per-chunk tuples the
+        unfused stream yields (pad lanes' ``moved`` masked False)."""
+        import jax.numpy as jnp
+
+        tables, statics = self._fuse_tables(v_from, v_to, bool(n_replicas))
+        run = self._fuse_fn(statics, n_replicas)
+
+        def flush(buf):
+            if not buf:
+                return
+            stack = (
+                np.stack([p for p, _, _ in buf])
+                if all(isinstance(p, np.ndarray) for p, _, _ in buf)
+                else jnp.stack([jnp.asarray(p) for p, _, _ in buf])
+            )
+            outs = run(stack, *tables)
+            for i, (padded, n_valid, was_padded) in enumerate(buf):
+                moved = outs[0][i]
+                if was_padded:
+                    moved = _mask_tail(moved, n_valid)
+                yield (padded, moved, *(o[i] for o in outs[1:]))
+
+        buf: list = []
+        for chunk in id_chunks:
+            padded, n_valid = self._pad_pow2(chunk, 1)
+            if buf and (
+                buf[0][0].shape[0] != padded.shape[0] or len(buf) >= fuse
+            ):
+                yield from flush(buf)
+                buf = []
+            buf.append((padded, n_valid, padded is not chunk))
+        yield from flush(buf)
+
+    def plan_stream(
+        self, id_chunks, v_from: int, v_to: int, *, mesh=None, fuse: int = 1
+    ):
         """Streaming sweep: yield ``(ids, moved, src, dst)`` per chunk.
 
         ``id_chunks`` is any iterable of id arrays (device arrays keep the
@@ -228,8 +333,24 @@ class MigrationPlanner:
         across the mesh's data axis instead of one device -- same yielded
         contract, bit-identical outputs, host-fed chunks (DESIGN.md
         section 11).
+
+        ``fuse=`` > 1 groups consecutive equal-pow2-length chunks into
+        blocks of up to ``fuse`` and diffs each block with ONE scanned
+        dispatch (DESIGN.md section 15) -- same yielded per-chunk
+        contract, bit-identical outputs, ~fuse-fold fewer dispatches.
+        Single-device flat-ASURA only (mesh and hierarchical sweeps stay
+        per-chunk).
         """
         sweep = self._sweep(mesh)
+        if (
+            int(fuse) > 1
+            and sweep is None
+            and not getattr(self.engine, "hierarchical", False)
+        ):
+            yield from self._fused_stream(
+                id_chunks, v_from, v_to, int(fuse), None
+            )
+            return
         mult = 1 if sweep is None else sweep.n_devices
         for chunk in id_chunks:
             padded, n_valid = self._pad_pow2(chunk, mult)
@@ -242,14 +363,24 @@ class MigrationPlanner:
             yield padded, moved, src, dst
 
     def plan_replicas_stream(
-        self, id_chunks, v_from: int, v_to: int, n_replicas: int, *, mesh=None
+        self, id_chunks, v_from: int, v_to: int, n_replicas: int, *,
+        mesh=None, fuse: int = 1,
     ):
         """Replica streaming sweep: yield ``(ids, moved, src, dst,
         src_slot)`` device tuples per chunk -- the R-way twin of
         ``plan_stream``, same fixed device memory, zero host syncs, pow2
-        tail bucketing (pad rows' ``moved`` all False) and optional
-        ``mesh=`` scale-out."""
+        tail bucketing (pad rows' ``moved`` all False), optional ``mesh=``
+        scale-out and optional ``fuse=`` scan-fused multi-chunk blocks."""
         sweep = self._sweep(mesh)
+        if (
+            int(fuse) > 1
+            and sweep is None
+            and not getattr(self.engine, "hierarchical", False)
+        ):
+            yield from self._fused_stream(
+                id_chunks, v_from, v_to, int(fuse), int(n_replicas)
+            )
+            return
         mult = 1 if sweep is None else sweep.n_devices
         for chunk in id_chunks:
             padded, n_valid = self._pad_pow2(chunk, mult)

@@ -292,6 +292,12 @@ class RequestStreamDriver:
         counter behind the PR-7 attribute name."""
         return self.ledger.counter("serve.step_traces")
 
+    @property
+    def superstep_traces(self) -> int:
+        """Scan-fused superstep jit traces (the superstep retrace
+        tripwire; one trace per distinct (statics, k))."""
+        return self.ledger.counter("serve.superstep_traces")
+
     def _accumulate(self, delta, hist, stats):
         """Fold one batch's device-plane contributions into a slab delta
         (build-time no-op chain when uninstrumented -- never traced)."""
@@ -327,14 +333,23 @@ class RequestStreamDriver:
 
     # -- the fused step -------------------------------------------------------
 
-    def _step_fn(self, statics: tuple):
-        """One-jit batch step: generate -> route -> select -> count.
+    def _batch_body(self, statics: tuple):
+        """The traced ONE-BATCH body ``step()`` and ``superstep()`` share:
+        generate -> route -> select -> count, signature
+
+            body(key, step_idx, counts, queue, qhist, *rest)
+              -> (counts, queue, qhist, [slab,] step_idx + 1, chosen)
+
+        where ``rest = [slab,] service, thresholds, *tables``.  Both
+        drivers trace EXACTLY this function (step jits it directly, the
+        superstep scans it), which is what makes ``superstep(k)``
+        bit-identical to K sequential ``step()`` calls by construction.
 
         With a live ``MetricsRegistry`` the body also threads the u32
         metrics slab: routed/served/kernel-stats accumulate into a zeros
         DELTA slab in-register, and under a mesh the delta rides the
-        step's single exact integer psum alongside the per-node histogram
-        (DESIGN.md section 13) -- still zero host syncs per step.
+        batch's single exact integer psum alongside the per-node histogram
+        (DESIGN.md section 13) -- still zero host syncs per batch.
         """
         import jax
         import jax.numpy as jnp
@@ -348,7 +363,6 @@ class RequestStreamDriver:
         driver = self
 
         def body(key, step_idx, counts, queue, qhist, *rest):
-            driver.ledger.incr("serve.step_traces")  # fires per TRACE only
             if instrumented:
                 slab, service, thresholds, *tables = rest
             else:
@@ -398,21 +412,41 @@ class RequestStreamDriver:
                 return counts, queue, qhist, slab + delta, step_idx + 1, chosen
             return counts, queue, qhist, step_idx + 1, chosen
 
+        return body
+
+    def _spec_counts(self, statics: tuple) -> tuple[int, int]:
+        """(n_in, n_rep_out) for the mesh shard_map wrap of a batch body."""
+        # flat routing carries 2 table operands; the two-level path carries
+        # the 8-array stacked hierarchy artifact (kernels/hierarchy.py)
+        n_tables = (8 if statics[0] == "hier" else 2) + len(self._fixed_operands())
+        n_in = (6 if self._instrumented else 5) + n_tables
+        n_rep_out = 4 if self._instrumented else 3
+        return n_in, n_rep_out
+
+    def _step_fn(self, statics: tuple):
+        """One-jit batch step: the shared batch body, jitted (shard_mapped
+        on a mesh), plus the per-TRACE retrace tripwire."""
+        import jax
+
+        body = self._batch_body(statics)
+        sweep = self._sweep
+        driver = self
+
+        def stepped(*args):
+            driver.ledger.incr("serve.step_traces")  # fires per TRACE only
+            return body(*args)
+
         if sweep is None:
-            return jax.jit(body)
+            return jax.jit(stepped)
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
         from repro.launch.placement_mesh import DATA_AXIS
 
-        # flat routing carries 2 table operands; the two-level path carries
-        # the 8-array stacked hierarchy artifact (kernels/hierarchy.py)
-        n_tables = (8 if statics[0] == "hier" else 2) + len(self._fixed_operands())
-        n_in = (6 if instrumented else 5) + n_tables
-        n_rep_out = 4 if instrumented else 3
+        n_in, n_rep_out = self._spec_counts(statics)
         return jax.jit(
             shard_map(
-                body,
+                stepped,
                 mesh=sweep.mesh,
                 # everything replicated: lanes derive from axis_index, so
                 # there is no partitioned INPUT at all -- only the chosen
@@ -420,6 +454,150 @@ class RequestStreamDriver:
                 in_specs=(P(),) * n_in,
                 out_specs=(P(),) * (n_rep_out + 1) + (P(DATA_AXIS),),
                 check_rep=False,  # while_loop ladders have no replication rule
+            )
+        )
+
+    def _superstep_fn(self, statics: tuple, k: int):
+        """K fused batches in ONE jit, restructured around what actually
+        needs to be sequential:
+
+          1. generate ALL K sub-batches in one vectorized draw (every
+             threefry word is a pure function of (key, step, lane)),
+          2. route the joint (k*batch,) id block through ONE ladder
+             while_loop -- amortizing the loop's per-iteration dispatch
+             overhead k-fold instead of paying it per sub-batch,
+          3. ``lax.scan`` only the counter-COUPLED tail (pow2 select,
+             count, queue ring) with (counts, queue, qhist, [slab,]
+             step_idx) as the carry.
+
+        This is still bit-identical to K sequential ``step()`` calls:
+        generation is counter-based (stateless), the routing loops are
+        per-lane pure (a lane's result and its emitted stats never depend
+        on which other lanes share the batch -- the same partition
+        invariance the sharded stream's psum merge already relies on,
+        selftest-enforced), and the selection scan reads counters fresh
+        as of the previous sub-batch exactly as ``step()`` does.  The
+        once-per-batch slab contributions (routed counter, kernel stats)
+        fold in once per SUPERSTEP with the same u32 modular sum.  On a
+        mesh the per-sub-batch exact psum stays INSIDE the scan (K+1
+        psums fused into one dispatch), so sharded supersteps remain
+        bit-identical to single-device.  ``chosen`` comes back stacked
+        (k, batch).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        batch, R = self.batch, self.n_replicas
+        policy, n_bins, max_hist = self.policy, self.n_bins, self.max_hist
+        id_salt = self.traffic.id_salt
+        instrumented = self._instrumented
+        owners_fn = replica_owners_body(statics, R, emit_stats=instrumented)
+        sweep = self._sweep
+        driver = self
+
+        def super_body(key, step_idx, counts, queue, qhist, *rest):
+            driver.ledger.incr("serve.superstep_traces")  # per TRACE only
+            if instrumented:
+                slab, service, thresholds, *tables = rest
+            else:
+                service, thresholds, *tables = rest
+            if sweep is None:
+                local = batch
+                lanes = jnp.arange(batch, dtype=jnp.uint32)
+            else:
+                from repro.launch.placement_mesh import DATA_AXIS
+
+                local = batch // sweep.n_devices
+                first = jax.lax.axis_index(DATA_AXIS).astype(jnp.uint32) * local
+                lanes = first + jnp.arange(local, dtype=jnp.uint32)
+
+            # stage 1+2: all K sub-batches drawn and routed jointly
+            steps = step_idx + jnp.arange(k, dtype=step_idx.dtype)
+            ids, sel = jax.vmap(
+                lambda s: TrafficModel.draw(key, s, lanes, thresholds, id_salt)
+            )(steps)  # (k, local) each
+            if instrumented:
+                owners, stats = owners_fn(ids.reshape(k * local), *tables)
+            else:
+                owners = owners_fn(ids.reshape(k * local), *tables)
+            owners = owners.reshape(k, local, R)
+
+            # stage 3: the counter-coupled tail, scanned
+            def sub(carry, xs):
+                if instrumented:
+                    counts, queue, qhist, slab, si = carry
+                else:
+                    counts, queue, qhist, si = carry
+                owners_i, sel_i = xs
+                chosen = select_replica(
+                    owners_i, sel_i, counts, policy=policy, n_replicas=R
+                )
+                hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(1)
+                if instrumented:
+                    delta = jnp.zeros_like(slab)
+                    delta = driver._accumulate(delta, hist, None)
+                if sweep is not None:
+                    from repro.launch.placement_mesh import DATA_AXIS
+
+                    if instrumented:
+                        merged = jax.lax.psum(
+                            jnp.concatenate([hist, delta.astype(jnp.int32)]),
+                            DATA_AXIS,
+                        )
+                        hist = merged[:n_bins]
+                        delta = merged[n_bins:].astype(jnp.uint32)
+                    else:
+                        hist = jax.lax.psum(hist, DATA_AXIS)
+                counts = counts + hist
+                queue = jnp.maximum(queue + hist - service, 0)
+                qhist = jax.lax.dynamic_update_slice(
+                    qhist, queue[None], (si % max_hist, jnp.int32(0))
+                )
+                if instrumented:
+                    return (counts, queue, qhist, slab + delta, si + 1), chosen
+                return (counts, queue, qhist, si + 1), chosen
+
+            if instrumented:
+                carry0 = (counts, queue, qhist, slab, step_idx)
+            else:
+                carry0 = (counts, queue, qhist, step_idx)
+            carry, chosen = jax.lax.scan(sub, carry0, (owners, sel), length=k)
+            if instrumented:
+                # once-per-superstep slab contributions: the routed counter
+                # and the joint route's kernel stats (their per-sub-batch
+                # sums are the same u32 total -- partition invariance)
+                counts, queue, qhist, slab, si = carry
+                delta = jnp.zeros_like(slab)
+                delta = driver.metrics.add(
+                    delta, driver._routed_name, k * local
+                )
+                delta = driver._accumulate(delta, jnp.zeros((n_bins,), jnp.int32), stats)
+                if sweep is not None:
+                    from repro.launch.placement_mesh import DATA_AXIS
+
+                    delta = jax.lax.psum(
+                        delta.astype(jnp.int32), DATA_AXIS
+                    ).astype(jnp.uint32)
+                carry = (counts, queue, qhist, slab + delta, si)
+            return (*carry, chosen)
+
+        if sweep is None:
+            return jax.jit(super_body)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.placement_mesh import DATA_AXIS
+
+        n_in, n_rep_out = self._spec_counts(statics)
+        return jax.jit(
+            shard_map(
+                super_body,
+                mesh=sweep.mesh,
+                in_specs=(P(),) * n_in,
+                # stacked chosen is (k, local): partitioned on the LANE
+                # axis, replicated over the scan axis.
+                out_specs=(P(),) * (n_rep_out + 1) + (P(None, DATA_AXIS),),
+                check_rep=False,
             )
         )
 
@@ -446,6 +624,42 @@ class RequestStreamDriver:
                 *self._fixed_operands(), *tables,
             )
         self.steps_done += 1
+        return chosen
+
+    def superstep(self, k: int):
+        """Serve K generated batches in ONE host dispatch -> (k, batch)
+        int32 chosen nodes (device array; lane-partitioned over the mesh
+        when sharded).
+
+        Bit-identical to K sequential ``step()`` calls -- same counters,
+        queue ring, metrics slab and chosen nodes: generation and routing
+        are per-lane pure, so the superstep draws and routes all K
+        sub-batches JOINTLY (one ladder while_loop instead of K) and scans
+        only the counter-coupled select/count tail (``_superstep_fn``).
+        Amortizes both the host dispatch and the routing loop's
+        per-iteration overhead ~k-fold; at most one slab transfer per
+        superstep when instrumented.  Pick k so ``k * batch`` trails the
+        metric-read cadence (README "Throughput tuning")."""
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"superstep needs k >= 1, got {k}")
+        tables, statics = route_statics(self.engine, self.algorithm)
+        fn = self._cached(
+            ("superstep", statics, k), lambda: self._superstep_fn(statics, k)
+        )
+        if self._instrumented:
+            (self.counts, self.queue, self.qhist, slab, self._step,
+             chosen) = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                self.metrics.slab(), *self._fixed_operands(), *tables,
+            )
+            self.metrics.set_slab(slab)
+        else:
+            self.counts, self.queue, self.qhist, self._step, chosen = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                *self._fixed_operands(), *tables,
+            )
+        self.steps_done += k
         return chosen
 
     # -- external batches (pow2 bucketing -- ragged tails share compiles) -----
@@ -619,6 +833,135 @@ class RequestStreamDriver:
                 self._service,
             )
         self.steps_done += 1
+        return ids, chosen
+
+    def _mig_superstep_fn(self, statics: tuple, k: int):
+        """K migration-window batches in ONE jit: generate, the fused
+        dual-version replica read rule (the ``migrate.live``
+        ``_fused_replica_route`` body, inlined) and select+count, scanned
+        with the serving state as the carry -- the superstep twin of
+        ``serve_migrating``'s three dispatches."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _place_replicas_fused_ref
+
+        top_level, s_log2, max_draws, R = statics
+        batch, id_salt = self.batch, self.traffic.id_salt
+        policy, n_bins, max_hist = self.policy, self.n_bins, self.max_hist
+        instrumented = self._instrumented
+        driver = self
+
+        @jax.jit
+        def super_body(key, step_idx, counts, queue, qhist, *rest):
+            driver.ledger.incr("serve.superstep_traces")  # per TRACE only
+            if instrumented:
+                (slab, service, thresholds, len32, node_of,
+                 ids_pad, src_pad, pcounts) = rest
+                carry0 = (counts, queue, qhist, slab, step_idx)
+            else:
+                (service, thresholds, len32, node_of,
+                 ids_pad, src_pad, pcounts) = rest
+                carry0 = (counts, queue, qhist, step_idx)
+
+            def route(u):
+                dst = _place_replicas_fused_ref(
+                    u, len32, node_of,
+                    top_level=top_level, s_log2=s_log2, max_draws=max_draws,
+                    n_replicas=R, emit_nodes=True,
+                )
+
+                def per_slot(sorted_pad, src_vals, n):
+                    pos = jnp.searchsorted(sorted_pad, u, side="left")
+                    pos_c = jnp.minimum(pos, sorted_pad.shape[0] - 1)
+                    hit = (pos < n) & (sorted_pad[pos_c] == u)
+                    return hit, src_vals[pos_c]
+
+                hit, src = jax.vmap(per_slot)(ids_pad, src_pad, pcounts)
+                return jnp.where(hit.T, src.T, dst)
+
+            def sub(carry, _):
+                if instrumented:
+                    c, q, qh, sl, si = carry
+                else:
+                    c, q, qh, si = carry
+                lanes = jnp.arange(batch, dtype=jnp.uint32)
+                ids, sel = TrafficModel.draw(key, si, lanes, thresholds, id_salt)
+                owners = route(ids.astype(jnp.uint32))
+                chosen = select_replica(
+                    owners, sel, c, policy=policy, n_replicas=R
+                )
+                hist = jnp.zeros((n_bins,), jnp.int32).at[chosen].add(1)
+                c = c + hist
+                q = jnp.maximum(q + hist - service, 0)
+                qh = jax.lax.dynamic_update_slice(
+                    qh, q[None], (si % max_hist, jnp.int32(0))
+                )
+                if instrumented:
+                    delta = jnp.zeros_like(sl)
+                    delta = driver.metrics.add(
+                        delta, driver._routed_name, owners.shape[0]
+                    )
+                    delta = driver._accumulate(delta, hist, None)
+                    return (c, q, qh, sl + delta, si + 1), (ids, chosen)
+                return (c, q, qh, si + 1), (ids, chosen)
+
+            carry, (ids, chosen) = jax.lax.scan(sub, carry0, None, length=k)
+            return (*carry, ids, chosen)
+
+        return super_body
+
+    def superstep_migrating(self, migration, k: int):
+        """Serve K generated batches THROUGH a live migration window in
+        ONE host dispatch -> (datum_ids, chosen), each (k, batch).
+
+        Bit-identical to K sequential ``serve_migrating`` calls against
+        the same pending view: the whole dual-version read rule runs
+        inside the scan, counters stay fresh between sub-batches, and the
+        pending snapshot is the one at call time (refresh per round, as
+        with ``serve_migrating``).  Single-device, like the window."""
+        if self._sweep is not None:
+            raise ValueError(
+                "migration windows are single-device (the pending views "
+                "refresh per round); build the driver without mesh="
+            )
+        if migration.n_replicas != self.n_replicas:
+            raise ValueError(
+                f"driver serves R={self.n_replicas} but the migration plan "
+                f"is R={migration.n_replicas}"
+            )
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"superstep needs k >= 1, got {k}")
+        migration._check_live()
+        art = migration.engine._device_artifact_for(migration.v_to, "asura")
+        params = migration.engine.params
+        statics = (
+            art.top_level, params.s_log2, params.max_draws, self.n_replicas
+        )
+        ids_pad, src_pad, pcounts = migration.state.pending_replicas_device()
+        fn = self._cached(
+            ("mig_superstep", statics, k),
+            lambda: self._mig_superstep_fn(statics, k),
+        )
+        operands = (
+            self._service, self.traffic.thresholds_dev,
+            art.len32_dev, art.node_of_dev, ids_pad, src_pad, pcounts,
+        )
+        if self._instrumented:
+            (self.counts, self.queue, self.qhist, slab, self._step,
+             ids, chosen) = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                self.metrics.slab(), *operands,
+            )
+            self.metrics.set_slab(slab)
+        else:
+            (self.counts, self.queue, self.qhist, self._step,
+             ids, chosen) = fn(
+                self._key, self._step, self.counts, self.queue, self.qhist,
+                *operands,
+            )
+        self.steps_done += k
         return ids, chosen
 
     # -- host-facing metrics (each accessor is ONE deliberate sync) -----------

@@ -1,0 +1,310 @@
+"""Scan-fused supersteps + device-resident mover rounds (DESIGN.md 15).
+
+The PR's contract is BIT-IDENTITY under fusion: a superstep of K batches
+must reproduce K sequential ``step()`` calls exactly -- chosen nodes,
+counters, queue ring, queue histogram, metrics slab -- for every
+algorithm, hierarchical mode, the instrumented slab, the migration
+window, and on a forced-8-device mesh (subprocess).  Likewise the
+mover's ``round_block(k)`` must reproduce k host ``round()`` calls
+(matrices, landed bitmap, budgets) including a mid-drain rollback, and
+the planner's ``fuse=`` blocks must yield the per-chunk stream
+unchanged.  Plus the dispatch-amortization tripwires: one trace per
+(config, k) and zero host syncs inside a warm superstep.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import PlacementEngine, make_uniform_cluster
+from repro.core.hierarchy import HierarchicalCluster
+from repro.obs import MetricsRegistry
+from repro.runtime import ElasticCoordinator
+from repro.serve import RequestStreamDriver, Router
+
+K = 3
+BLOCKS = 2
+
+
+def _driver(engine, **kw):
+    kw.setdefault("batch", 512)
+    kw.setdefault("n_keys", 1 << 12)
+    kw.setdefault("n_replicas", 3)
+    kw.setdefault("policy", "pow2")
+    kw.setdefault("seed", 3)
+    return RequestStreamDriver(engine, **kw)
+
+
+def _drain_pair(d_step, d_super, k=K, blocks=BLOCKS):
+    """Run blocks*k steps on one driver, blocks supersteps on the other;
+    return (stepped chosen (blocks*k, batch), superstep chosen same)."""
+    stepped = np.stack(
+        [np.asarray(d_step.step()) for _ in range(blocks * k)]
+    )
+    supered = np.concatenate(
+        [np.asarray(d_super.superstep(k)) for _ in range(blocks)]
+    )
+    return stepped, supered
+
+
+def _assert_state_equal(a, b):
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    assert np.array_equal(np.asarray(a.queue), np.asarray(b.queue))
+    assert np.array_equal(np.asarray(a.qhist), np.asarray(b.qhist))
+    assert int(np.asarray(a._step)) == int(np.asarray(b._step))
+    assert a.steps_done == b.steps_done
+
+
+# ---------------------------------------------------------------------------
+# Superstep == K steps, every algorithm + hierarchical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["asura", "ch", "wrh", "rs"])
+def test_superstep_matches_k_steps(alg):
+    cluster = make_uniform_cluster(10)
+    mk = lambda: _driver(PlacementEngine(cluster, backend="ref", algorithm=alg))
+    d_step, d_super = mk(), mk()
+    stepped, supered = _drain_pair(d_step, d_super)
+    assert np.array_equal(stepped, supered)
+    _assert_state_equal(d_step, d_super)
+
+
+def test_superstep_matches_k_steps_hierarchical():
+    h = HierarchicalCluster()
+    for dom in range(3):
+        for n in range(4):
+            h.add_node(dom, dom * 4 + n, 1.0)
+    mk = lambda: _driver(PlacementEngine(h, backend="ref"))
+    d_step, d_super = mk(), mk()
+    stepped, supered = _drain_pair(d_step, d_super)
+    assert np.array_equal(stepped, supered)
+    _assert_state_equal(d_step, d_super)
+
+
+@pytest.mark.parametrize("policy", ["random", "pow2"])
+def test_superstep_counter_feedback_policies(policy):
+    """pow2 reads counters fresh between sub-batches INSIDE the scan;
+    random never reads them -- both must reproduce the step loop."""
+    cluster = make_uniform_cluster(7)
+    mk = lambda: _driver(PlacementEngine(cluster, backend="ref"), policy=policy)
+    d_step, d_super = mk(), mk()
+    stepped, supered = _drain_pair(d_step, d_super)
+    assert np.array_equal(stepped, supered)
+    _assert_state_equal(d_step, d_super)
+
+
+def test_superstep_instrumented_slab_parity():
+    """With the device metrics plane on, the superstep's once-per-block
+    slab contributions (routed counter, kernel stats) plus the scanned
+    per-sub-batch served counts must equal the step loop's slab."""
+    cluster = make_uniform_cluster(10)
+    reg_a, reg_b = MetricsRegistry(), MetricsRegistry()
+    d_step = _driver(PlacementEngine(cluster, backend="ref"), metrics=reg_a)
+    d_super = _driver(PlacementEngine(cluster, backend="ref"), metrics=reg_b)
+    stepped, supered = _drain_pair(d_step, d_super)
+    assert np.array_equal(stepped, supered)
+    _assert_state_equal(d_step, d_super)
+    snap_a, snap_b = reg_a.snapshot(), reg_b.snapshot()
+    assert snap_a.keys() == snap_b.keys()
+    for name in snap_a:
+        assert np.array_equal(snap_a[name], snap_b[name]), name
+
+
+# ---------------------------------------------------------------------------
+# Dispatch tripwires: one trace per (config, k), zero host syncs
+# ---------------------------------------------------------------------------
+
+
+def test_superstep_zero_host_syncs_and_single_trace(monkeypatch):
+    cluster = make_uniform_cluster(12)
+    eng = PlacementEngine(cluster, backend="ref")
+    d = _driver(eng)
+    d.superstep(K).block_until_ready()  # warm: upload + scanned compile
+    assert d.superstep_traces == 1
+    real_asarray = np.asarray
+    host_reads: list = []
+
+    def tripwire(*args, **kwargs):
+        host_reads.append(args)
+        return real_asarray(*args, **kwargs)
+
+    monkeypatch.setattr(np, "asarray", tripwire)
+    with jax.transfer_guard("disallow"):
+        for _ in range(3):
+            chosen = d.superstep(K)
+        chosen.block_until_ready()
+    monkeypatch.undo()
+    assert not host_reads, f"superstep touched the host: {len(host_reads)}"
+    assert d.superstep_traces == 1, "repeated supersteps retraced"
+    assert d.superstep(K + 1).shape == (K + 1, d.batch)
+    assert d.superstep_traces == 2  # a different k is a different program
+
+
+def test_superstep_rejects_bad_k():
+    d = _driver(PlacementEngine(make_uniform_cluster(4), backend="ref"))
+    with pytest.raises(ValueError, match="k >= 1"):
+        d.superstep(0)
+
+
+# ---------------------------------------------------------------------------
+# Forced 8 host devices (subprocess: device count locks at first jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = """
+import numpy as np
+from repro.core import PlacementEngine, make_uniform_cluster
+from repro.launch.placement_mesh import ShardedSweep, make_data_mesh
+from repro.serve import RequestStreamDriver
+
+cluster = make_uniform_cluster(10)
+def mk(mesh):
+    return RequestStreamDriver(
+        PlacementEngine(cluster, backend="ref"), batch=256, n_keys=1 << 12,
+        n_replicas=3, policy="pow2", seed=3, mesh=mesh,
+    )
+single = mk(None)
+sharded = mk(make_data_mesh(8))
+for _ in range(2):
+    a = np.stack([np.asarray(single.step()) for _ in range(3)])
+    b = np.asarray(sharded.superstep(3))
+    assert a.shape == b.shape == (3, 256), (a.shape, b.shape)
+    assert np.array_equal(a, b), "sharded superstep != single-device steps"
+assert np.array_equal(single.load_counts(), sharded.load_counts())
+print("MESH-SUPERSTEP-OK")
+"""
+
+
+def test_superstep_on_8_forced_host_devices():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=root, timeout=600,
+    )
+    assert proc.returncode == 0, f"mesh superstep failed:\n{proc.stderr[-3000:]}"
+    assert "MESH-SUPERSTEP-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Migration window: superstep_migrating == K serve_migrating calls
+# ---------------------------------------------------------------------------
+
+
+def test_superstep_migrating_matches_serve_migrating():
+    def window():
+        router = Router({i: 1.0 for i in range(8)})
+        sessions = np.arange(20_000, dtype=np.uint32)
+        mig = router.begin_scale_migration(
+            sessions, add=(8, 1.0), n_replicas=3,
+            egress={n: 60 for n in range(9)},
+        )
+        d = router.stream_driver(
+            batch=512, n_keys=1 << 12, n_replicas=3, policy="pow2",
+            seed=5, n_bins=9,
+        )
+        return mig, d
+
+    mig_a, d_step = window()
+    mig_b, d_super = window()
+    for _ in range(2):  # two mid-drain rounds, same pending view each side
+        mig_a.round()
+        mig_b.round()
+        ids_a, chosen_a = zip(
+            *[map(np.asarray, d_step.serve_migrating(mig_a)) for _ in range(K)]
+        )
+        ids_b, chosen_b = map(np.asarray, d_super.superstep_migrating(mig_b, K))
+        assert np.array_equal(np.stack(ids_a), ids_b)
+        assert np.array_equal(np.stack(chosen_a), chosen_b)
+    _assert_state_equal(d_step, d_super)
+
+
+# ---------------------------------------------------------------------------
+# Mover round blocks: round_block(k) == k host rounds, incl. rollback
+# ---------------------------------------------------------------------------
+
+
+def _coord(n_nodes=8, n_ids=20_000):
+    cluster = make_uniform_cluster(n_nodes)
+    ids = np.arange(n_ids, dtype=np.uint32)
+    return ElasticCoordinator(cluster, ids)
+
+
+def test_mover_round_block_matches_host_rounds():
+    ca, cb = _coord(), _coord()
+    mig_a = ca.add_node_live(8, 1.0, egress=40)
+    mig_b = cb.add_node_live(8, 1.0, egress=40)
+    k = 4
+    host_mats = [mig_a.round() for _ in range(k)]
+    block_mats = mig_b.round_block(k)
+    assert host_mats == block_mats
+    assert mig_a.mover.rounds_done == mig_b.mover.rounds_done == k
+    assert np.array_equal(mig_a.state.landed, mig_b.state.landed)
+    # drain the rest via blocks; the final ragged block must not overshoot
+    while not mig_b.done:
+        mig_b.round_block(3)
+    while not mig_a.done:
+        mig_a.round()
+    assert mig_a.state.n_pending == mig_b.state.n_pending == 0
+
+
+def test_mover_round_block_mid_drain_rollback():
+    """Blocks and host rounds must agree through a rollback: drain part
+    of the plan by blocks, roll back via the coordinator, drain the
+    reverse by blocks, and land back exactly at v_from (membership and
+    owner table both)."""
+    coord = _coord()
+    members0 = set(coord.cluster.nodes)
+    owners0 = coord._owners.copy()
+    mig = coord.add_node_live(8, 1.0, egress=40)
+    mig.round_block(2)
+    assert mig.state.n_pending > 0, "test needs a mid-drain window"
+    rev = coord.rollback_live(mig)
+    rev.round_block(2)  # reverse drains by blocks too
+    if not rev.done:
+        rev.run()
+    assert rev.state.n_pending == 0
+    assert set(coord.cluster.nodes) == members0
+    assert np.array_equal(coord._owners, owners0)
+
+
+# ---------------------------------------------------------------------------
+# Planner fuse blocks: fuse>1 yields the per-chunk stream unchanged
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fuse", [2, 4])
+def test_planner_fuse_parity(fuse):
+    from repro.migrate import MigrationPlanner
+
+    cluster = make_uniform_cluster(12)
+    engine = PlacementEngine(cluster, backend="ref")
+    engine.artifact()  # cache v0 in the LRU before mutating
+    v0 = cluster.version
+    cluster.add_node(12, 1.0)
+    v1 = cluster.version
+    planner = MigrationPlanner(engine)
+    ids = np.arange(40_000, dtype=np.uint32)
+
+    def drain(fuse_k):
+        out = []
+        for got_ids, moved, src, dst in planner.plan_stream(
+            planner.chunked(ids, 1 << 13), v0, v1, fuse=fuse_k
+        ):
+            out.append(tuple(np.asarray(x) for x in (got_ids, moved, src, dst)))
+        return out
+
+    a, b = drain(1), drain(fuse)
+    assert len(a) == len(b)
+    for ca, cb in zip(a, b):
+        for xa, xb in zip(ca, cb):
+            assert np.array_equal(xa, xb)
